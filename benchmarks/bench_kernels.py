@@ -1,0 +1,62 @@
+"""Kernel micro-benchmarks (CPU wall times of the XLA reference paths +
+derived per-node / per-token costs; the Pallas kernels themselves target
+TPU and are validated in interpret mode — their roofline numbers live in
+EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import LatticeModel, american_put
+from repro.core.notc import price_notc_jax
+from repro.core.rz import price_rz
+from repro.kernels.binomial_ref import lattice_levels_ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)                                  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> list[str]:
+    rows = []
+
+    # lattice stencil: XLA path, per-node cost
+    N = 20000
+    v = jnp.linspace(0.0, 50.0, N + 1)
+    scalars = jnp.asarray([N, 0.53, 0.999, 100.0, 100.0, 0.002], jnp.float64)
+    f = jax.jit(lambda vv: lattice_levels_ref(vv, scalars, levels=50))
+    dt = _time(f, v)
+    rows.append(f"lattice_stencil_50lvl,{dt*1e6:.0f},"
+                f"ns_per_node={dt/(50*(N+1))*1e9:.2f}")
+
+    # end-to-end no-TC price (the appendix serial baseline on this host)
+    m = LatticeModel(s0=100, sigma=0.3, rate=0.06, maturity=3.0,
+                     n_steps=10000)
+    t0 = time.perf_counter()
+    price_notc_jax(m, american_put(100.0))
+    dt = time.perf_counter() - t0
+    rows.append(f"notc_price_N10000,{dt*1e6:.0f},serial_baseline")
+
+    # TC pricing per-node cost (the paper's §5 workload, small N on CPU).
+    # NOTE: reuse ONE payoff object — the jit cache keys on it.
+    m2 = LatticeModel(s0=100, sigma=0.2, rate=0.1, maturity=0.25,
+                      n_steps=60, cost_rate=0.005)
+    put = american_put(100.0)
+    t0 = time.perf_counter()
+    price_rz(m2, put, capacity=32)
+    dt_compile = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    price_rz(m2, put, capacity=32)
+    dt = time.perf_counter() - t0
+    nodes = (m2.n_steps + 2) * (m2.n_steps + 3) / 2
+    rows.append(f"tc_price_N60,{dt*1e6:.0f},"
+                f"us_per_pwl_node={dt/nodes*1e6:.2f};compile_s={dt_compile:.1f}")
+    return rows

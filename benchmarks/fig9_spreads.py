@@ -1,0 +1,52 @@
+"""Paper Fig. 9: ask/bid curves under different transaction cost rates.
+
+Reprices the paper's American put (K=100, T=0.25, sigma=0.2, R=0.1) for
+S0 in [90, 110] under k in {0, 0.25%, 0.5%} and checks the figure's
+ordering pointwise:
+
+    bid(k2) <= bid(k1) <= pi(0) = ask(0) = bid(0) <= ask(k1) <= ask(k2)
+
+Emits a CSV of the curves (the numbers behind the figure).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import LatticeModel, american_put, price_notc_np
+from repro.core.rz import price_rz_batch
+
+N_STEPS = 60        # figure-resolution lattice (CPU-budget bound)
+SPOTS = np.linspace(90.0, 110.0, 9)
+RATES = (0.0, 0.0025, 0.005)
+
+
+def run() -> list[str]:
+    put = american_put(100.0)
+    t0 = time.perf_counter()
+    curves = {}
+    for k in RATES:
+        ask, bid, _ = price_rz_batch(
+            SPOTS, np.full_like(SPOTS, 0.2), np.full_like(SPOTS, 0.1),
+            np.full_like(SPOTS, 0.25), np.full_like(SPOTS, k),
+            n_steps=N_STEPS, capacity=32, payoff=put)
+        curves[k] = (np.asarray(ask), np.asarray(bid))
+    dt = time.perf_counter() - t0
+
+    print("S0," + ",".join(f"ask(k={k}),bid(k={k})" for k in RATES))
+    for i, s in enumerate(SPOTS):
+        row = [f"{s:.1f}"]
+        for k in RATES:
+            row += [f"{curves[k][0][i]:.4f}", f"{curves[k][1][i]:.4f}"]
+        print(",".join(row))
+
+    a0, b0 = curves[0.0]
+    a1, b1 = curves[0.0025]
+    a2, b2 = curves[0.005]
+    ok = (np.all(b2 <= b1 + 1e-9) and np.all(b1 <= b0 + 1e-9)
+          and np.all(np.abs(a0 - b0) < 1e-9)
+          and np.all(a0 <= a1 + 1e-9) and np.all(a1 <= a2 + 1e-9))
+    max_spread = float(np.max(a2 - b2))
+    return [f"fig9_spreads,{dt*1e6/len(SPOTS)/len(RATES):.0f},"
+            f"ordering_ok={ok};max_spread={max_spread:.3f}"]

@@ -1,0 +1,48 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [name ...]
+
+Prints a ``name,us_per_call,derived`` CSV summary after the per-table
+detail blocks.  Tables II/III cannot be wall-clock-reproduced on this
+1-core container; their modules reproduce the *schedule* with measured
+node costs (see each module's docstring and EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (bench_kernels, fig9_spreads, rz_convergence,
+                   table1_node_counts, table2_tc_speedup,
+                   table3_notc_speedup)
+    all_benches = {
+        "table1": table1_node_counts.run,
+        "table2": table2_tc_speedup.run,
+        "table3": table3_notc_speedup.run,
+        "fig9": fig9_spreads.run,
+        "convergence": rz_convergence.run,
+        "kernels": bench_kernels.run,
+    }
+    wanted = sys.argv[1:] or list(all_benches)
+    csv_rows = []
+    failures = []
+    for name in wanted:
+        print(f"\n==== {name} " + "=" * (60 - len(name)))
+        try:
+            csv_rows.extend(all_benches[name]())
+        except Exception as e:                      # keep the harness alive
+            traceback.print_exc()
+            failures.append(name)
+            csv_rows.append(f"{name},nan,FAILED={type(e).__name__}")
+    print("\n==== CSV " + "=" * 55)
+    print("name,us_per_call,derived")
+    for r in csv_rows:
+        print(r)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Paper Table I: nodes processed by thread p0 (L=5).
+
+Exact reproduction: the text-semantics schedule matches every cell to the
+node; the literal pseudo-code drifts 0.13-0.17% (the line-25 typo finding,
+see core/partition.py).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.partition import simulate_schedule, table1_reference
+
+
+def run() -> list[str]:
+    rows = []
+    ref = table1_reference()
+    t0 = time.perf_counter()
+    max_err = 0.0
+    print(f"{'p':>2} {'N':>5} {'paper':>9} {'ours':>9} {'err':>6} "
+          f"{'N^2/2p':>9} {'est err%':>8}")
+    for (p, n), want in sorted(ref.items()):
+        got = simulate_schedule(n, p, 5).p0_nodes
+        est = n * n // (2 * p)
+        err = abs(got - want)
+        max_err = max(max_err, err)
+        print(f"{p:>2} {n:>5} {want:>9} {got:>9} {err:>6} {est:>9} "
+              f"{100 * (est - want) / want:>7.2f}%")
+    us = (time.perf_counter() - t0) * 1e6 / len(ref)
+    rows.append(f"table1_node_counts,{us:.1f},max_abs_err={max_err:.0f}")
+    return rows

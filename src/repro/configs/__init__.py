@@ -1,0 +1,19 @@
+"""Architecture configuration registry (one module per assigned arch)."""
+from .base import (  # noqa: F401
+    ModelConfig, MoEConfig, RecurrentConfig, SSMConfig, ShapeConfig, SHAPES,
+    get_config, list_archs, reduced_config, register,
+)
+
+_LOADED = False
+
+
+def _load_all():
+    global _LOADED
+    if _LOADED:
+        return
+    from . import (  # noqa: F401
+        internlm2_1_8b, qwen3_4b, qwen3_0_6b, qwen2_5_14b,
+        llama4_scout_17b_a16e, dbrx_132b, recurrentgemma_2b,
+        seamless_m4t_medium, falcon_mamba_7b, chameleon_34b, pricing,
+    )
+    _LOADED = True

@@ -1,0 +1,208 @@
+"""Model / run configuration system.
+
+``ModelConfig`` is the single source of truth for an architecture; every
+assigned architecture gets one module under :mod:`repro.configs` that
+builds its exact published configuration.  ``ShapeConfig`` captures the
+assigned input-shape cells (train_4k / prefill_32k / decode_32k /
+long_500k).  The registry maps ``--arch`` ids to config factories.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+__all__ = [
+    "MoEConfig", "SSMConfig", "RecurrentConfig", "ModelConfig",
+    "ShapeConfig", "SHAPES", "register", "get_config", "list_archs",
+    "reduced_config",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    shared_expert: bool = False       # llama4-style always-on shared expert
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-1 selective SSM block parameters."""
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2                   # d_inner = expand * d_model
+    dt_rank: Optional[int] = None     # default ceil(d_model / 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class RecurrentConfig:
+    """RG-LRU (recurrentgemma) block parameters."""
+    lru_width: Optional[int] = None   # default d_model
+    d_conv: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None            # default d_model // n_heads
+    # block pattern: sequence of block kinds, cycled over layers.
+    #   "attn"     full-attention transformer block
+    #   "local"    sliding-window attention block
+    #   "rglru"    RG-LRU recurrent block
+    #   "mamba"    mamba-1 SSM block (attention-free)
+    block_pattern: Tuple[str, ...] = ("attn",)
+    # feed-forward: "swiglu" | "gelu";  MoE replaces the FFN when set
+    mlp_kind: str = "swiglu"
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    recurrent: Optional[RecurrentConfig] = None
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    local_window: int = 2048
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # encoder-decoder (seamless-m4t): encoder layer count; 0 = decoder-only
+    n_encoder_layers: int = 0
+    # modality frontend: "text" | "audio_stub" | "vq_stub"
+    #   stubs mean input_specs() provides precomputed frame/patch embeddings
+    frontend: str = "text"
+    notes: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    def block_kind(self, layer: int) -> str:
+        return self.block_pattern[layer % len(self.block_pattern)]
+
+    @property
+    def attention_free(self) -> bool:
+        return all(k == "mamba" for k in self.block_pattern)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True when no block attends over the full sequence (long_500k ok)."""
+        return all(k in ("mamba", "rglru", "local") for k in self.block_pattern)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings + blocks), used for roofline
+        MODEL_FLOPS = 6 N D."""
+        d, v = self.d_model, self.vocab
+        hd = self.resolved_head_dim
+        total = v * d                                 # embedding
+        if not self.tie_embeddings:
+            total += v * d                            # lm head
+        if self.n_encoder_layers:
+            total += v * d                            # decoder embedding reuse
+        n_all = self.n_layers + self.n_encoder_layers
+        for layer in range(n_all):
+            kind = self.block_kind(layer % self.n_layers)
+            if kind in ("attn", "local"):
+                q = d * self.n_heads * hd
+                kv = 2 * d * self.n_kv_heads * hd
+                o = self.n_heads * hd * d
+                total += q + kv + o
+            elif kind == "rglru":
+                w = (self.recurrent.lru_width if self.recurrent and
+                     self.recurrent.lru_width else d)
+                total += 2 * d * w + w * d + 3 * w    # in x2, out, gates
+            elif kind == "mamba":
+                di = self.ssm.expand * d
+                ds = self.ssm.d_state
+                dtr = self.ssm.dt_rank or -(-d // 16)
+                total += d * 2 * di + di * self.ssm.d_conv
+                total += di * (dtr + 2 * ds) + dtr * di + di * ds + di
+                total += di * d
+            if kind != "mamba":
+                if self.moe is not None:
+                    e = self.moe
+                    total += d * e.num_experts        # router
+                    total += e.num_experts * 3 * d * e.d_ff_expert
+                    if e.shared_expert:
+                        total += 3 * d * self.d_ff
+                elif self.d_ff:
+                    mult = 3 if self.mlp_kind == "swiglu" else 2
+                    total += mult * d * self.d_ff
+            total += 2 * d                            # norms
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top_k of num_experts)."""
+        if self.moe is None:
+            return self.param_count()
+        e = self.moe
+        full = self.param_count()
+        expert_p = e.num_experts * 3 * self.d_model * e.d_ff_expert
+        active_p = e.top_k * 3 * self.d_model * e.d_ff_expert
+        n_moe_layers = self.n_layers
+        return full - n_moe_layers * (expert_p - active_p)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str            # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(arch_id: str):
+    def deco(fn):
+        _REGISTRY[arch_id] = fn
+        return fn
+    return deco
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _REGISTRY:
+        from . import _load_all  # lazy import of config modules
+        _load_all()
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]()
+
+
+def list_archs() -> Sequence[str]:
+    from . import _load_all
+    _load_all()
+    return sorted(_REGISTRY)
+
+
+def reduced_config(cfg: ModelConfig, *, n_layers: int = 2, d_model: int = 64,
+                   n_heads: int = 4, vocab: int = 512) -> ModelConfig:
+    """Shrink a config for CPU smoke tests, preserving its *family* (block
+    pattern, MoE/SSM kinds, qk_norm/bias flags)."""
+    kv = max(1, min(cfg.n_kv_heads, n_heads // 2)) if cfg.n_kv_heads > 1 else 1
+    moe = None
+    if cfg.moe is not None:
+        moe = dataclasses.replace(cfg.moe, num_experts=4,
+                                  top_k=min(cfg.moe.top_k, 2), d_ff_expert=96)
+    ssm = dataclasses.replace(cfg.ssm, d_state=8) if cfg.ssm else None
+    rec = dataclasses.replace(cfg.recurrent, lru_width=d_model) if cfg.recurrent else None
+    n_enc = 2 if cfg.n_encoder_layers else 0
+    return dataclasses.replace(
+        cfg, name=cfg.name + "-smoke", n_layers=n_layers, d_model=d_model,
+        n_heads=n_heads, n_kv_heads=kv, head_dim=d_model // n_heads,
+        d_ff=128 if cfg.d_ff else 0, vocab=vocab, moe=moe, ssm=ssm,
+        recurrent=rec, n_encoder_layers=n_enc, local_window=32)

@@ -1,0 +1,32 @@
+"""Configs for the paper's own workloads (lattice pricing).
+
+These are not LM architectures; they parameterise the lattice engines and
+the production pricing-service meshes.  Kept in the same registry module
+tree so launchers can list every runnable config in one place.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PricingConfig:
+    name: str
+    n_steps: int
+    capacity: int = 48           # PWL knots per node
+    round_depth: int = 8         # L — levels per halo round
+    collapse_lanes: int = 0      # 0 = auto
+    contracts: int = 256         # batch of contracts (data axis)
+    cost_rate: float = 0.005
+    payoff: str = "put"          # put | call | bull_spread
+    strike: float = 100.0
+    s0: float = 100.0
+    sigma: float = 0.2
+    rate: float = 0.1
+    maturity: float = 0.25
+
+
+PAPER_PUT = PricingConfig(name="paper-put-tc", n_steps=1500, round_depth=5)
+PAPER_BULL = PricingConfig(name="paper-bull-tc", n_steps=1500, round_depth=5,
+                           payoff="bull_spread", cost_rate=0.01)
+PAPER_NOTC = PricingConfig(name="paper-put-notc", n_steps=40000,
+                           round_depth=50, cost_rate=0.0, sigma=0.3,
+                           rate=0.06, maturity=3.0)

@@ -1,0 +1,21 @@
+"""seamless-m4t-medium — encoder-decoder multimodal backbone
+[arXiv:2308.11596; hf].  The audio frontend is a STUB per assignment:
+input_specs() provides precomputed frame embeddings."""
+from .base import ModelConfig, register
+
+
+@register("seamless-m4t-medium")
+def config() -> ModelConfig:
+    # vocab: published 256206, padded to 256224 (multiple of 16) so the
+    # embedding / lm-head shard over the 16-way tensor-parallel axis —
+    # standard embedding padding; without it the one-hot/logit buffers
+    # replicate across TP and the train cell exceeds the v5e HBM budget
+    # (EXPERIMENTS.md §Dry-run).  The 18 pad ids are never emitted as
+    # targets by the data pipeline.
+    return ModelConfig(
+        name="seamless-m4t-medium", n_layers=12, d_model=1024, n_heads=16,
+        n_kv_heads=16, d_ff=4096, vocab=256224, head_dim=64,
+        block_pattern=("attn",), mlp_kind="gelu", n_encoder_layers=12,
+        frontend="audio_stub",
+        notes="enc-dec; MHA (kv=16); audio frontend stubbed to frame "
+              "embeddings; vocab padded 256206->256224 for 16-way TP.")

@@ -1,0 +1,16 @@
+"""Core: the paper's contribution — lattice pricing under transaction costs.
+
+Pricing requires float64 (prices are compared at 1e-6 and tighter); enable
+x64 on import of the core package.  The LM model stack uses explicit
+float32/bfloat16 dtypes throughout and is unaffected.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from .lattice import LatticeModel            # noqa: E402,F401
+from .payoff import (                        # noqa: E402,F401
+    PayoffProcess, american_call, american_put, bull_spread, cash_settled,
+)
+from .notc import price_notc_jax, price_notc_np   # noqa: E402,F401
+from .rz_ref import PriceResult, price_ref        # noqa: E402,F401

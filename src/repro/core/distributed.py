@@ -1,0 +1,293 @@
+"""Distributed lattice engine — the paper's parallel algorithm on a TPU mesh.
+
+This is the TPU-native adaptation of the paper's §4 block/round scheme
+(DESIGN.md §2).  The tree's node (column) axis is sharded over the mesh's
+``model`` axis; contracts (the pricing-desk batch) are sharded over
+``data`` (and ``pod``).  The backward induction runs in *rounds*: one
+``lax.ppermute`` halo exchange of ``L`` lanes per round, then ``L`` local
+level-steps whose valid window shrinks by one lane per step — exactly the
+paper's region-A/region-B dependency pattern, with the signal ``G_i``
+replaced by the halo fetch and the barrier by SPMD program order.
+
+Near the root the live tree no longer spans the shards: the paper sheds
+processors (p <- p-1); here the engine switches — at a *statically known*
+round boundary — to a collapse phase: one ``all_gather`` of the live
+prefix, after which every shard finishes the remaining levels redundantly
+with no further collectives (the same trick Solomon et al. use for their
+GPU->CPU switch; redundant compute is cheaper than latency-bound
+collectives on a <= few-hundred-lane tail).
+
+Two node states are supported through the same harness:
+  * the transaction-cost PWL state (``build_rz_sharded``)  — paper §3/4,
+  * the scalar no-TC state (``build_notc_sharded``)        — paper appendix.
+
+Tunables (hillclimbed in EXPERIMENTS.md §Perf):
+  * ``round_depth``  L — halo width / levels per sync (the paper's L),
+  * ``collapse_lanes`` — live width at which to switch to phase 2.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as PS
+
+from . import pwl as P
+from .payoff import PayoffProcess
+from .rz import rz_level_step
+
+__all__ = ["plan_rounds", "build_rz_sharded", "build_notc_sharded"]
+
+
+# --------------------------------------------------------------------- #
+# static round plan
+# --------------------------------------------------------------------- #
+def plan_rounds(n_steps: int, n_shards: int, round_depth: int,
+                collapse_lanes: int | None = None):
+    """Static partition of the N+1 backward levels into phase-1 rounds and
+    a phase-2 (collapsed) tail.  Returns dict of static ints."""
+    total_lanes = n_steps + 2
+    shard_lanes = -(-total_lanes // n_shards)          # ceil
+    halo = min(round_depth, shard_lanes)               # need halo <= S
+    if collapse_lanes is None:
+        collapse_lanes = max(shard_lanes, 2 * halo + 2)
+    total_levels = n_steps + 1                         # levels N .. 0
+    # phase 2 handles levels c-1 .. 0 (c levels); keep c <= collapse_lanes-1
+    c_target = min(total_levels, max(collapse_lanes - 1, 1))
+    rounds = -(-(total_levels - c_target) // halo) if total_levels > c_target else 0
+    c = total_levels - rounds * halo                   # exact tail levels
+    phase2_lanes = min(n_shards * shard_lanes, c + 1)  # live width at tail
+    return dict(n_shards=n_shards, shard_lanes=shard_lanes, halo=halo,
+                rounds=rounds, tail_levels=c, phase2_lanes=max(phase2_lanes, 1),
+                total_lanes=n_shards * shard_lanes)
+
+
+def _right_halo_perm(n_shards: int):
+    """ppermute pairs: shard i receives the halo from shard i+1 (wrapping;
+    the wrapped lanes land on the rightmost shard whose lanes are beyond the
+    live tree and masked)."""
+    return [(i, (i - 1) % n_shards) for i in range(n_shards)]
+
+
+# --------------------------------------------------------------------- #
+# generic sharded backward harness
+# --------------------------------------------------------------------- #
+def _run_sharded(state, scalars, *, plan, axis_name, n_steps,
+                 level_step, finish):
+    """Inside-shard_map body for one *contract batch* shard.
+
+    state: pytree with arrays (bc, S, ...)  — lane axis second.
+    scalars: pytree of per-contract (bc,) arrays (s0, sigma, ...).
+    level_step(state_slice, lvl, scalars_slice, idx_offset) -> (state, stat)
+    finish(state_slice, scalars_slice) -> result pytree (per contract)
+    """
+    S = plan["shard_lanes"]
+    H = plan["halo"]
+    W = plan["n_shards"]
+    R = plan["rounds"]
+    P2 = plan["phase2_lanes"]
+    N = n_steps
+    shard = jax.lax.axis_index(axis_name)
+    offset = (shard * S).astype(jnp.float64)
+
+    take = lambda a, n: a[:, :n]
+    stat0 = jnp.zeros((), jnp.int32)
+
+    def steps(buf, lvl0, scal, idx_off, depth):
+        """depth local level-steps on one contract's lane buffer."""
+        def body(j, carry):
+            buf, stat = carry
+            lvl = lvl0 - j
+            buf, st = level_step(buf, lvl, scal, idx_off)
+            return buf, jnp.maximum(stat, st)
+        return jax.lax.fori_loop(0, depth, body, (buf, stat0))
+
+    # ---- phase 1: distributed rounds with halo exchange ----------------
+    # The halo is PACKED: every state leaf (PWL knots/values/slopes/counts
+    # for both parties) is flattened into ONE (bc, H, width) f64 buffer so
+    # each round issues a single ppermute instead of one per leaf — a
+    # beyond-paper optimisation (collective-latency bound regime, see
+    # EXPERIMENTS.md §Perf pricing cell).  int32 counts survive the f64
+    # round-trip exactly (values <= PWL capacity).
+    def _pack(halo_tree):
+        leaves = jax.tree.leaves(halo_tree)
+        bc_, hh = leaves[0].shape[0], leaves[0].shape[1]
+        flat = [l.astype(jnp.float64).reshape(bc_, hh, -1) for l in leaves]
+        return jnp.concatenate(flat, axis=-1), [l.shape for l in leaves], \
+            [l.dtype for l in leaves]
+
+    def _unpack(buf, shapes, dtypes, tree_like):
+        out = []
+        off = 0
+        for s, dt in zip(shapes, dtypes):
+            w = 1
+            for d in s[2:]:
+                w *= d
+            piece = buf[:, :, off:off + w].reshape(s).astype(dt)
+            out.append(piece)
+            off += w
+        return jax.tree.unflatten(jax.tree.structure(tree_like), out)
+
+    def round_body(r, carry):
+        state, stat = carry
+        halo = jax.tree.map(lambda a: take(a, H), state)
+        packed, shapes, dtypes = _pack(halo)
+        packed = jax.lax.ppermute(packed, axis_name, _right_halo_perm(W))
+        halo = _unpack(packed, shapes, dtypes, halo)
+        buf = jax.tree.map(lambda a, h: jnp.concatenate([a, h], axis=1),
+                           state, halo)
+        lvl0 = jnp.asarray(N - r * H, jnp.float64)
+        buf, st = jax.vmap(
+            lambda b, sc: steps(b, lvl0, sc, offset, H),
+            in_axes=(0, 0))(buf, scalars)
+        state = jax.tree.map(lambda a: a[:, :S], buf)
+        return state, jnp.maximum(stat, jnp.max(st))
+
+    state, stat = jax.lax.fori_loop(0, R, round_body, (state, stat0))
+
+    # ---- phase 2: collapse — gather live prefix, finish redundantly ----
+    full = jax.tree.map(
+        lambda a: jax.lax.all_gather(a, axis_name, axis=1, tiled=True), state)
+    tail = jax.tree.map(lambda a: take(a, P2), full)
+    lvl0 = jnp.asarray(plan["tail_levels"] - 1, jnp.float64)
+    tail, st = jax.vmap(
+        lambda b, sc: steps(b, lvl0, sc, jnp.zeros((), jnp.float64),
+                            plan["tail_levels"]),
+        in_axes=(0, 0))(tail, scalars)
+    stat = jnp.maximum(stat, jnp.max(st))
+    stat = jax.lax.pmax(stat, axis_name)
+
+    res = jax.vmap(finish)(tail, scalars)
+    return res, stat
+
+
+# --------------------------------------------------------------------- #
+# transaction-cost (PWL state) engine
+# --------------------------------------------------------------------- #
+def build_rz_sharded(mesh: Mesh, *, n_steps: int, payoff: PayoffProcess,
+                     capacity: int = 48, round_depth: int = 8,
+                     collapse_lanes: int | None = None,
+                     data_axes=("data",), model_axis: str = "model",
+                     dtype=jnp.float64) -> Callable:
+    """Returns jit-able ``f(s0, sigma, rate, maturity, k) -> (ask, bid, st)``
+    over a contract batch sharded on ``data_axes`` with the lattice node
+    axis sharded over ``model_axis``."""
+    W = 1
+    for ax in (model_axis,):
+        W *= mesh.shape[ax]
+    plan = plan_rounds(n_steps, W, round_depth, collapse_lanes)
+    S, T = plan["shard_lanes"], plan["total_lanes"]
+
+    def level_step_tc(zpair, lvl, scal, idx_off):
+        z_s, z_b = zpair
+        params = dict(s0=scal["s0"], k=scal["k"],
+                      sig_sqrt_dt=scal["sig_sqrt_dt"], r=scal["r"])
+        z_s, p1 = rz_level_step(z_s, lvl, params, capacity=capacity,
+                                seller=True, payoff=payoff, dtype=dtype,
+                                idx_offset=idx_off)
+        z_b, p2 = rz_level_step(z_b, lvl, params, capacity=capacity,
+                                seller=False, payoff=payoff, dtype=dtype,
+                                idx_offset=idx_off)
+        return (z_s, z_b), jnp.maximum(p1, p2)
+
+    def finish_tc(zpair, scal):
+        z_s, z_b = zpair
+        root = lambda z: jax.tree.map(lambda a: a[0], z)
+        ask = P.eval_at(root(z_s), jnp.zeros((), dtype))
+        bid = -P.eval_at(root(z_b), jnp.zeros((), dtype))
+        return ask, bid
+
+    def leaf_state(scal, lanes, idx_off):
+        idx = idx_off + jnp.arange(lanes, dtype=dtype)
+        s = scal["s0"] * jnp.exp((2.0 * idx - (n_steps + 1)) * scal["sig_sqrt_dt"])
+        a = (1.0 + scal["k"]) * s
+        b = (1.0 - scal["k"]) * s
+        zero = jnp.zeros((lanes,), dtype)
+        z = P.expense(zero, zero, a, b, capacity, dtype)
+        return (z, z)
+
+    def sharded_body(s0, sigma, rate, maturity, k):
+        # (bc,) per-contract scalars on this data shard
+        dt = maturity / n_steps
+        scal = dict(s0=s0, k=k, sig_sqrt_dt=sigma * jnp.sqrt(dt),
+                    r=jnp.exp(rate * dt))
+        shard = jax.lax.axis_index(model_axis)
+        offset = (shard * S).astype(dtype)
+        state = jax.vmap(lambda sc: leaf_state(sc, S, offset))(scal)
+        (ask, bid), stat = _run_sharded(
+            state, scal, plan=plan, axis_name=model_axis, n_steps=n_steps,
+            level_step=level_step_tc, finish=finish_tc)
+        return ask, bid, stat
+
+    cspec = PS(data_axes if len(data_axes) > 1 else data_axes[0])
+    f = jax.shard_map(
+        sharded_body, mesh=mesh,
+        in_specs=(cspec,) * 5,
+        out_specs=(cspec, cspec, PS()),
+        check_vma=False)
+    return f
+
+
+# --------------------------------------------------------------------- #
+# no-transaction-cost (scalar state) engine — the appendix workload
+# --------------------------------------------------------------------- #
+def build_notc_sharded(mesh: Mesh, *, n_steps: int, strike: float,
+                       kind: str = "put", round_depth: int = 50,
+                       collapse_lanes: int | None = None,
+                       data_axes=("data",), model_axis: str = "model",
+                       dtype=jnp.float64) -> Callable:
+    """Scalar backward induction, node axis sharded (appendix algorithm).
+
+    Without transaction costs there is no extra time instant: the leaf is
+    level N (N+1 nodes) and N levels are processed — hence the plan is laid
+    out for ``n_steps - 1`` (plan_rounds internally adds the +1s).
+    """
+    W = mesh.shape[model_axis]
+    plan = plan_rounds(n_steps - 1, W, round_depth, collapse_lanes)
+    S = plan["shard_lanes"]
+
+    def intrinsic(idx, lvl, scal):
+        s = scal["s0"] * jnp.exp((2.0 * idx - lvl) * scal["sig_sqrt_dt"])
+        pay = strike - s if kind == "put" else s - strike
+        return jnp.maximum(pay, 0.0)
+
+    def level_step_sc(v, lvl, scal, idx_off):
+        lanes = v.shape[0]
+        idx = idx_off + jnp.arange(lanes, dtype=dtype)
+        live = idx <= lvl
+        cont = (scal["p"] * jnp.roll(v, -1) + (1.0 - scal["p"]) * v) / scal["r"]
+        vnew = jnp.maximum(intrinsic(idx, lvl, scal), cont)
+        return jnp.where(live, vnew, v), jnp.zeros((), jnp.int32)
+
+    def finish_sc(v, scal):
+        return (v[0],)
+
+    def sharded_body(s0, sigma, rate, maturity):
+        dt = maturity / n_steps
+        u = jnp.exp(sigma * jnp.sqrt(dt))
+        r = jnp.exp(rate * dt)
+        scal = dict(s0=s0, sig_sqrt_dt=sigma * jnp.sqrt(dt), r=r,
+                    p=(r - 1.0 / u) / (u - 1.0 / u))
+        shard = jax.lax.axis_index(model_axis)
+        offset = (shard * S).astype(dtype)
+
+        def leaf(sc):
+            idx = offset + jnp.arange(S, dtype=dtype)
+            return intrinsic(idx, jnp.asarray(n_steps, dtype), sc)
+
+        state = jax.vmap(leaf)(scal)
+        # leaf here is level N (no extra instant without costs): levels N-1..0
+        (price,), stat = _run_sharded(
+            state, scal, plan=plan, axis_name=model_axis,
+            n_steps=n_steps - 1, level_step=level_step_sc, finish=finish_sc)
+        return price
+
+    cspec = PS(data_axes if len(data_axes) > 1 else data_axes[0])
+    f = jax.shard_map(
+        sharded_body, mesh=mesh,
+        in_specs=(cspec,) * 4, out_specs=cspec,
+        check_vma=False)
+    return f

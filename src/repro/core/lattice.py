@@ -1,0 +1,76 @@
+"""Binomial lattice model parameters and geometry (paper §4.1).
+
+Cox–Ross–Rubinstein calibration: over one of the N steps that discretise
+[0, T],
+
+    u = exp(sigma * sqrt(T/N)),   d = 1/u,   r = exp(R * T / N),
+
+risk-neutral up probability p* = (r - d) / (u - d).  Stock price at the
+node with level n (time step t = n) and column i (number of up-moves) is
+
+    S(n, i) = S0 * u^i * d^(n-i) = S0 * u^(2i - n).
+
+Proportional transaction costs: ask/bid stock prices S^a = (1+k) S,
+S^b = (1-k) S; per the paper (and Perrakis–Lefoll / Roux–Zastawniak) no
+transaction costs apply at t = 0, i.e. S^a_0 = S_0 = S^b_0.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+__all__ = ["LatticeModel"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LatticeModel:
+    """Market/model parameters for one pricing problem."""
+    s0: float          # spot at t=0
+    sigma: float       # annualised volatility
+    rate: float        # continuously compounded annual interest rate R
+    maturity: float    # T in years
+    n_steps: int       # N
+    cost_rate: float = 0.0   # proportional transaction cost rate k in [0, 1)
+
+    def __post_init__(self):
+        if not (0.0 <= self.cost_rate < 1.0):
+            raise ValueError("cost rate k must be in [0, 1)")
+        if self.n_steps < 1:
+            raise ValueError("need at least one time step")
+
+    # one-step factors ---------------------------------------------------
+    @property
+    def u(self) -> float:
+        return math.exp(self.sigma * math.sqrt(self.maturity / self.n_steps))
+
+    @property
+    def d(self) -> float:
+        return 1.0 / self.u
+
+    @property
+    def r(self) -> float:
+        return math.exp(self.rate * self.maturity / self.n_steps)
+
+    @property
+    def p_star(self) -> float:
+        """Risk-neutral up-move probability (friction-free model)."""
+        return (self.r - self.d) / (self.u - self.d)
+
+    # geometry ------------------------------------------------------------
+    def stock_level(self, n: int) -> np.ndarray:
+        """Stock prices of all n+1 nodes at level n (float64)."""
+        i = np.arange(n + 1, dtype=np.float64)
+        return self.s0 * np.exp((2.0 * i - n) * self.sigma
+                                * math.sqrt(self.maturity / self.n_steps))
+
+    def ask_bid_level(self, n: int) -> tuple[np.ndarray, np.ndarray]:
+        """(S^a, S^b) for all nodes at level n; no costs at n == 0."""
+        s = self.stock_level(n)
+        if n == 0:
+            return s, s.copy()
+        return (1.0 + self.cost_rate) * s, (1.0 - self.cost_rate) * s
+
+    def with_(self, **kw) -> "LatticeModel":
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,136 @@
+"""The paper's partition/round schedule (Algorithm 1) — exact simulation.
+
+This module reproduces, in pure Python, the block/region partition scheme of
+§4.2 and the per-thread node counts of §4.3 (paper Table I).  It is used
+
+  * to validate our reading of Algorithm 1 against the paper's own measured
+    node counts (benchmark ``table1_node_counts``),
+  * as the cost model behind the speedup simulator for paper Tables II/III
+    (this container has one CPU core, so wall-clock pthread speedups cannot
+    be re-measured; the schedule + a measured per-node cost can), and
+  * to pick the round depth L and collapse threshold of the distributed
+    shard_map engine (the same L/sync trade-off, see DESIGN.md §2).
+
+Conventions from the paper:
+  * the tree has levels t = 0 .. N+1 (the extra instant), level t has t+1
+    nodes;
+  * a *round* processes D = min(L, q-1) levels, q = per-thread node count
+    at the base level;
+  * thread i owns columns [s_i, e_i) in every level of the round (region A
+    plus region B);  the last thread owns the remainder;
+  * workloads are re-balanced before every round; p is reduced while the
+    next base level has fewer than 2p nodes.
+
+The pseudo-code reassigns ``n`` mid-loop (line 25: ``n <- B + 1`` *after*
+``B <- B - D``), which makes the in-loop ``floor((n+1)/p)`` operate on
+(node count + 1) from the second round on, while the text of §4.2 says
+``floor((n+1)/p)`` with n+1 = node count.  Both variants are implemented.
+
+**Finding** (see benchmark ``table1_node_counts``): the *text* semantics
+(``literal=False``, the default) reproduces every cell of paper Table I
+EXACTLY (9/9 cells, 0 node error); the literal pseudo-code overcounts by
+~0.13-0.17%.  Line 25 of Algorithm 1 is evidently a typo (it should read
+``n <- B``) and the authors' implementation used the text semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+__all__ = ["RoundInfo", "ScheduleResult", "simulate_schedule", "table1_reference"]
+
+
+@dataclasses.dataclass
+class RoundInfo:
+    base_level: int          # B: level whose nodes are already done
+    depth: int               # D: levels processed this round
+    p: int                   # threads active this round
+    per_thread: List[int]    # nodes processed by each ORIGINAL thread id
+    sync_events: int         # signals + barrier (cost model input)
+
+
+@dataclasses.dataclass
+class ScheduleResult:
+    n_steps: int
+    L: int
+    p0_nodes: int            # nodes processed by thread 0 (incl. leaf init)
+    per_thread: List[int]
+    rounds: List[RoundInfo]
+    total_nodes: int         # all nodes in the tree, levels 0..N+1
+
+    @property
+    def makespan_nodes(self) -> int:
+        """Schedule length if every node costs 1 and threads run in parallel:
+        sum over rounds of the busiest thread's nodes (plus leaf init)."""
+        init = max(self._init_counts)
+        return init + sum(max(r.per_thread) for r in self.rounds)
+
+    _init_counts: List[int] = dataclasses.field(default_factory=list)
+
+
+def simulate_schedule(n_steps: int, p: int, L: int,
+                      literal: bool = False) -> ScheduleResult:
+    """Run Algorithm 1's schedule and count nodes per (original) thread."""
+    if p < 1 or L < 1 or n_steps < 1:
+        raise ValueError("need p >= 1, L >= 1, N >= 1")
+    N = n_steps
+    p_orig = p
+
+    counts = [0] * p_orig
+    rounds: List[RoundInfo] = []
+
+    # --- initialisation at the leaf level t = N+1 (N+2 nodes) -------------
+    n = N + 1                       # as in Algorithm 1 line 2 (level index)
+    q = (n + 1) // p
+    bounds = [(i * q, (i + 1) * q if i != p - 1 else n + 1) for i in range(p)]
+    init_counts = [e - s for s, e in bounds]
+    for i, c in enumerate(init_counts):
+        counts[i] += c
+
+    B = N + 1
+    while B > 0:
+        q = (n + 1) // p
+        D = min(L, q - 1)
+        D = max(D, 1)
+        per_round = [0] * p_orig
+        for C in range(B - 1, B - D - 1, -1):       # levels processed
+            width = C + 1
+            for i in range(p):
+                s, e = bounds[i]
+                got = max(0, min(e, width) - s)
+                per_round[i] += got
+        for i in range(p_orig):
+            counts[i] += per_round[i]
+        # each inner thread signals its left neighbour once; one barrier
+        rounds.append(RoundInfo(base_level=B, depth=D, p=p,
+                                per_thread=per_round,
+                                sync_events=(p - 1) + 1))
+        B = B - D
+        if B <= 0:
+            break
+        # --- re-balance for the next round --------------------------------
+        if literal:
+            n = B + 1               # pseudo-code line 25 (count semantics)
+        else:
+            n = B                   # text semantics: n = base level index
+        node_count = B + 1
+        while node_count < 2 * p and p > 1:
+            p = max(p - 1, 1)
+        q = (n + 1) // p
+        bounds = [(i * q, (i + 1) * q if i != p - 1 else n + 1)
+                  for i in range(p)]
+
+    total = (N + 2) * (N + 3) // 2
+    res = ScheduleResult(n_steps=N, L=L, p0_nodes=counts[0],
+                         per_thread=counts, rounds=rounds, total_nodes=total)
+    res._init_counts = init_counts
+    return res
+
+
+def table1_reference() -> dict:
+    """Paper Table I: actual node counts of thread p_0, L = 5."""
+    return {
+        (2, 1200): 362_999, (2, 1350): 458_999, (2, 1500): 566_249,
+        (4, 1200): 181_198, (4, 1350): 229_161, (4, 1500): 282_748,
+        (8, 1200): 90_311, (8, 1350): 114_255, (8, 1500): 141_008,
+    }

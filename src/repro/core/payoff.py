@@ -1,0 +1,78 @@
+"""American option payoff processes (xi_t, zeta_t).
+
+Under transaction costs an American option's payoff is a *portfolio*
+process (xi, zeta): on exercise at time t the seller delivers xi_t units
+of cash and zeta_t units of stock (paper §3).  Examples:
+
+  * physically-settled American put, strike K:   (K, -1) at every t <= N
+  * physically-settled American call, strike K:  (-K, +1)
+  * cash-settled payoffs:  zeta = 0 and xi = g(S_t)  (e.g. bull spread
+    (S-95)^+ - (S-105)^+ in the paper's experiments)
+
+``zeta`` may depend on the node only through the stock price; the engines
+evaluate payoffs level-by-level from the vector of node stock prices.  The
+extra time instant t = N+1 added by the Roux–Zastawniak algorithms always
+carries payoff (0, 0) and is handled inside the engines, not here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "PayoffProcess", "american_put", "american_call", "bull_spread",
+    "cash_settled",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PayoffProcess:
+    """(xi, zeta) as functions of the stock-price vector of one level.
+
+    ``xi``/``zeta`` are written in jnp so they are traceable inside jitted
+    engines; they also accept plain numpy arrays (the reference oracles
+    convert results back with ``np.asarray``).
+    """
+    name: str
+    xi: Callable
+    zeta: Callable
+
+    # scalar intrinsic value xi + zeta * S (used by the no-TC engine)
+    def intrinsic(self, s) -> np.ndarray:
+        return np.asarray(self.xi(s) + self.zeta(s) * s)
+
+
+def american_put(strike: float) -> PayoffProcess:
+    """Physically settled put: deliver (K, -1) — holder sells stock at K."""
+    k = float(strike)
+    return PayoffProcess(
+        name=f"put(K={k:g})",
+        xi=lambda s: jnp.full_like(s, k),
+        zeta=lambda s: jnp.full_like(s, -1.0),
+    )
+
+
+def american_call(strike: float) -> PayoffProcess:
+    """Physically settled call: deliver (-K, +1)."""
+    k = float(strike)
+    return PayoffProcess(
+        name=f"call(K={k:g})",
+        xi=lambda s: jnp.full_like(s, -k),
+        zeta=lambda s: jnp.full_like(s, 1.0),
+    )
+
+
+def cash_settled(name: str, g: Callable) -> PayoffProcess:
+    return PayoffProcess(name=name, xi=g, zeta=lambda s: jnp.zeros_like(s))
+
+
+def bull_spread(k_long: float = 95.0, k_short: float = 105.0) -> PayoffProcess:
+    """Paper §5: cash-settled (S-95)^+ - (S-105)^+ American bull spread."""
+    kl, ks = float(k_long), float(k_short)
+    return cash_settled(
+        f"bull_spread({kl:g},{ks:g})",
+        lambda s: jnp.maximum(s - kl, 0.0) - jnp.maximum(s - ks, 0.0),
+    )

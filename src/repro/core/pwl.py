@@ -1,0 +1,322 @@
+"""Fixed-capacity piecewise-linear function algebra — vectorised JAX.
+
+The Roux–Zastawniak recursion carries one PWL function per lattice node.
+A CPU implementation (and the paper's C one) uses per-node linked lists;
+that does not vectorise.  Here every function is a fixed-capacity SoA
+record so that a whole tree level is a handful of dense tensors and every
+operation is a data-parallel kernel over nodes — the layout the TPU VPU
+(and the Pallas kernels) want:
+
+    xs : (..., K)  sorted knot abscissae, padding +BIG after the first m
+    ys : (..., K)  knot values, padding 0
+    sl : (...,)    slope left of the first knot
+    sr : (...,)    slope right of the last knot
+    m  : (...,)    int32 number of valid knots (>= 1)
+
+Operations (all shape-static, jit/vmap-safe):
+
+  * ``eval_at``       — evaluate at query points
+  * ``envelope2``     — exact pointwise max/min of two functions
+  * ``scale``         — positive scalar multiply (discounting)
+  * ``cone_infconv``  — transaction-cost slope restriction
+                        v(y) = min_{y'} [ f(y') + max(a(y'-y), b(y'-y)) ]
+  * ``expense``       — the 2-piece expense function of §3 eq. (1)/(6)
+
+Capacity overflow is *detected*, never silent: every envelope returns the
+raw knot count before truncation; engines carry the running max and the
+caller asserts it fits K.  The exact oracle for everything here is
+:mod:`repro.core.pwl_ref`.
+
+Tolerance policy matches the oracle: slope comparisons are relative
+(slopes are stock prices ~1e2; absolute 1e-12 tolerances make float noise
+look like kinks and knot counts explode multiplicatively).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "PWL", "BIG", "make_affine", "expense", "eval_at", "scale",
+    "envelope2", "cone_infconv", "from_ref", "to_ref",
+]
+
+BIG = 1e30
+_REL = 1e-9
+_TINY = 1e-300
+
+
+class PWL(NamedTuple):
+    xs: jax.Array   # (..., K)
+    ys: jax.Array   # (..., K)
+    sl: jax.Array   # (...,)
+    sr: jax.Array   # (...,)
+    m: jax.Array    # (...,) int32
+
+    @property
+    def capacity(self) -> int:
+        return self.xs.shape[-1]
+
+
+# --------------------------------------------------------------------- #
+# constructors
+# --------------------------------------------------------------------- #
+def make_affine(slope, value_at_0, capacity: int, dtype=jnp.float64) -> PWL:
+    slope = jnp.asarray(slope, dtype)
+    value_at_0 = jnp.asarray(value_at_0, dtype)
+    shape = jnp.broadcast_shapes(slope.shape, value_at_0.shape)
+    slope = jnp.broadcast_to(slope, shape)
+    value_at_0 = jnp.broadcast_to(value_at_0, shape)
+    xs = jnp.full(shape + (capacity,), BIG, dtype)
+    xs = xs.at[..., 0].set(0.0)
+    ys = jnp.zeros(shape + (capacity,), dtype)
+    ys = ys.at[..., 0].set(value_at_0)
+    return PWL(xs, ys, slope, slope, jnp.ones(shape, jnp.int32))
+
+
+def expense(xi, zeta, s_ask, s_bid, capacity: int, dtype=jnp.float64) -> PWL:
+    """u(y) = xi + (y - zeta)^- s_ask - (y - zeta)^+ s_bid  (knot at zeta)."""
+    xi, zeta, s_ask, s_bid = (jnp.asarray(v, dtype) for v in (xi, zeta, s_ask, s_bid))
+    shape = jnp.broadcast_shapes(xi.shape, zeta.shape, s_ask.shape, s_bid.shape)
+    xi = jnp.broadcast_to(xi, shape)
+    zeta = jnp.broadcast_to(zeta, shape)
+    xs = jnp.full(shape + (capacity,), BIG, dtype)
+    xs = xs.at[..., 0].set(zeta)
+    ys = jnp.zeros(shape + (capacity,), dtype)
+    ys = ys.at[..., 0].set(xi)
+    return PWL(xs, ys,
+               -jnp.broadcast_to(s_ask, shape), -jnp.broadcast_to(s_bid, shape),
+               jnp.ones(shape, jnp.int32))
+
+
+# --------------------------------------------------------------------- #
+# evaluation  (single function: xs (K,); use jax.vmap for batches)
+# --------------------------------------------------------------------- #
+def _eval1(f: PWL, c: jax.Array) -> jax.Array:
+    """Evaluate one function at query points c: (C,) -> (C,)."""
+    K = f.xs.shape[-1]
+    cnt = jnp.sum(f.xs[None, :] <= c[:, None], axis=-1)          # (C,)
+    il = jnp.clip(cnt - 1, 0, K - 1)
+    ir = jnp.clip(cnt, 0, K - 1)
+    w = f.xs[ir] - f.xs[il]
+    slope_in = (f.ys[ir] - f.ys[il]) / jnp.maximum(w, _TINY)
+    v_in = f.ys[il] + slope_in * (c - f.xs[il])
+    ilast = jnp.clip(f.m - 1, 0, K - 1)
+    v_l = f.ys[0] + f.sl * (c - f.xs[0])
+    v_r = f.ys[ilast] + f.sr * (c - f.xs[ilast])
+    return jnp.where(cnt == 0, v_l, jnp.where(cnt >= f.m, v_r, v_in))
+
+
+def _slope1(f: PWL, c: jax.Array) -> jax.Array:
+    """Slope at (non-knot) query points c: (C,) -> (C,)."""
+    K = f.xs.shape[-1]
+    cnt = jnp.sum(f.xs[None, :] <= c[:, None], axis=-1)
+    il = jnp.clip(cnt - 1, 0, K - 1)
+    ir = jnp.clip(cnt, 0, K - 1)
+    w = f.xs[ir] - f.xs[il]
+    slope_in = (f.ys[ir] - f.ys[il]) / jnp.maximum(w, _TINY)
+    return jnp.where(cnt == 0, f.sl, jnp.where(cnt >= f.m, f.sr, slope_in))
+
+
+def eval_at(f: PWL, c) -> jax.Array:
+    """Batched evaluation: f has leading batch dims, c broadcasts over them."""
+    c = jnp.asarray(c, f.xs.dtype)
+    batch = f.sl.shape
+    if batch == ():
+        return _eval1(f, jnp.atleast_1d(c))[0] if c.ndim == 0 else _eval1(f, c)
+    cb = jnp.broadcast_to(c, batch)
+    flat = jax.vmap(lambda ff, cc: _eval1(ff, cc[None])[0])
+    f2 = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[len(batch):]), f)
+    out = flat(f2, cb.reshape(-1))
+    return out.reshape(batch)
+
+
+# --------------------------------------------------------------------- #
+# scaling (discounting)
+# --------------------------------------------------------------------- #
+def scale(f: PWL, alpha) -> PWL:
+    """alpha * f with alpha > 0 (shape-preserving)."""
+    alpha = jnp.asarray(alpha, f.ys.dtype)
+    return PWL(f.xs, f.ys * alpha[..., None], f.sl * alpha, f.sr * alpha, f.m)
+
+
+# --------------------------------------------------------------------- #
+# compression: dedupe + drop collinear knots + compact to capacity
+# --------------------------------------------------------------------- #
+def _compact(xs, ys, keep):
+    """Stable-compact kept knots to the front; returns padded xs, ys, m."""
+    key = jnp.where(keep, xs, BIG)
+    order = jnp.argsort(key)          # stable; BIG (dropped) sorts to the end
+    xs2 = key[order]
+    ys2 = ys[order]
+    m2 = jnp.sum(keep).astype(jnp.int32)
+    idx = jnp.arange(xs.shape[0])
+    ys2 = jnp.where(idx < m2, ys2, 0.0)
+    return xs2, ys2, m2
+
+
+def _compress1(xs, ys, sl, sr, valid, out_cap: int):
+    """xs sorted with invalid -> BIG; returns (PWL of capacity out_cap, m_raw)."""
+    n = xs.shape[0]
+    # pass 1: merge (near-)duplicate knots, keep the first of each run
+    prev_x = jnp.concatenate([jnp.full((1,), -BIG, xs.dtype), xs[:-1]])
+    prev_valid = jnp.concatenate([jnp.zeros((1,), bool), valid[:-1]])
+    dup = valid & prev_valid & (xs - prev_x <= _REL * (1.0 + jnp.abs(prev_x)))
+    keep1 = valid & ~dup
+    xs1, ys1, m1 = _compact(xs, ys, keep1)
+    # pass 2: drop knots where the slope does not genuinely change
+    nxt_x = jnp.concatenate([xs1[1:], jnp.full((1,), BIG, xs.dtype)])
+    nxt_y = jnp.concatenate([ys1[1:], jnp.zeros((1,), ys.dtype)])
+    prv_x = jnp.concatenate([jnp.full((1,), BIG, xs.dtype), xs1[:-1]])
+    prv_y = jnp.concatenate([jnp.zeros((1,), ys.dtype), ys1[:-1]])
+    idx = jnp.arange(n)
+    s_right = jnp.where(idx < m1 - 1,
+                        (nxt_y - ys1) / jnp.maximum(nxt_x - xs1, _TINY), sr)
+    s_left = jnp.where(idx > 0,
+                       (ys1 - prv_y) / jnp.maximum(xs1 - prv_x, _TINY), sl)
+    tol = _REL * (1.0 + jnp.maximum(jnp.abs(s_left), jnp.abs(s_right)))
+    kink = jnp.abs(s_right - s_left) > tol
+    keep2 = (idx < m1) & kink
+    # always retain at least one (anchor) knot
+    keep2 = jnp.where(jnp.any(keep2), keep2, idx == 0)
+    xs2, ys2, m2 = _compact(xs1, ys1, keep2)
+    out = PWL(xs2[:out_cap], ys2[:out_cap], sl, sr,
+              jnp.minimum(m2, out_cap))
+    return out, m2
+
+
+# --------------------------------------------------------------------- #
+# pointwise max / min of two functions (exact, incl. crossing knots)
+# --------------------------------------------------------------------- #
+def _envelope1(f: PWL, g: PWL, out_cap: int, take_max: bool):
+    dtype = f.xs.dtype
+    merged = jnp.sort(jnp.concatenate([f.xs, g.xs]))            # (M,)
+    M = merged.shape[0]
+    mv = f.m + g.m
+    last = merged[jnp.clip(mv - 1, 0, M - 1)]
+    # interval representatives: i = 0..M  (interval i is (merged[i-1], merged[i]))
+    i_idx = jnp.arange(M + 1)
+    lo = jnp.where(i_idx == 0, -BIG, merged[jnp.clip(i_idx - 1, 0, M - 1)])
+    hi = jnp.where(i_idx >= mv, BIG, merged[jnp.clip(i_idx, 0, M - 1)])
+    rep = jnp.where(
+        i_idx == 0, merged[0] - 1.0,
+        jnp.where(i_idx >= mv, last + 1.0, 0.5 * (lo + hi)))
+    vf, vg = _eval1(f, rep), _eval1(g, rep)
+    sf, sg = _slope1(f, rep), _slope1(g, rep)
+    denom = sf - sg
+    parallel = jnp.abs(denom) <= _REL * (1.0 + jnp.maximum(jnp.abs(sf), jnp.abs(sg)))
+    x_cross = rep + (vg - vf) / jnp.where(parallel, 1.0, denom)
+    margin = _REL * (1.0 + jnp.abs(x_cross))
+    inside = (x_cross > lo + margin) & (x_cross < hi - margin)
+    ok = (~parallel) & inside & (i_idx <= mv)
+    cross = jnp.where(ok, x_cross, BIG)
+    cands = jnp.sort(jnp.concatenate([merged, cross]))          # (2M+1,)
+    valid = cands < BIG / 2
+    hf, hg = _eval1(f, cands), _eval1(g, cands)
+    hv = jnp.maximum(hf, hg) if take_max else jnp.minimum(hf, hg)
+    # end slopes from probes beyond the outermost *candidates* (crossings can
+    # lie outside the span of the input knots)
+    nvc = jnp.sum(valid)
+    pl = cands[0] - 1.0
+    pr = cands[jnp.clip(nvc - 1, 0, cands.shape[0] - 1)] + 1.0
+    fl, gl = _eval1(f, pl[None])[0], _eval1(g, pl[None])[0]
+    fr, gr = _eval1(f, pr[None])[0], _eval1(g, pr[None])[0]
+    tie_l = jnp.abs(fl - gl) <= _REL * (1.0 + jnp.maximum(jnp.abs(fl), jnp.abs(gl)))
+    tie_r = jnp.abs(fr - gr) <= _REL * (1.0 + jnp.maximum(jnp.abs(fr), jnp.abs(gr)))
+    if take_max:
+        sl = jnp.where(tie_l, jnp.minimum(f.sl, g.sl), jnp.where(fl > gl, f.sl, g.sl))
+        sr = jnp.where(tie_r, jnp.maximum(f.sr, g.sr), jnp.where(fr > gr, f.sr, g.sr))
+    else:
+        sl = jnp.where(tie_l, jnp.maximum(f.sl, g.sl), jnp.where(fl < gl, f.sl, g.sl))
+        sr = jnp.where(tie_r, jnp.minimum(f.sr, g.sr), jnp.where(fr < gr, f.sr, g.sr))
+    hv = jnp.where(valid, hv, 0.0)
+    return _compress1(cands, hv, sl, sr, valid, out_cap)
+
+
+def envelope2(f: PWL, g: PWL, out_cap: int, take_max: bool):
+    """Pointwise max/min.  Batched over leading dims; returns (PWL, m_raw)."""
+    batch = f.sl.shape
+    if batch == ():
+        return _envelope1(f, g, out_cap, take_max)
+    fn = lambda ff, gg: _envelope1(ff, gg, out_cap, take_max)
+    for _ in batch:
+        fn = jax.vmap(fn)
+    return fn(f, g)
+
+
+# --------------------------------------------------------------------- #
+# transaction-cost slope restriction (inf-convolution with the cost cone)
+# --------------------------------------------------------------------- #
+def _cone1(f: PWL, a, b, out_cap: int):
+    """v = min(f, lower envelope of the V_j cones); exact (see pwl_ref)."""
+    K = f.xs.shape[-1]
+    dtype = f.xs.dtype
+    idx = jnp.arange(K)
+    valid = idx < f.m
+    A = jnp.where(valid, f.ys + a * f.xs, BIG)
+    Bv = jnp.where(valid, f.ys + b * f.xs, BIG)
+    SA = jax.lax.cummin(A, reverse=True)       # suffix min of ys + a*xs
+    PB = jax.lax.cummin(Bv)                    # prefix min of ys + b*xs
+    # crossing candidate inside each bounded interval (xs_j, xs_{j+1})
+    nxt_x = jnp.concatenate([f.xs[1:], jnp.full((1,), BIG, dtype)])
+    nxt_SA = jnp.concatenate([SA[1:], jnp.full((1,), BIG, dtype)])
+    denom = a - b
+    par = jnp.abs(denom) <= _REL * (1.0 + jnp.abs(a))
+    ystar = (nxt_SA - PB) / jnp.where(par, 1.0, denom)
+    margin = _REL * (1.0 + jnp.abs(ystar))
+    ok = ((~par) & (idx + 1 < f.m) & (nxt_SA < BIG / 2) & (PB < BIG / 2)
+          & (ystar > f.xs + margin) & (ystar < nxt_x - margin))
+    cross = jnp.where(ok, ystar, BIG)
+    cands = jnp.sort(jnp.concatenate([f.xs, cross]))            # (2K,)
+    cvalid = cands < BIG / 2
+    # env(c) = min(-a c + SA(c), -b c + PB(c))
+    ge = jnp.sum(f.xs[None, :] < cands[:, None], axis=-1)       # knots < c
+    le = jnp.sum(f.xs[None, :] <= cands[:, None], axis=-1)      # knots <= c
+    SA_at = jnp.where(ge < f.m, SA[jnp.clip(ge, 0, K - 1)], BIG)
+    PB_at = jnp.where(le > 0, PB[jnp.clip(le - 1, 0, K - 1)], BIG)
+    env_v = jnp.minimum(jnp.where(SA_at < BIG / 2, -a * cands + SA_at, BIG),
+                        jnp.where(PB_at < BIG / 2, -b * cands + PB_at, BIG))
+    env_v = jnp.where(cvalid, env_v, 0.0)
+    menv = jnp.sum(cvalid).astype(jnp.int32)
+    env = PWL(cands, env_v, -a * jnp.ones((), dtype), -b * jnp.ones((), dtype), menv)
+    return _envelope1(f, env, out_cap, take_max=False)
+
+
+def cone_infconv(f: PWL, a, b, out_cap: int):
+    """Batched slope restriction; a, b broadcast over batch. (PWL, m_raw)."""
+    batch = f.sl.shape
+    a = jnp.broadcast_to(jnp.asarray(a, f.xs.dtype), batch)
+    b = jnp.broadcast_to(jnp.asarray(b, f.xs.dtype), batch)
+    if batch == ():
+        return _cone1(f, a, b, out_cap)
+    fn = lambda ff, aa, bb: _cone1(ff, aa, bb, out_cap)
+    for _ in batch:
+        fn = jax.vmap(fn)
+    return fn(f, a, b)
+
+
+# --------------------------------------------------------------------- #
+# conversions to/from the exact oracle (testing)
+# --------------------------------------------------------------------- #
+def from_ref(ref, capacity: int, dtype=jnp.float64) -> PWL:
+    import numpy as np
+    m = ref.m
+    if m > capacity:
+        raise ValueError(f"oracle function has {m} knots > capacity {capacity}")
+    xs = np.full((capacity,), BIG)
+    ys = np.zeros((capacity,))
+    xs[:m] = ref.xs
+    ys[:m] = ref.ys
+    return PWL(jnp.asarray(xs, dtype), jnp.asarray(ys, dtype),
+               jnp.asarray(ref.s_left, dtype), jnp.asarray(ref.s_right, dtype),
+               jnp.asarray(m, jnp.int32))
+
+
+def to_ref(f: PWL):
+    import numpy as np
+    from .pwl_ref import PWLRef
+    m = int(f.m)
+    return PWLRef(np.asarray(f.xs[:m]), np.asarray(f.ys[:m]),
+                  float(f.sl), float(f.sr))

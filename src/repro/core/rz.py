@@ -1,0 +1,164 @@
+"""Vectorised Roux–Zastawniak pricing engine (single device).
+
+Carries the whole live tree level as fixed-capacity PWL SoA tensors
+(:mod:`repro.core.pwl`) and walks levels N+1 -> 0 with ``lax.fori_loop``.
+Every level update is the paper's per-node recursion, data-parallel over
+nodes:
+
+    w = max(z[i+1], z[i]);  v = cone(w / r);  z = max/min(u, v)
+
+The node axis has static size N+2; nodes beyond the current level are
+masked (their lanes hold a benign affine function so no NaNs are ever
+produced, and they are never read by valid parents since node i's children
+are i and i+1).
+
+``price_rz`` is the public single-contract entry point;
+``price_rz_batch`` vmaps it over a batch of contracts (strike / cost-rate /
+spot grids — the "pricing desk" serving workload).  Capacity overflow is
+reported via the returned ``max_pieces``; callers assert it fits.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import pwl as P
+from .lattice import LatticeModel
+from .payoff import PayoffProcess
+
+__all__ = ["price_rz", "price_rz_batch", "rz_level_step", "RZResult"]
+
+
+@dataclasses.dataclass
+class RZResult:
+    ask: float
+    bid: float
+    max_pieces: int
+
+
+def _benign(capacity: int, dtype) -> P.PWL:
+    return P.make_affine(jnp.zeros((), dtype), jnp.zeros((), dtype), capacity, dtype)
+
+
+def _select(mask, f_new: P.PWL, f_old: P.PWL) -> P.PWL:
+    """Per-lane select between two PWL batches (mask over batch dims)."""
+    pick = lambda a, b: jnp.where(mask[..., None] if a.ndim > mask.ndim else mask, a, b)
+    return P.PWL(pick(f_new.xs, f_old.xs), pick(f_new.ys, f_old.ys),
+                 jnp.where(mask, f_new.sl, f_old.sl),
+                 jnp.where(mask, f_new.sr, f_old.sr),
+                 jnp.where(mask, f_new.m, f_old.m))
+
+
+def _shift_up(f: P.PWL) -> P.PWL:
+    """Lane i <- lane i+1 (the up-move child) along the node axis (axis 0)."""
+    sh = lambda a: jnp.roll(a, -1, axis=0)
+    return P.PWL(sh(f.xs), sh(f.ys), sh(f.sl), sh(f.sr), sh(f.m))
+
+
+def rz_level_step(z: P.PWL, lvl, params, *, capacity: int, seller: bool,
+                  payoff: PayoffProcess, dtype, idx_offset=0):
+    """One backward level update on a full (node-padded) level.
+
+    z: PWL batch over node axis (P lanes);  lvl: scalar level index (traced);
+    params: dict with s0, sig_sqrt_dt, r, k.  ``idx_offset`` maps local lane
+    j to global tree column idx_offset + j (used by the sharded engine).
+    Returns (z_new, max_pieces).
+    """
+    P_nodes = z.sl.shape[0]
+    idx = idx_offset + jnp.arange(P_nodes, dtype=dtype)
+    live = idx <= lvl                                  # lvl+1 valid nodes
+    s = params["s0"] * jnp.exp((2.0 * idx - lvl) * params["sig_sqrt_dt"])
+    no_tc = lvl == 0                                   # no costs at t = 0
+    a = jnp.where(no_tc, s, (1.0 + params["k"]) * s)
+    b = jnp.where(no_tc, s, (1.0 - params["k"]) * s)
+
+    w, m1 = P.envelope2(_shift_up(z), z, capacity, take_max=True)
+    w = P.scale(w, 1.0 / params["r"])
+    v, m2 = P.cone_infconv(w, a, b, capacity)
+    if seller:
+        u = P.expense(payoff.xi(s), payoff.zeta(s), a, b, capacity, dtype)
+        z_new, m3 = P.envelope2(u, v, capacity, take_max=True)
+    else:
+        u = P.expense(-payoff.xi(s), -payoff.zeta(s), a, b, capacity, dtype)
+        z_new, m3 = P.envelope2(u, v, capacity, take_max=False)
+
+    z_out = _select(live, z_new, z)
+    pieces = jnp.where(live, jnp.maximum(jnp.maximum(m1, m2), m3), 0)
+    return z_out, jnp.max(pieces)
+
+
+def _leaf_level(n_steps: int, params, capacity: int, dtype) -> P.PWL:
+    """z at the extra instant t = N+1 with payoff (0, 0)."""
+    P_nodes = n_steps + 2
+    idx = jnp.arange(P_nodes, dtype=dtype)
+    s = params["s0"] * jnp.exp((2.0 * idx - (n_steps + 1)) * params["sig_sqrt_dt"])
+    a = (1.0 + params["k"]) * s
+    b = (1.0 - params["k"]) * s
+    zero = jnp.zeros((P_nodes,), dtype)
+    return P.expense(zero, zero, a, b, capacity, dtype)
+
+
+@partial(jax.jit, static_argnames=("n_steps", "capacity", "payoff", "dtype"))
+def _price_rz_jit(s0, sigma, rate, maturity, k, *, n_steps: int, capacity: int,
+                  payoff: PayoffProcess, dtype=jnp.float64):
+    dt = maturity / n_steps
+    params = dict(
+        s0=s0, k=k,
+        sig_sqrt_dt=sigma * jnp.sqrt(dt),
+        r=jnp.exp(rate * dt),
+    )
+    z_s = _leaf_level(n_steps, params, capacity, dtype)
+    z_b = _leaf_level(n_steps, params, capacity, dtype)
+
+    def body(step, carry):
+        z_s, z_b, pieces = carry
+        lvl = jnp.asarray(n_steps - step, dtype)
+        z_s, p1 = rz_level_step(z_s, lvl, params, capacity=capacity,
+                                seller=True, payoff=payoff, dtype=dtype)
+        z_b, p2 = rz_level_step(z_b, lvl, params, capacity=capacity,
+                                seller=False, payoff=payoff, dtype=dtype)
+        pieces = jnp.maximum(pieces, jnp.maximum(p1, p2))
+        return z_s, z_b, pieces
+
+    z_s, z_b, pieces = jax.lax.fori_loop(
+        0, n_steps + 1, body, (z_s, z_b, jnp.zeros((), jnp.int32)))
+
+    root = lambda z: jax.tree.map(lambda a: a[0], z)
+    ask = P.eval_at(root(z_s), jnp.zeros((), dtype))
+    bid = -P.eval_at(root(z_b), jnp.zeros((), dtype))
+    return ask, bid, pieces
+
+
+def price_rz(model: LatticeModel, payoff: PayoffProcess,
+             capacity: int = 48) -> RZResult:
+    """Jitted vectorised ask/bid under proportional transaction costs."""
+    ask, bid, pieces = _price_rz_jit(
+        jnp.float64(model.s0), jnp.float64(model.sigma), jnp.float64(model.rate),
+        jnp.float64(model.maturity), jnp.float64(model.cost_rate),
+        n_steps=model.n_steps, capacity=capacity, payoff=payoff)
+    res = RZResult(ask=float(ask), bid=float(bid), max_pieces=int(pieces))
+    if res.max_pieces > capacity:
+        raise OverflowError(
+            f"PWL capacity overflow: needed {res.max_pieces} > K={capacity}; "
+            "re-run with a larger capacity")
+    return res
+
+
+@partial(jax.jit, static_argnames=("n_steps", "capacity", "payoff"))
+def price_rz_batch(s0, sigma, rate, maturity, k, *, n_steps: int,
+                   capacity: int, payoff: PayoffProcess):
+    """vmap over a batch of contracts; inputs are broadcastable 1-D arrays.
+
+    Returns (ask, bid, max_pieces) arrays — the serving-engine workhorse.
+    """
+    s0, sigma, rate, maturity, k = jnp.broadcast_arrays(
+        *(jnp.atleast_1d(jnp.asarray(v, jnp.float64))
+          for v in (s0, sigma, rate, maturity, k)))
+    fn = lambda *args: _price_rz_jit(*args, n_steps=n_steps, capacity=capacity,
+                                     payoff=payoff)
+    return jax.vmap(fn)(s0, sigma, rate, maturity, k)

@@ -1,0 +1,113 @@
+"""Token data pipeline: deterministic synthetic stream + memmap corpus.
+
+Production shape: the trainer asks for global batches of
+(n_micro, global_batch/n_micro, seq_len) int32 tokens; the pipeline builds
+them on host and device_puts with the batch NamedSharding (so each host
+only materialises its addressable shard in a real multi-host setting —
+here single-host, the slicing path is exercised through the same API).
+
+Sources:
+  * ``SyntheticSource`` — deterministic per-step PRNG tokens; loss curves
+    are reproducible across restarts (checkpoint/restart tests rely on it).
+  * ``MemmapSource``    — flat binary token file (np.memmap), sharded by
+    step offset; the standard "tokenized corpus on disk" format.
+
+Both expose ``batch(step) -> np.ndarray`` so the trainer is source-
+agnostic and *stateless* (resume = seek by step, no iterator state in the
+checkpoint).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from queue import Queue
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["SyntheticSource", "MemmapSource", "Prefetcher", "make_batches"]
+
+
+@dataclasses.dataclass
+class SyntheticSource:
+    vocab: int
+    global_batch: int
+    seq_len: int
+    n_micro: int = 1
+    seed: int = 0
+
+    def batch(self, step: int) -> dict:
+        rng = np.random.default_rng((self.seed << 32) ^ step)
+        mb = self.global_batch // self.n_micro
+        toks = rng.integers(
+            0, self.vocab, (self.n_micro, mb, self.seq_len + 1), np.int32)
+        return {"tokens": toks[..., :-1], "targets": toks[..., 1:]}
+
+
+@dataclasses.dataclass
+class MemmapSource:
+    path: str
+    vocab: int
+    global_batch: int
+    seq_len: int
+    n_micro: int = 1
+
+    def __post_init__(self):
+        self._data = np.memmap(self.path, dtype=np.int32, mode="r")
+        self.n_tokens = self._data.shape[0]
+
+    def batch(self, step: int) -> dict:
+        mb = self.global_batch // self.n_micro
+        need = self.global_batch * (self.seq_len + 1)
+        start = (step * need) % max(self.n_tokens - need, 1)
+        flat = np.asarray(self._data[start:start + need])
+        toks = flat.reshape(self.n_micro, mb, self.seq_len + 1)
+        return {"tokens": toks[..., :-1], "targets": toks[..., 1:]}
+
+
+class Prefetcher:
+    """Background-thread prefetch of device-put batches (depth-bounded)."""
+
+    def __init__(self, source, sharding=None, depth: int = 2,
+                 start_step: int = 0):
+        self.source = source
+        self.sharding = sharding
+        self.q: Queue = Queue(maxsize=depth)
+        self.step = start_step
+        self._stop = False
+        self.thread = threading.Thread(target=self._work, daemon=True)
+        self.thread.start()
+
+    def _work(self):
+        while not self._stop:
+            b = self.source.batch(self.step)
+            if self.sharding is not None:
+                b = jax.tree.map(
+                    lambda a, s: jax.device_put(a, s), b,
+                    self.sharding if isinstance(self.sharding, dict)
+                    else jax.tree.map(lambda _: self.sharding, b))
+            self.q.put((self.step, b))
+            self.step += 1
+
+    def __next__(self):
+        return self.q.get()
+
+    def stop(self):
+        self._stop = True
+        try:
+            while True:
+                self.q.get_nowait()
+        except Exception:
+            pass
+
+
+def make_batches(source, sharding=None, start_step: int = 0) -> Iterator:
+    """Simple (non-threaded) batch iterator; deterministic, resumable."""
+    step = start_step
+    while True:
+        b = source.batch(step)
+        if sharding is not None:
+            b = jax.tree.map(lambda a: jax.device_put(a, sharding), b)
+        yield step, b
+        step += 1

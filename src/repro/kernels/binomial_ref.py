@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the binomial lattice kernel.
+
+The level-by-level reference the Pallas kernel is swept against; also
+re-exports the numpy oracle used by the pricing tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.notc import price_notc_np  # noqa: F401  (re-export)
+
+__all__ = ["lattice_levels_ref", "price_notc_np"]
+
+
+def lattice_levels_ref(v, scalars, *, levels: int, kind: str = "put"):
+    """Advance all nodes ``levels`` levels: the exact computation the
+    kernel performs, as plain jnp on the full array."""
+    lvl0, p_up, inv_r, strike, s0, sig = (scalars[i] for i in range(6))
+    idx = jnp.arange(v.shape[0], dtype=v.dtype)
+
+    def payoff(lvl):
+        s = s0 * jnp.exp((2.0 * idx - lvl) * sig)
+        pay = strike - s if kind == "put" else s - strike
+        return jnp.maximum(pay, 0.0)
+
+    for j in range(levels):
+        lvl = lvl0 - (j + 1)
+        cont = (p_up * jnp.roll(v, -1) + (1.0 - p_up) * v) * inv_r
+        new = jnp.maximum(payoff(lvl), cont)
+        v = jnp.where(lvl >= 0, new, v)
+    return v

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: causal/windowed GQA flash attention.
+
+BlockSpec tiling: one q block of ``block_q`` rows per grid step, online
+softmax over KV chunks of ``block_kv`` — live VMEM is
+O(block_q * block_kv + block_q * hd); the S x S score matrix never
+materialises.  GQA is handled in the index map: query head h reads KV head
+h // (H // KVH).
+
+Oracle: ``repro.models.layers._attn_flash`` (itself validated against the
+naive materialised-scores path) via ``flash_ref`` below.  The sweep tests
+run the kernel in interpret mode over shapes x dtypes x (causal, window).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention", "flash_ref"]
+
+_NEG = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_kv: int,
+               seq_kv: int, causal: bool, window, scale: float):
+    iq = pl.program_id(1)
+    q = q_ref[0]                                   # (bq, hd)
+    hd = q.shape[-1]
+    nkv = seq_kv // block_kv
+
+    pos_q = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (0, pl.dslice(j * block_kv, block_kv),
+                            slice(None)))          # (bkv, hd)
+        v = pl.load(v_ref, (0, pl.dslice(j * block_kv, block_kv),
+                            slice(None)))
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bkv)
+        pos_k = j * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_kv), 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= pos_q >= pos_k
+        if window is not None:
+            mask &= pos_q - pos_k < window
+        s = jnp.where(mask, s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_new = acc * corr + pv
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q, 1), _NEG, jnp.float32)
+    l0 = jnp.zeros((block_q, 1), jnp.float32)
+    a0 = jnp.zeros((block_q, hd), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, nkv, body, (m0, l0, a0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: bool = True):
+    """q: (B, T, H, hd); k, v: (B, S, KVH, hd) -> (B, T, H, hd)."""
+    B, T, H, hd = q.shape
+    S, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    block_q = min(block_q, T)
+    block_kv = min(block_kv, S)
+    assert T % block_q == 0 and S % block_kv == 0
+
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KVH, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KVH, S, hd)
+
+    kernel = functools.partial(
+        _fa_kernel, block_q=block_q, block_kv=block_kv, seq_kv=S,
+        causal=causal, window=window, scale=1.0 / math.sqrt(hd))
+
+    kv_index = lambda bh, iq: ((bh // H) * KVH + (bh % H) // G, 0, 0)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, T // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, iq: (bh, iq, 0)),
+            pl.BlockSpec((1, S, hd), kv_index),
+            pl.BlockSpec((1, S, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda bh, iq: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, T, hd), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, T, hd).transpose(0, 2, 1, 3)
+
+
+def flash_ref(q, k, v, *, causal: bool = True, window=None):
+    """Oracle: the validated pure-jnp online-softmax implementation."""
+    from ..models.layers import _attn_flash
+    B, T, H, hd = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    qq = q.reshape(B, T, KVH, G, hd)
+    pos = jnp.arange(T)
+    pos_k = jnp.arange(k.shape[1])
+    out = _attn_flash(qq, k, v, pos, pos_k, causal=causal, window=window,
+                      q_chunk=min(64, T), kv_chunk=min(64, k.shape[1]))
+    return out.reshape(B, T, H, hd)

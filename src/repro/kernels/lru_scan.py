@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: chunked linear-recurrence scan (RG-LRU / Mamba).
+
+Computes h_t = a_t * h_{t-1} + b_t along the sequence, the state update
+shared by recurrentgemma's RG-LRU and falcon-mamba's selective SSM
+(diagonal A).  Structure = the paper's block scheme on the time axis:
+
+  * sequence tiled into chunks (grid minor axis, executed sequentially);
+  * the running state h is the inter-chunk "halo": it lives in a VMEM
+    scratch accumulator that persists across grid steps — one chunk's
+    worth of (a, b) streams HBM->VMEM per step, the state never leaves;
+  * width is tiled over the second grid axis (VPU lanes).
+
+The wrapper reshapes (B, T, W) -> (B, n_chunks, chunk, W); the kernel
+writes h for every position (h_seq), and the wrapper returns
+(h_seq, h_last).  Oracle: ``repro.models.layers._linear_scan_chunked``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["lru_scan", "lru_scan_ref"]
+
+
+def _lru_kernel(a_ref, b_ref, h0_ref, o_ref, h_scratch, *, chunk: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        h_scratch[...] = h0_ref[...].astype(jnp.float32)
+
+    a = a_ref[0, 0]                               # (chunk, bw)
+    b = b_ref[0, 0]
+    h = h_scratch[...]                            # (1, bw)
+
+    rows = []
+    for j in range(chunk):                        # static unroll in VMEM
+        h = a[j][None, :] * h + b[j][None, :]
+        rows.append(h)
+    out = jnp.concatenate(rows, axis=0)           # (chunk, bw)
+    h_scratch[...] = h
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def lru_scan(a, b, h0, *, chunk: int = 256, interpret: bool = True,
+             block_w: int = 128):
+    """a, b: (B, T, W) f32; h0: (B, W) f32 -> (h_seq (B,T,W), h_last)."""
+    B, T, W = a.shape
+    chunk = min(chunk, T)
+    block_w = min(block_w, W)
+    assert T % chunk == 0 and W % block_w == 0
+    nc = T // chunk
+    ar = a.reshape(B, nc, chunk, W)
+    br = b.reshape(B, nc, chunk, W)
+
+    kernel = functools.partial(_lru_kernel, chunk=chunk)
+    h_seq = pl.pallas_call(
+        kernel,
+        grid=(B, W // block_w, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, block_w),
+                         lambda bi, wi, c: (bi, c, 0, wi)),
+            pl.BlockSpec((1, 1, chunk, block_w),
+                         lambda bi, wi, c: (bi, c, 0, wi)),
+            pl.BlockSpec((1, block_w), lambda bi, wi, c: (bi, wi)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, block_w),
+                               lambda bi, wi, c: (bi, c, 0, wi)),
+        out_shape=jax.ShapeDtypeStruct((B, nc, chunk, W), a.dtype),
+        scratch_shapes=[pltpu.VMEM((1, block_w), jnp.float32)],
+        interpret=interpret,
+    )(ar, br, h0)
+    h_seq = h_seq.reshape(B, T, W)
+    return h_seq, h_seq[:, -1, :]
+
+
+def lru_scan_ref(a, b, h0, *, chunk: int = 256):
+    """Oracle: the chunked associative scan used by the model layers."""
+    from ..models.layers import _linear_scan_chunked
+    return _linear_scan_chunked(a, b, h0, chunk)

@@ -1,0 +1,84 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``price_notc_kernel`` prices the paper's appendix American put end-to-end
+through the blocked lattice kernel: fori_loop over rounds on the host,
+one ``lattice_round`` (L levels, one HBM round-trip per block) per
+iteration — the whole-program analogue of the paper's Algorithm 1 with
+pthread signals replaced by grid/block independence.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..core.lattice import LatticeModel
+from .binomial_step import DEFAULT_BLOCK, lattice_round
+
+__all__ = ["price_notc_kernel", "flash_attention", "lru_scan"]
+
+
+@partial(jax.jit, static_argnames=("n_steps", "levels", "block", "kind",
+                                   "interpret", "dtype"))
+def _price_notc_impl(s0, sigma, rate, maturity, strike, *, n_steps: int,
+                     levels: int, block: int, kind: str, interpret: bool,
+                     dtype):
+    dt = maturity / n_steps
+    u = jnp.exp(sigma * jnp.sqrt(dt))
+    r = jnp.exp(rate * dt)
+    p_up = (r - 1.0 / u) / (u - 1.0 / u)
+    sig = sigma * jnp.sqrt(dt)
+
+    P = -(-(n_steps + 1) // block) * block
+    idx = jnp.arange(P, dtype=dtype)
+    s_leaf = s0 * jnp.exp((2.0 * idx - n_steps) * sig)
+    pay = strike - s_leaf if kind == "put" else s_leaf - strike
+    v0 = jnp.maximum(pay, 0.0)
+
+    rounds = -(-n_steps // levels)
+
+    def body(rr, v):
+        lvl0 = jnp.asarray(n_steps - rr * levels, dtype)
+        scalars = jnp.stack([lvl0, p_up.astype(dtype), (1.0 / r).astype(dtype),
+                             jnp.asarray(strike, dtype), jnp.asarray(s0, dtype),
+                             sig.astype(dtype)])
+        return lattice_round(v, scalars, levels=levels, block=block,
+                             kind=kind, interpret=interpret)
+
+    v = jax.lax.fori_loop(0, rounds, body, v0)
+    return v[0]
+
+
+def price_notc_kernel(model: LatticeModel, strike: float, *,
+                      kind: str = "put", levels: int = 64,
+                      block: int = DEFAULT_BLOCK, interpret: bool = True,
+                      dtype=jnp.float64) -> float:
+    out = _price_notc_impl(
+        jnp.asarray(model.s0, dtype), jnp.asarray(model.sigma, dtype),
+        jnp.asarray(model.rate, dtype), jnp.asarray(model.maturity, dtype),
+        jnp.asarray(strike, dtype), n_steps=model.n_steps, levels=levels,
+        block=block, kind=kind, interpret=interpret, dtype=dtype)
+    return float(out)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: bool = True):
+    """Pallas causal/windowed GQA flash attention.
+
+    q: (B, T, H, hd);  k, v: (B, S, KVH, hd);  returns (B, T, H, hd).
+    """
+    from .flash_attention import flash_attention as _fa
+    return _fa(q, k, v, causal=causal, window=window, block_q=block_q,
+               block_kv=block_kv, interpret=interpret)
+
+
+def lru_scan(a, b, h0, *, chunk: int = 256, interpret: bool = True):
+    """Pallas chunked linear recurrence h_t = a_t h_{t-1} + b_t.
+
+    a, b: (B, T, W); h0: (B, W); returns (h_seq (B,T,W), h_last (B,W)).
+    """
+    from .lru_scan import lru_scan as _ls
+    return _ls(a, b, h0, chunk=chunk, interpret=interpret)

@@ -1,0 +1,113 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# Dry-run for the PAPER'S OWN workload on the production mesh: a contract
+# batch on the data axis x the lattice node axis on the model axis.  Lowers
+# + compiles the distributed engines (core/distributed.py), extracts the
+# collective schedule and per-round costs, and sweeps the paper's L
+# (round_depth) so §Perf can hillclimb the halo/sync trade-off that the
+# paper tuned by hand (L=5 with costs, L=50 without).
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from ..core.distributed import (build_notc_sharded, build_rz_sharded,  # noqa: E402
+                                plan_rounds)
+from ..core.payoff import american_put  # noqa: E402
+from .dryrun import RESULTS_DIR, collective_bytes  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+
+F64 = 8
+
+
+def run_pricing_cell(kind: str, n_steps: int, contracts: int,
+                     round_depth: int, collapse_lanes, multi_pod: bool,
+                     capacity: int = 48):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    data_axes = ("pod", "data") if multi_pod else ("data",)
+    W = mesh.shape["model"]
+
+    if kind == "notc":
+        f = build_notc_sharded(mesh, n_steps=n_steps, strike=100.0,
+                               round_depth=round_depth,
+                               collapse_lanes=collapse_lanes or None,
+                               data_axes=data_axes)
+        args = [jax.ShapeDtypeStruct((contracts,), jnp.float64)] * 4
+        plan = plan_rounds(n_steps - 1, W, round_depth, collapse_lanes or None)
+        state_bytes = F64
+    else:
+        f = build_rz_sharded(mesh, n_steps=n_steps,
+                             payoff=american_put(100.0), capacity=capacity,
+                             round_depth=round_depth,
+                             collapse_lanes=collapse_lanes or None,
+                             data_axes=data_axes)
+        args = [jax.ShapeDtypeStruct((contracts,), jnp.float64)] * 5
+        plan = plan_rounds(n_steps, W, round_depth, collapse_lanes or None)
+        state_bytes = 2 * (2 * capacity + 3) * F64   # two parties' PWL SoA
+
+    jf = jax.jit(f)
+    t0 = time.time()
+    lowered = jf.lower(*args)
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    coll = collective_bytes(compiled.as_text())
+
+    bc = contracts // (mesh.devices.size // W)     # contracts per data shard
+    halo_bytes_per_round = bc * plan["halo"] * state_bytes
+    rec = {
+        "kind": kind, "n_steps": n_steps, "contracts": contracts,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "round_depth": round_depth, "plan": plan, "capacity": capacity,
+        "flops_per_device_once": cost.get("flops"),
+        "bytes_accessed_once": cost.get("bytes accessed"),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "collectives": coll,
+        "halo_bytes_per_round": halo_bytes_per_round,
+        "rounds": plan["rounds"],
+        "compile_s": round(t_compile, 1),
+        "ok": True,
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kind", default="notc", choices=["notc", "tc"])
+    ap.add_argument("--n-steps", type=int, default=40000)
+    ap.add_argument("--contracts", type=int, default=256)
+    ap.add_argument("--round-depth", type=int, default=50)
+    ap.add_argument("--collapse-lanes", type=int, default=0)
+    ap.add_argument("--capacity", type=int, default=48)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--sweep-l", default=None,
+                    help="comma-separated L values to sweep")
+    ap.add_argument("--tag", default="pricing")
+    args = ap.parse_args()
+
+    out_dir = RESULTS_DIR / args.tag
+    out_dir.mkdir(parents=True, exist_ok=True)
+    ls = ([int(x) for x in args.sweep_l.split(",")] if args.sweep_l
+          else [args.round_depth])
+    for L in ls:
+        rec = run_pricing_cell(args.kind, args.n_steps, args.contracts, L,
+                               args.collapse_lanes, args.multi_pod,
+                               args.capacity)
+        mesh_tag = rec["mesh"]
+        name = f"{args.kind}_N{args.n_steps}_L{L}_{mesh_tag}.json"
+        (out_dir / name).write_text(json.dumps(rec, indent=1))
+        print(json.dumps({k: rec[k] for k in
+                          ("kind", "n_steps", "round_depth", "rounds",
+                           "compile_s")}),
+              "coll:", rec["collectives"]["count_by_op"],
+              "halo/round:", rec["halo_bytes_per_round"])
+
+
+if __name__ == "__main__":
+    main()

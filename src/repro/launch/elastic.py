@@ -1,0 +1,93 @@
+"""Elastic scaling / failure handling — the control-plane contract.
+
+On a real multi-pod deployment the pieces below compose with a cluster
+scheduler (GKE/Borg-style).  What lives *in this framework* (and is
+exercised by tests on virtual devices):
+
+  1. **Topology catalogue** — the meshes a job may run on, ordered by
+     preference.  ``pick_mesh(devices)`` returns the largest catalogued
+     mesh that fits the currently-healthy device count (lose a pod ->
+     fall back from (2,16,16) to (16,16); lose chips within a pod ->
+     (8,16), etc.).
+  2. **Elastic restore** — checkpoints store full logical arrays, so
+     ``checkpoint.restore(..., sharding=new)`` re-lays-out ZeRO shards on
+     whatever mesh was picked (tests/test_checkpoint.py).
+  3. **Straggler policy** — the trainer flags steps slower than
+     ``factor x EWMA`` (SPMD programs make per-step timing a global
+     signal); the policy object decides evict-vs-tolerate and is where a
+     deployment wires its scheduler callback.
+  4. **Batch rescaling** — global batch is preserved across re-meshes by
+     recomputing per-device microbatching (``rescale_batch``), keeping
+     the optimizer trajectory comparable after a shrink.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+__all__ = ["TOPOLOGY_CATALOGUE", "pick_mesh", "pick_topology",
+           "StragglerPolicy", "rescale_batch"]
+
+# (devices_required, mesh_shape, axis_names) — preference order
+TOPOLOGY_CATALOGUE: List[Tuple[int, Tuple[int, ...], Tuple[str, ...]]] = [
+    (512, (2, 16, 16), ("pod", "data", "model")),
+    (256, (16, 16), ("data", "model")),
+    (128, (8, 16), ("data", "model")),
+    (64, (4, 16), ("data", "model")),
+    (16, (1, 16), ("data", "model")),
+    (8, (2, 4), ("data", "model")),
+    (4, (2, 2), ("data", "model")),
+    (2, (2, 1), ("data", "model")),
+    (1, (1, 1), ("data", "model")),
+]
+
+
+def pick_topology(healthy_devices: int):
+    """Largest catalogued (shape, axes) that fits; raises if none does."""
+    for need, shape, axes in TOPOLOGY_CATALOGUE:
+        if healthy_devices >= need:
+            return shape, axes
+    raise RuntimeError("no catalogued topology fits 0 devices")
+
+
+def pick_mesh(healthy_devices: int):
+    """Build the largest catalogued mesh that fits the healthy devices."""
+    import jax
+    shape, axes = pick_topology(healthy_devices)
+    return jax.make_mesh(shape, axes)
+
+
+def rescale_batch(global_batch: int, seq_len: int, data_parallel: int,
+                  per_device_tokens_budget: int = 1 << 16):
+    """Recompute microbatching for a new data-parallel degree, preserving
+    the global batch (optimizer trajectory) while respecting per-device
+    activation memory."""
+    assert global_batch % data_parallel == 0, \
+        f"global batch {global_batch} must divide dp={data_parallel}"
+    per_dev = global_batch // data_parallel
+    n_micro = 1
+    while per_dev // n_micro * seq_len > per_device_tokens_budget \
+            and n_micro < per_dev:
+        n_micro *= 2
+    return {"n_micro": n_micro, "micro_batch": global_batch // n_micro}
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    """Decide what to do with a straggling step (see trainer EWMA hook)."""
+    factor: float = 3.0
+    tolerate: int = 3                     # consecutive slow steps allowed
+    on_evict: Optional[Callable[[int], None]] = None
+    _slow_streak: int = 0
+
+    def observe(self, step: int, dt: float, ewma: float) -> str:
+        if dt <= self.factor * ewma:
+            self._slow_streak = 0
+            return "ok"
+        self._slow_streak += 1
+        if self._slow_streak >= self.tolerate:
+            if self.on_evict:
+                self.on_evict(step)
+            self._slow_streak = 0
+            return "evict"
+        return "tolerate"

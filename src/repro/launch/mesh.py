@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import, and tests/benches must keep seeing a single device.
+
+Single pod:  (16, 16)        axes ("data", "model")   = 256 chips (v5e pod)
+Multi-pod:   (2, 16, 16)     axes ("pod", "data", "model") = 512 chips
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh", "mesh_rules"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 1, model: int = 1, pod: int = 0):
+    """Small mesh over however many (virtual) devices the test process has."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_rules(mesh):
+    """MeshRules bound to this mesh: fsdp over (pod,)data, tp over model."""
+    from ..models.sharding import MeshRules
+    fsdp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return MeshRules(mesh=mesh, fsdp=fsdp, tp=("model",))

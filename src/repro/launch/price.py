@@ -1,0 +1,70 @@
+"""Distributed pricing launcher (the paper's workload as a service).
+
+    PYTHONPATH=src python -m repro.launch.price --n-steps 500 \
+        --contracts 8 [--data 1 --model 1] [--tc | --no-tc]
+
+Contracts shard over the data axis; the lattice node axis shards over the
+model axis with the paper's round/halo schedule (core/distributed.py).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.distributed import build_notc_sharded, build_rz_sharded
+from ..core.payoff import american_put, bull_spread
+from .mesh import make_test_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-steps", type=int, default=500)
+    ap.add_argument("--contracts", type=int, default=8)
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--round-depth", type=int, default=8)
+    ap.add_argument("--capacity", type=int, default=48)
+    ap.add_argument("--cost-rate", type=float, default=0.005)
+    ap.add_argument("--payoff", default="put", choices=["put", "bull_spread"])
+    ap.add_argument("--no-tc", action="store_true")
+    args = ap.parse_args()
+
+    mesh = make_test_mesh(args.data, args.model)
+    n = args.contracts
+    s0 = jnp.linspace(90.0, 110.0, n).astype(jnp.float64)
+    sig = jnp.full((n,), 0.2)
+    rate = jnp.full((n,), 0.1)
+    mat = jnp.full((n,), 0.25)
+
+    if args.no_tc:
+        f = jax.jit(build_notc_sharded(mesh, n_steps=args.n_steps,
+                                       strike=100.0,
+                                       round_depth=args.round_depth))
+        t0 = time.perf_counter()
+        price = np.asarray(f(s0, sig, rate, mat))
+        dt = time.perf_counter() - t0
+        for i in range(n):
+            print(f"S0={float(s0[i]):6.1f}  price={price[i]:.6f}")
+    else:
+        pay = american_put(100.0) if args.payoff == "put" else bull_spread()
+        f = jax.jit(build_rz_sharded(
+            mesh, n_steps=args.n_steps, payoff=pay, capacity=args.capacity,
+            round_depth=args.round_depth))
+        k = jnp.full((n,), args.cost_rate)
+        t0 = time.perf_counter()
+        ask, bid, pieces = f(s0, sig, rate, mat, k)
+        ask, bid = np.asarray(ask), np.asarray(bid)
+        dt = time.perf_counter() - t0
+        for i in range(n):
+            print(f"S0={float(s0[i]):6.1f}  ask={ask[i]:.6f}  "
+                  f"bid={bid[i]:.6f}")
+        print(f"max PWL knots: {int(pieces)} (capacity {args.capacity})")
+    print(f"{n} contracts, N={args.n_steps}: {dt:.2f}s (incl. compile)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+        --steps 100 [--reduced] [--data <mesh-axis>] [--model <mesh-axis>]
+
+On real hardware the mesh axes default to the production 16x16 pod; on
+this CPU container pass --data 1 --model 1 (default) and optionally
+--reduced for the smoke-sized config.  The loop checkpoints and resumes
+automatically (see train/trainer.py for the fault-tolerance contract).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, reduced_config
+from ..models.transformer import RunCfg
+from ..train.trainer import TrainerConfig, train
+from .mesh import make_test_mesh, mesh_rules
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--micro", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--remat", default="none",
+                    choices=["none", "full", "dots"])
+    ap.add_argument("--moe-impl", default="dense",
+                    choices=["dense", "dispatch"])
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a simulated failure at this step")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    rules = None
+    if args.data * args.model > 1:
+        mesh = make_test_mesh(args.data, args.model)
+        rules = mesh_rules(mesh)
+    run = RunCfg(dtype=jnp.float32, remat=args.remat, moe_impl=args.moe_impl)
+    tc = TrainerConfig(steps=args.steps, global_batch=args.batch,
+                       seq_len=args.seq, n_micro=args.micro,
+                       peak_lr=args.lr, ckpt_dir=args.ckpt,
+                       simulate_failure_at=args.fail_at)
+    out = train(cfg, tc, run, rules)
+    print(f"final loss: {out['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,607 @@
+"""Model layers: norms, rotary, GQA attention, MLP, MoE, RG-LRU, Mamba.
+
+Pure-functional: every layer has ``init_*(key, cfg) -> (params, specs)``
+and an apply function.  ``params`` are float32 pytrees; compute casts to
+the configured activation dtype (bf16 by default).  ``specs`` is a
+parallel pytree of *logical* PartitionSpecs (see
+:mod:`repro.models.sharding`) resolved against the production mesh at jit
+time.
+
+Attention supports:
+  * GQA / MQA (n_kv_heads <= n_heads), optional per-head qk RMS-norm
+    (qwen3 / chameleon), optional qkv bias (qwen2.5),
+  * causal, bidirectional (encoder), sliding-window (recurrentgemma,
+    window size cfg.local_window), and cross attention (seamless),
+  * three implementations: "naive" (materialises S x S scores), "flash"
+    (online-softmax over KV chunks, O(chunk^2) memory — the pure-jnp
+    oracle of the Pallas kernel), and KV-cache decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+from ..configs.base import ModelConfig
+
+Params = Dict[str, Any]
+
+DEFAULT_DTYPE = jnp.bfloat16
+
+
+# --------------------------------------------------------------------- #
+# initialisers
+# --------------------------------------------------------------------- #
+def _dense_init(key, shape, in_axis=0):
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std
+
+
+# --------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------- #
+def init_rmsnorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}, {"scale": (None,)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(dt)
+
+
+# --------------------------------------------------------------------- #
+# rotary position embedding
+# --------------------------------------------------------------------- #
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, T, H, hd), positions: (B, T) or (T,)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freq        # (B,T,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# attention
+# --------------------------------------------------------------------- #
+def init_attention(key, cfg: ModelConfig):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    h, kvh = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    params = {
+        "wq": _dense_init(ks[0], (d, h * hd)),
+        "wk": _dense_init(ks[1], (d, kvh * hd)),
+        "wv": _dense_init(ks[2], (d, kvh * hd)),
+        "wo": _dense_init(ks[3], (h * hd, d)),
+    }
+    specs = {
+        "wq": ("fsdp", "tp"), "wk": ("fsdp", "tp"), "wv": ("fsdp", "tp"),
+        "wo": ("tp", "fsdp"),
+    }
+    if cfg.qkv_bias:
+        params.update(bq=jnp.zeros((h * hd,), jnp.float32),
+                      bk=jnp.zeros((kvh * hd,), jnp.float32),
+                      bv=jnp.zeros((kvh * hd,), jnp.float32))
+        specs.update(bq=("tp",), bk=("tp",), bv=("tp",))
+    if cfg.qk_norm:
+        params.update(q_norm=jnp.ones((hd,), jnp.float32),
+                      k_norm=jnp.ones((hd,), jnp.float32))
+        specs.update(q_norm=(None,), k_norm=(None,))
+    return params, specs
+
+
+def _qk_head_norm(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+_MASK_NEG = -1e30  # finite: keeps online-softmax NaN-free on fully-masked
+                   # KV chunks (exp(-1e30 - m) underflows to exactly 0)
+
+
+def _mask_bias(pos_q, pos_k, *, causal: bool, window: Optional[int]):
+    """(Tq, Tk) additive mask in f32 (0 / -1e30)."""
+    m = jnp.ones((pos_q.shape[0], pos_k.shape[0]), bool)
+    if causal:
+        m &= pos_q[:, None] >= pos_k[None, :]
+    if window is not None:
+        m &= pos_q[:, None] - pos_k[None, :] < window
+    return jnp.where(m, 0.0, _MASK_NEG).astype(jnp.float32)
+
+
+def _attn_naive(q, k, v, bias):
+    """q: (B,T,KVH,G,hd)  k,v: (B,S,KVH,hd)  bias: (T,S) additive."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("btkgh,bskh->bkgts", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = scores + bias[None, None, None]
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskh->btkgh", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(v.dtype)
+
+
+def _attn_flash(q, k, v, pos_q, pos_k, *, causal, window,
+                q_chunk: int = 1024, kv_chunk: int = 1024):
+    """Online-softmax attention, O(q_chunk * kv_chunk) live scores.
+
+    Same signature semantics as _attn_naive but masks are built per chunk.
+    This is also the pure-jnp oracle for kernels/flash_attention.
+    """
+    B, T, KVH, G, hd = q.shape
+    S = k.shape[1]
+    q_chunk = min(q_chunk, T)
+    kv_chunk = min(kv_chunk, S)
+    nq, nk = T // q_chunk, S // kv_chunk
+    assert T % q_chunk == 0 and S % kv_chunk == 0
+    scale = 1.0 / math.sqrt(hd)
+
+    qr = q.reshape(B, nq, q_chunk, KVH, G, hd)
+    kr = k.reshape(B, nk, kv_chunk, KVH, hd)
+    vr = v.reshape(B, nk, kv_chunk, KVH, hd)
+    pq = pos_q.reshape(nq, q_chunk)
+    pk = pos_k.reshape(nk, kv_chunk)
+
+    def q_block(qi_and_posq):
+        qi, posq = qi_and_posq                     # (B,Cq,KVH,G,hd), (Cq,)
+
+        def kv_step(carry, kj_and):
+            m, l, acc = carry
+            kj, vj, posk = kj_and
+            b = _mask_bias(posq, posk, causal=causal, window=window)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            s = s + b[None, None, None]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(vj.dtype), vj,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KVH, G, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KVH, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, q_chunk, KVH, G, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kr.transpose(1, 0, 2, 3, 4), vr.transpose(1, 0, 2, 3, 4), pk))
+        l = jnp.maximum(l, 1e-30)
+        return acc / l.transpose(0, 3, 1, 2)[..., None]
+
+    out = jax.lax.map(q_block, (qr.transpose(1, 0, 2, 3, 4, 5), pq))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, T, KVH, G, hd)
+    return out.astype(v.dtype)
+
+
+def attention(params, x, cfg: ModelConfig, *,
+              kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+              x_kv: Optional[jax.Array] = None,
+              positions: Optional[jax.Array] = None,
+              kv_positions: Optional[jax.Array] = None,
+              causal: bool = True, window: Optional[int] = None,
+              impl: str = "naive", dtype=DEFAULT_DTYPE,
+              q_chunk: int = 1024, kv_chunk: int = 1024,
+              use_rope: Optional[bool] = None):
+    """Self / cross attention.
+
+    kv: precomputed (k, v) cache (decode);  x_kv: encoder output (cross).
+    use_rope: override rotary application (default: self-attention only —
+    cross attention against a cached encoder must pass False explicitly
+    when kv= is used, since kv= alone cannot distinguish the two).
+    Returns (out, (k, v)) so callers can build KV caches.
+    """
+    B, T, _ = x.shape
+    hd = cfg.resolved_head_dim
+    h, kvh = cfg.n_heads, cfg.n_kv_heads
+    g = h // kvh
+    cast = lambda w: w.astype(dtype)
+
+    q = x @ cast(params["wq"])
+    src = x if x_kv is None else x_kv
+    k = src @ cast(params["wk"])
+    v = src @ cast(params["wv"])
+    if cfg.qkv_bias:
+        q = q + cast(params["bq"])
+        k = k + cast(params["bk"])
+        v = v + cast(params["bv"])
+    q = q.reshape(B, T, kvh, g, hd)
+    k = k.reshape(B, src.shape[1], kvh, hd)
+    v = v.reshape(B, src.shape[1], kvh, hd)
+    if cfg.qk_norm:
+        q = _qk_head_norm(q, params["q_norm"], cfg.norm_eps)
+        k = _qk_head_norm(k, params["k_norm"], cfg.norm_eps)
+
+    if positions is None:
+        positions = jnp.arange(T)
+    if use_rope is None:
+        use_rope = x_kv is None          # rope only for self attention
+    if use_rope:
+        q = apply_rope(q.reshape(B, T, kvh * g, hd), positions,
+                       cfg.rope_theta).reshape(B, T, kvh, g, hd)
+        if kv is None:
+            k = apply_rope(k, kv_positions if kv_positions is not None
+                           else positions, cfg.rope_theta)
+
+    if kv is not None:                     # decode against cache
+        k_full, v_full = kv
+        S = k_full.shape[1]
+        pos_k = jnp.arange(S)
+        bias = _mask_bias(jnp.atleast_1d(positions.reshape(-1)), pos_k,
+                          causal=causal, window=window)
+        out = _attn_naive(q, k_full.astype(dtype), v_full.astype(dtype), bias)
+    else:
+        S = src.shape[1]
+        pos_q = positions if positions.ndim == 1 else positions[0]
+        pos_k = (kv_positions if kv_positions is not None else
+                 (jnp.arange(S) if x_kv is not None else pos_q))
+        if impl == "flash" and T > 1:
+            out = _attn_flash(q, k, v, pos_q, pos_k, causal=causal,
+                              window=window, q_chunk=q_chunk,
+                              kv_chunk=kv_chunk)
+        else:
+            bias = _mask_bias(pos_q, pos_k, causal=causal, window=window)
+            out = _attn_naive(q, k, v, bias)
+
+    out = out.reshape(B, T, h * hd) @ cast(params["wo"])
+    return out, (k, v)
+
+
+# --------------------------------------------------------------------- #
+# feed-forward
+# --------------------------------------------------------------------- #
+def init_mlp(key, d: int, f: int, kind: str):
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        params = {"wi": _dense_init(ks[0], (d, f)),
+                  "wg": _dense_init(ks[1], (d, f)),
+                  "wo": _dense_init(ks[2], (f, d))}
+        specs = {"wi": ("fsdp", "tp"), "wg": ("fsdp", "tp"),
+                 "wo": ("tp", "fsdp")}
+    else:  # gated gelu
+        params = {"wi": _dense_init(ks[0], (d, f)),
+                  "wg": _dense_init(ks[1], (d, f)),
+                  "wo": _dense_init(ks[2], (f, d))}
+        specs = {"wi": ("fsdp", "tp"), "wg": ("fsdp", "tp"),
+                 "wo": ("tp", "fsdp")}
+    return params, specs
+
+
+def mlp(params, x, kind: str, dtype=DEFAULT_DTYPE):
+    cast = lambda w: w.astype(dtype)
+    gate = x @ cast(params["wg"])
+    act = jax.nn.silu(gate) if kind == "swiglu" else jax.nn.gelu(gate)
+    return (act * (x @ cast(params["wi"]))) @ cast(params["wo"])
+
+
+# --------------------------------------------------------------------- #
+# mixture of experts (expert-parallel over the tp axis)
+# --------------------------------------------------------------------- #
+def init_moe(key, cfg: ModelConfig):
+    e = cfg.moe
+    d = cfg.d_model
+    f = e.d_ff_expert
+    ks = jax.random.split(key, 5)
+    params = {
+        "router": _dense_init(ks[0], (d, e.num_experts)),
+        "wi": _dense_init(ks[1], (e.num_experts, d, f), in_axis=1),
+        "wg": _dense_init(ks[2], (e.num_experts, d, f), in_axis=1),
+        "wo": _dense_init(ks[3], (e.num_experts, f, d), in_axis=1),
+    }
+    specs = {
+        "router": ("fsdp", None),
+        "wi": ("tp", "fsdp", None), "wg": ("tp", "fsdp", None),
+        "wo": ("tp", None, "fsdp"),
+    }
+    if e.shared_expert:
+        p2, s2 = init_mlp(ks[4], d, cfg.d_ff, cfg.mlp_kind)
+        params["shared"] = p2
+        specs["shared"] = s2
+    return params, specs
+
+
+def moe_dense(params, x, cfg: ModelConfig, dtype=DEFAULT_DTYPE):
+    """Reference/smoke MoE: computes every expert densely then mixes by the
+    (top-k masked) gate.  Exact and simple; used on small configs and as
+    the oracle for the dispatched version."""
+    e = cfg.moe
+    cast = lambda w: w.astype(dtype)
+    logits = (x @ cast(params["router"])).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_v, top_i = jax.lax.top_k(probs, e.top_k)
+    onehot = jax.nn.one_hot(top_i, e.num_experts, dtype=jnp.float32)
+    gates = jnp.sum(onehot * top_v[..., None], axis=-2)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    up = jnp.einsum("bsd,edf->ebsf", x, cast(params["wi"]))
+    gt = jnp.einsum("bsd,edf->ebsf", x, cast(params["wg"]))
+    act = jax.nn.silu(gt) if cfg.mlp_kind == "swiglu" else jax.nn.gelu(gt)
+    y = jnp.einsum("ebsf,efd->ebsd", act * up, cast(params["wo"]))
+    out = jnp.einsum("ebsd,bse->bsd", y, gates.astype(dtype))
+    aux = _router_aux(probs, top_i, e.num_experts)
+    if e.shared_expert:
+        out = out + mlp(params["shared"], x, cfg.mlp_kind, dtype)
+    return out.astype(x.dtype), aux
+
+
+def _router_aux(probs, top_i, n_exp):
+    """Switch-style load-balancing loss."""
+    onehot = jax.nn.one_hot(top_i[..., 0], n_exp, dtype=jnp.float32)
+    frac_tokens = jnp.mean(onehot, axis=tuple(range(onehot.ndim - 1)))
+    mean_probs = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    return n_exp * jnp.sum(frac_tokens * mean_probs)
+
+
+def moe_dispatch(params, x, cfg: ModelConfig, rules, dtype=DEFAULT_DTYPE,
+                 psum_bf16: bool = False):
+    """Expert-parallel MoE: experts sharded over the tp axis; activations
+    arrive replicated over tp (Megatron layout), so each device gathers the
+    tokens routed to *its* experts from its own replica — no all_to_all —
+    computes them at capacity C, scatter-adds, and one psum over tp
+    combines.  Active-FLOPs faithful (no dense over-compute).
+    """
+    e = cfg.moe
+    tp_axes = rules.tp
+    tp_size = rules.axis_size(tp_axes)
+    if e.num_experts % tp_size != 0:
+        out, aux = moe_dense(params, x, cfg, dtype)   # fallback (smoke)
+        return out, aux
+    e_per = e.num_experts // tp_size
+    B, S, D = x.shape
+    dp_axes = rules.dp
+    dp_size = rules.axis_size(dp_axes)
+    assert B % dp_size == 0, "batch must divide the data axis"
+    b_local = B // dp_size
+    tokens = b_local * S
+    C = int(math.ceil(e.capacity_factor * tokens * e.top_k / e.num_experts))
+    C = min(C, tokens)
+
+    cast = lambda w: w.astype(dtype)
+    logits = (x @ cast(params["router"])).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_v, top_i = jax.lax.top_k(probs, e.top_k)
+    top_v = top_v / jnp.maximum(jnp.sum(top_v, -1, keepdims=True), 1e-9)
+    aux = _router_aux(probs, top_i, e.num_experts)
+
+    dp_spec = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    tp_spec = tp_axes if len(tp_axes) > 1 else tp_axes[0]
+
+    assert len(tp_axes) == 1, "expert parallelism expects a single tp axis"
+
+    def body(xb, ti, tv, wi, wg, wo):
+        # xb: (b_local, S, D) replicated over tp; wi/wg/wo: local experts
+        xt = xb.reshape(tokens, D)
+        ti = ti.reshape(tokens, e.top_k)
+        tv = tv.reshape(tokens, e.top_k)
+        tp_idx = jax.lax.axis_index(tp_axes[0])
+        out = jnp.zeros((tokens, D), jnp.float32)
+        for le in range(e_per):
+            ge = tp_idx * e_per + le
+            sel = jnp.any(ti == ge, axis=-1)
+            gate = jnp.sum(jnp.where(ti == ge, tv, 0.0), axis=-1)
+            # capacity-C gather of selected tokens (drop overflow)
+            rank = jnp.cumsum(sel) - 1
+            keep = sel & (rank < C)
+            slot = jnp.where(keep, rank, C)
+            buf = jnp.zeros((C + 1, D), dtype)
+            buf = buf.at[slot].add(xt.astype(dtype))
+            xe = buf[:C]
+            up = xe @ cast(wi[le])
+            gt = xe @ cast(wg[le])
+            act = jax.nn.silu(gt) if cfg.mlp_kind == "swiglu" else jax.nn.gelu(gt)
+            ye = (act * up) @ cast(wo[le])                     # (C, D)
+            # scatter back: token slots -> token rows
+            back = jnp.zeros((tokens, D), jnp.float32)
+            src_rows = jnp.where(keep, slot, C)
+            ye_pad = jnp.concatenate([ye, jnp.zeros((1, D), ye.dtype)], 0)
+            back = ye_pad[src_rows].astype(jnp.float32) * keep[:, None]
+            out = out + back * gate[:, None]
+        if psum_bf16:
+            # local accumulation stays f32; only the cross-shard reduction
+            # is bf16 (each token sums <= top_k non-zero contributions, so
+            # the rounding is one bf16 quantisation per expert term)
+            out = jax.lax.psum(out.astype(jnp.bfloat16), tp_axes)
+        else:
+            out = jax.lax.psum(out, tp_axes)
+        return out.reshape(b_local, S, D).astype(xb.dtype)
+
+    in_specs = (PS(dp_spec), PS(dp_spec), PS(dp_spec),
+                PS(tp_spec), PS(tp_spec), PS(tp_spec))
+    y = jax.shard_map(
+        body, mesh=rules.mesh,
+        in_specs=in_specs, out_specs=PS(dp_spec),
+        check_vma=False,
+    )(x, top_i, top_v, params["wi"], params["wg"], params["wo"])
+    if e.shared_expert:
+        y = y + mlp(params["shared"], x, cfg.mlp_kind, dtype)
+    return y, aux
+
+
+# --------------------------------------------------------------------- #
+# RG-LRU recurrent block (recurrentgemma / Griffin)
+# --------------------------------------------------------------------- #
+def init_rglru(key, cfg: ModelConfig):
+    d = cfg.d_model
+    w = cfg.recurrent.lru_width or d
+    dc = cfg.recurrent.d_conv
+    ks = jax.random.split(key, 6)
+    params = {
+        "w_in": _dense_init(ks[0], (d, w)),
+        "w_gate": _dense_init(ks[1], (d, w)),
+        "conv": _dense_init(ks[2], (dc, w)) * 0.1,
+        "lam": jnp.full((w,), 4.0, jnp.float32),   # sigma(4)=0.982 slow decay
+        "w_ig": jnp.ones((w,), jnp.float32) * 0.5,  # diagonal input gate
+        "w_rg": jnp.ones((w,), jnp.float32) * 0.5,  # diagonal recurrence gate
+        "w_out": _dense_init(ks[5], (w, d)),
+    }
+    specs = {"w_in": ("fsdp", "tp"), "w_gate": ("fsdp", "tp"),
+             "conv": (None, "tp"), "lam": ("tp",), "w_ig": ("tp",),
+             "w_rg": ("tp",), "w_out": ("tp", "fsdp")}
+    return params, specs
+
+
+_RGLRU_C = 8.0
+
+
+def _rglru_coeffs(params, xw, dtype):
+    """a_t, b_t of h_t = a_t h + b_t from the conv output xw (B, T, W)."""
+    xf = xw.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf * params["w_rg"])
+    i = jax.nn.sigmoid(xf * params["w_ig"])
+    log_a = -_RGLRU_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    return a, b
+
+
+def _linear_scan_chunked(a, b, h0, chunk: int):
+    """h_t = a_t * h_{t-1} + b_t along axis 1, chunked associative scan.
+
+    a, b: (B, T, W) f32; h0: (B, W).  Returns (h_all (B,T,W), h_last).
+    Chunking bounds live memory to O(B * chunk * W) — the same round/L
+    blocking as the paper's lattice rounds (DESIGN.md §2/§4).
+    """
+    B, T, W = a.shape
+    chunk = min(chunk, T)
+    assert T % chunk == 0
+    nc = T // chunk
+    ar = a.reshape(B, nc, chunk, W).transpose(1, 0, 2, 3)
+    br = b.reshape(B, nc, chunk, W).transpose(1, 0, 2, 3)
+
+    def step(h, ab):
+        ac, bc = ab
+
+        def comb(l, r):
+            al, bl = l
+            ar_, br_ = r
+            return al * ar_, bl * ar_ + br_
+
+        aa, bb = jax.lax.associative_scan(comb, (ac, bc), axis=1)
+        h_all = aa * h[:, None, :] + bb
+        return h_all[:, -1, :], h_all
+
+    h_last, h_seq = jax.lax.scan(step, h0, (ar, br))
+    h_seq = h_seq.transpose(1, 0, 2, 3).reshape(B, T, W)
+    return h_seq, h_last
+
+
+def rglru_block(params, x, cfg: ModelConfig, *, state=None, chunk: int = 1024,
+                dtype=DEFAULT_DTYPE):
+    """Returns (out, new_state); state = (conv_state, h) for decode."""
+    cast = lambda w: w.astype(dtype)
+    B, T, _ = x.shape
+    w = cfg.recurrent.lru_width or cfg.d_model
+    dc = cfg.recurrent.d_conv
+    xb = x @ cast(params["w_in"])                      # (B, T, W)
+    gate = x @ cast(params["w_gate"])
+    conv_w = cast(params["conv"])                      # (dc, W)
+    if state is None:
+        conv_state = jnp.zeros((B, dc - 1, w), dtype)
+        h0 = jnp.zeros((B, w), jnp.float32)
+    else:
+        conv_state, h0 = state
+    xpad = jnp.concatenate([conv_state, xb], axis=1)
+    xc = sum(xpad[:, i:i + T, :] * conv_w[i] for i in range(dc))
+    new_conv_state = xpad[:, -(dc - 1):, :] if dc > 1 else conv_state
+    a, b = _rglru_coeffs(params, xc, dtype)
+    if T == 1:
+        h = a[:, 0] * h0 + b[:, 0]
+        h_seq = h[:, None, :]
+        h_last = h
+    else:
+        h_seq, h_last = _linear_scan_chunked(a, b, h0, chunk)
+    out = (h_seq.astype(dtype) * jax.nn.gelu(gate)) @ cast(params["w_out"])
+    return out, (new_conv_state, h_last)
+
+
+# --------------------------------------------------------------------- #
+# Mamba-1 selective SSM block (falcon-mamba)
+# --------------------------------------------------------------------- #
+def init_mamba(key, cfg: ModelConfig):
+    d = cfg.d_model
+    s = cfg.ssm
+    di = s.expand * d
+    ds = s.d_state
+    dtr = s.dt_rank or -(-d // 16)
+    ks = jax.random.split(key, 6)
+    params = {
+        "in_proj": _dense_init(ks[0], (d, 2 * di)),
+        "conv": _dense_init(ks[1], (s.d_conv, di)) * 0.1,
+        "x_proj": _dense_init(ks[2], (di, dtr + 2 * ds)),
+        "dt_proj": _dense_init(ks[3], (dtr, di)),
+        "dt_bias": jnp.zeros((di,), jnp.float32) + math.log(math.e - 1.0),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32),
+                                  (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": _dense_init(ks[5], (di, d)),
+    }
+    specs = {"in_proj": ("fsdp", "tp"), "conv": (None, "tp"),
+             "x_proj": ("tp", None), "dt_proj": (None, "tp"),
+             "dt_bias": ("tp",), "A_log": ("tp", None), "D": ("tp",),
+             "out_proj": ("tp", "fsdp")}
+    return params, specs
+
+
+def mamba_block(params, x, cfg: ModelConfig, *, state=None, chunk: int = 512,
+                dtype=DEFAULT_DTYPE):
+    """Returns (out, new_state); state = (conv_state, h (B, di, ds))."""
+    cast = lambda w: w.astype(dtype)
+    B, T, _ = x.shape
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    ds = s.d_state
+    xz = x @ cast(params["in_proj"])
+    xb, z = jnp.split(xz, 2, axis=-1)                   # (B,T,di) each
+    conv_w = cast(params["conv"])
+    if state is None:
+        conv_state = jnp.zeros((B, s.d_conv - 1, di), dtype)
+        h0 = jnp.zeros((B, di, ds), jnp.float32)
+    else:
+        conv_state, h0 = state
+    xpad = jnp.concatenate([conv_state, xb], axis=1)
+    xc = sum(xpad[:, i:i + T, :] * conv_w[i] for i in range(s.d_conv))
+    new_conv_state = xpad[:, -(s.d_conv - 1):, :]
+    xc = jax.nn.silu(xc)
+
+    proj = xc @ cast(params["x_proj"])                  # (B,T,dtr+2ds)
+    dtr = params["dt_proj"].shape[0]
+    dt, Bc, Cc = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    delta = jax.nn.softplus((dt @ cast(params["dt_proj"])).astype(jnp.float32)
+                            + params["dt_bias"])       # (B,T,di)
+    A = -jnp.exp(params["A_log"])                      # (di, ds)
+    a = jnp.exp(delta[..., None] * A)                  # (B,T,di,ds)
+    bx = (delta * xc.astype(jnp.float32))[..., None] * \
+        Bc.astype(jnp.float32)[:, :, None, :]          # (B,T,di,ds)
+
+    if T == 1:
+        h = a[:, 0] * h0 + bx[:, 0]
+        y = jnp.einsum("bds,bs->bd", h, Cc[:, 0].astype(jnp.float32))[:, None]
+        h_last = h
+    else:
+        af = a.reshape(B, T, di * ds)
+        bf = bx.reshape(B, T, di * ds)
+        h_seq, h_last = _linear_scan_chunked(af, bf, h0.reshape(B, di * ds),
+                                             chunk)
+        h_seq = h_seq.reshape(B, T, di, ds)
+        h_last = h_last.reshape(B, di, ds)
+        y = jnp.einsum("btds,bts->btd", h_seq, Cc.astype(jnp.float32))
+    y = y + xc.astype(jnp.float32) * params["D"]
+    out = (y.astype(dtype) * jax.nn.silu(z)) @ cast(params["out_proj"])
+    return out, (new_conv_state, h_last)

@@ -1,0 +1,79 @@
+"""Logical->physical sharding rules.
+
+Parameters and activations are annotated with *logical* axes; a
+``MeshRules`` instance maps them onto the production mesh's physical axes
+(single-pod ``(data, model)`` or multi-pod ``(pod, data, model)``):
+
+    fsdp  — parameter / optimizer-state sharding axis (ZeRO-3 style);
+            maps to ("data",) or ("pod", "data")
+    tp    — tensor-parallel axis (heads / ffn / vocab / experts);
+            maps to ("model",)
+    dp    — batch axis for activations; same physical axes as fsdp
+
+Divisibility fallback: a dimension that does not divide by the physical
+axis size is replicated instead (e.g. recurrentgemma's 10 attention heads
+on a 16-way model axis) — recorded so EXPERIMENTS.md can report it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as PS
+
+__all__ = ["MeshRules", "logical"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    mesh: Mesh
+    fsdp: Tuple[str, ...] = ("data",)
+    tp: Tuple[str, ...] = ("model",)
+
+    @property
+    def dp(self) -> Tuple[str, ...]:
+        return self.fsdp
+
+    def axis_size(self, names: Tuple[str, ...]) -> int:
+        n = 1
+        for a in names:
+            n *= self.mesh.shape[a]
+        return n
+
+    def resolve(self, logical_axis: Optional[str], dim_size: int):
+        """Map one logical axis name to mesh axes, with divisibility check."""
+        if logical_axis is None:
+            return None
+        names = {"fsdp": self.fsdp, "dp": self.fsdp, "tp": self.tp}[logical_axis]
+        if not names:                        # axis role absent on this mesh
+            return None
+        if dim_size % self.axis_size(names) != 0:
+            return None                      # replicate (fallback)
+        return names if len(names) > 1 else names[0]
+
+    def spec(self, *axes: Optional[str], shape: Optional[Tuple[int, ...]] = None) -> PS:
+        """Build a PartitionSpec from logical axis names.
+
+        ``shape`` (same length) enables the divisibility fallback; without
+        it the mapping is unchecked.
+        """
+        out = []
+        for i, ax in enumerate(axes):
+            size = shape[i] if shape is not None else 0
+            if ax is None:
+                out.append(None)
+            elif shape is None:
+                names = {"fsdp": self.fsdp, "dp": self.fsdp,
+                         "tp": self.tp}[ax]
+                out.append(names if len(names) > 1 else names[0])
+            else:
+                out.append(self.resolve(ax, size))
+        return PS(*out)
+
+
+def logical(x: jax.Array, rules: MeshRules, *axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint via logical axis names (shape-checked)."""
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(rules.mesh,
+                                      rules.spec(*axes, shape=x.shape)))

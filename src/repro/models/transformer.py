@@ -1,0 +1,584 @@
+"""Model assembly: decoder-only LMs, hybrid stacks, and enc-dec backbones.
+
+A model is ``(params, specs)`` pytrees + pure apply functions.  The layer
+stack is grouped into *pattern repetitions* so homogeneous runs compile as
+one ``lax.scan`` step (critical for 40-64 layer dry-run compile times):
+
+    reps = n_layers // len(block_pattern)  -> scanned super-block
+    rem  = n_layers %  len(block_pattern)  -> unrolled remainder layers
+
+Each super-block applies the config's block pattern in order (e.g.
+recurrentgemma's (rglru, rglru, local)).  Every block is pre-norm with a
+residual; attention-bearing blocks carry an FFN (or MoE) sub-layer, mamba
+blocks are single-mixer (d_ff = 0).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from .sharding import MeshRules, logical
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------- #
+def _init_block(key, cfg: ModelConfig, kind: str, cross: bool = False):
+    """One block's params/specs. kind in {attn, local, rglru, mamba}."""
+    ks = jax.random.split(key, 6)
+    p: Params = {}
+    s: Params = {}
+    p["norm1"], s["norm1"] = L.init_rmsnorm(cfg.d_model)
+    if kind in ("attn", "local"):
+        p["attn"], s["attn"] = L.init_attention(ks[0], cfg)
+    elif kind == "rglru":
+        p["rglru"], s["rglru"] = L.init_rglru(ks[0], cfg)
+    elif kind == "mamba":
+        p["mamba"], s["mamba"] = L.init_mamba(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["norm_x"], s["norm_x"] = L.init_rmsnorm(cfg.d_model)
+        p["cross"], s["cross"] = L.init_attention(ks[1], cfg)
+    if kind != "mamba":
+        p["norm2"], s["norm2"] = L.init_rmsnorm(cfg.d_model)
+        if cfg.moe is not None:
+            p["moe"], s["moe"] = L.init_moe(ks[2], cfg)
+        elif cfg.d_ff:
+            p["mlp"], s["mlp"] = L.init_mlp(ks[2], cfg.d_model, cfg.d_ff,
+                                            cfg.mlp_kind)
+    return p, s
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _stack_specs(spec):
+    return jax.tree.map(lambda s: (None,) + tuple(s), spec,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def init_lm(key, cfg: ModelConfig):
+    """Returns (params, specs) for the full model."""
+    pat = cfg.block_pattern
+    reps = cfg.n_layers // len(pat)
+    rem = cfg.n_layers % len(pat)
+    n_keys = reps * len(pat) + rem + cfg.n_encoder_layers + 8
+    keys = jax.random.split(key, n_keys)
+    ki = iter(range(len(keys)))
+
+    params: Params = {}
+    specs: Params = {}
+    params["embed"] = L._dense_init(keys[next(ki)], (cfg.vocab, cfg.d_model))
+    specs["embed"] = ("tp", "fsdp")
+
+    cross = cfg.n_encoder_layers > 0
+
+    def make_stack(n_reps, with_cross):
+        ps, ss = [], []
+        for _ in range(n_reps):
+            pp, sp = {}, {}
+            for j, kind in enumerate(pat):
+                pp[f"b{j}"], sp[f"b{j}"] = _init_block(
+                    keys[next(ki)], cfg, kind, cross=with_cross)
+            ps.append(pp)
+            ss.append(sp)
+        return (_stack(ps) if n_reps > 1 else ps[0],
+                _stack_specs(ss[0]) if n_reps > 1 else ss[0])
+
+    if reps > 0:
+        params["scan"], specs["scan"] = make_stack(reps, cross)
+    for r in range(rem):
+        kind = pat[r % len(pat)]
+        params[f"rem{r}"], specs[f"rem{r}"] = _init_block(
+            keys[next(ki)], cfg, kind, cross=cross)
+
+    if cfg.n_encoder_layers:
+        enc_reps = cfg.n_encoder_layers // len(pat)
+        pe, se = [], []
+        for _ in range(enc_reps):
+            pp, sp = {}, {}
+            for j, kind in enumerate(pat):
+                pp[f"b{j}"], sp[f"b{j}"] = _init_block(keys[next(ki)], cfg, kind)
+            pe.append(pp)
+            se.append(sp)
+        params["enc_scan"] = _stack(pe) if enc_reps > 1 else pe[0]
+        specs["enc_scan"] = _stack_specs(se[0]) if enc_reps > 1 else se[0]
+        params["enc_norm"], specs["enc_norm"] = L.init_rmsnorm(cfg.d_model)
+
+    params["final_norm"], specs["final_norm"] = L.init_rmsnorm(cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L._dense_init(keys[next(ki)], (cfg.d_model, cfg.vocab))
+        specs["lm_head"] = ("fsdp", "tp")
+    return params, specs
+
+
+# --------------------------------------------------------------------- #
+# block application
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class RunCfg:
+    impl: str = "naive"            # attention impl: naive | flash
+    dtype: Any = L.DEFAULT_DTYPE
+    remat: str = "none"            # none | full | dots
+    scan_chunk: int = 1024         # linear-recurrence chunk length
+    moe_impl: str = "dense"        # dense | dispatch
+    unroll: bool = False           # unroll layer scans (cost calibration:
+                                   # XLA cost_analysis counts loop bodies
+                                   # once, so rooflines are extracted from
+                                   # unrolled truncated configs)
+    attn_q_chunk: int = 1024       # flash attention tile sizes; calibration
+    attn_kv_chunk: int = 1024      # sets these to the full sequence so the
+                                   # attention loop collapses to one body
+    moe_psum_bf16: bool = False    # bf16 cross-shard MoE combine (§Perf)
+
+
+def _apply_block(p, x, cfg: ModelConfig, kind: str, run: RunCfg,
+                 rules: Optional[MeshRules], *, positions, causal=True,
+                 enc_out=None, state=None):
+    """Pre-norm block (train/prefill path). Returns (x, state, kv, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    window = cfg.local_window if kind == "local" else None
+    new_state, new_kv = state, None
+    if kind in ("attn", "local"):
+        out, (k, v) = L.attention(
+            p["attn"], h, cfg, positions=positions, causal=causal,
+            window=window, impl=run.impl, dtype=run.dtype,
+            q_chunk=run.attn_q_chunk, kv_chunk=run.attn_kv_chunk)
+        new_kv = (k, v)
+    elif kind == "rglru":
+        out, new_state = L.rglru_block(p["rglru"], h, cfg, state=state,
+                                       chunk=run.scan_chunk, dtype=run.dtype)
+    elif kind == "mamba":
+        out, new_state = L.mamba_block(p["mamba"], h, cfg, state=state,
+                                       chunk=run.scan_chunk, dtype=run.dtype)
+    x = x + out
+    if enc_out is not None:
+        hx = L.rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        out, _ = L.attention(p["cross"], hx, cfg, x_kv=enc_out,
+                             positions=positions, causal=False,
+                             impl=run.impl, dtype=run.dtype,
+                             q_chunk=run.attn_q_chunk,
+                             kv_chunk=run.attn_kv_chunk)
+        x = x + out
+    if kind != "mamba":
+        h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if cfg.moe is not None:
+            if run.moe_impl == "dispatch" and rules is not None:
+                mo, aux = L.moe_dispatch(p["moe"], h2, cfg, rules, run.dtype,
+                                         psum_bf16=run.moe_psum_bf16)
+            else:
+                mo, aux = L.moe_dense(p["moe"], h2, cfg, run.dtype)
+        elif cfg.d_ff:
+            mo = L.mlp(p["mlp"], h2, cfg.mlp_kind, run.dtype)
+        else:
+            mo = jnp.zeros_like(x)
+        x = x + mo
+    if rules is not None:
+        x = logical(x, rules, "dp", None, None)
+    return x, new_state, new_kv, aux
+
+
+def _super_block(pp, x, cfg, run, rules, *, positions, causal, enc_out,
+                 states, decode=False):
+    """Apply the whole block pattern once. states: per-sub-block pytrees."""
+    new_states = []
+    new_kvs = []
+    aux_total = jnp.zeros((), jnp.float32)
+    for j, kind in enumerate(cfg.block_pattern):
+        st = states[j] if states is not None else None
+        x, ns, nkv, aux = _apply_block(
+            pp[f"b{j}"], x, cfg, kind, run, rules, positions=positions,
+            causal=causal, enc_out=enc_out, state=st)
+        new_states.append(ns)
+        new_kvs.append(nkv)
+        aux_total = aux_total + aux
+    return x, new_states, new_kvs, aux_total
+
+
+def _maybe_remat(fn, run: RunCfg):
+    if run.remat == "none":
+        return fn
+    if run.remat == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+# --------------------------------------------------------------------- #
+# forward (train / prefill)
+# --------------------------------------------------------------------- #
+def embed_tokens(params, tokens, cfg: ModelConfig, run: RunCfg,
+                 rules: Optional[MeshRules]):
+    emb = params["embed"].astype(run.dtype)
+    x = emb[tokens]
+    if rules is not None:
+        x = logical(x, rules, "dp", None, None)
+    return x
+
+
+def _run_stack(params, x, cfg: ModelConfig, run: RunCfg, rules, *,
+               positions, causal=True, enc_out=None, prefix=""):
+    """Scan + remainder over the layer stack.
+
+    Returns (x, aux, groups) where groups is a dict mirroring the param
+    grouping: {"scan": (kvs, states), "rem{r}": (kv, state)} — consumed by
+    :func:`prefill` to build a decode cache.
+    """
+    pat = cfg.block_pattern
+    n_layers = cfg.n_encoder_layers if prefix == "enc_" else cfg.n_layers
+    reps = n_layers // len(pat)
+    rem = n_layers % len(pat)
+    aux_total = jnp.zeros((), jnp.float32)
+    groups = {}
+
+    scan_key = prefix + "scan"
+    if reps == 1:
+        x, states, kv, aux = _super_block(params[scan_key], x, cfg, run, rules,
+                                          positions=positions, causal=causal,
+                                          enc_out=enc_out, states=None)
+        aux_total += aux
+        groups["scan"] = (kv, states)
+    elif reps > 1:
+        def body(carry, pp):
+            x, aux = carry
+            x, states, kv, a = _super_block(pp, x, cfg, run, rules,
+                                            positions=positions, causal=causal,
+                                            enc_out=enc_out, states=None)
+            return (x, aux + a), (kv, states)
+        body = _maybe_remat(body, run)
+        (x, aux_total), (kv_stack, state_stack) = jax.lax.scan(
+            body, (x, aux_total), params[scan_key],
+            unroll=reps if run.unroll else 1)
+        groups["scan"] = (kv_stack, state_stack)
+    for r in range(rem):
+        kind = pat[r % len(pat)]
+        x, st, nkv, aux = _apply_block(
+            params[prefix + f"rem{r}"], x, cfg, kind, run, rules,
+            positions=positions, causal=causal, enc_out=enc_out, state=None)
+        aux_total += aux
+        groups[f"rem{r}"] = ([nkv], [st])
+    return x, aux_total, groups
+
+
+def lm_loss(params, batch, cfg: ModelConfig, run: RunCfg,
+            rules: Optional[MeshRules] = None):
+    """Causal-LM (or enc-dec) cross entropy. batch: tokens/targets (+ enc)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.arange(S)
+
+    enc_out = None
+    if cfg.n_encoder_layers:
+        if cfg.frontend == "audio_stub":
+            xe = batch["enc_embeds"].astype(run.dtype)   # (B, S_enc, D)
+        else:
+            xe = embed_tokens(params, batch["enc_tokens"], cfg, run, rules)
+        pe = jnp.arange(xe.shape[1])
+        xe, _, _ = _run_stack(params, xe, cfg, run, rules, positions=pe,
+                              causal=False, prefix="enc_")
+        enc_out = L.rmsnorm(params["enc_norm"], xe, cfg.norm_eps)
+
+    x = embed_tokens(params, tokens, cfg, run, rules)
+    x, aux, _ = _run_stack(params, x, cfg, run, rules, positions=positions,
+                           causal=True, enc_out=enc_out)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head.astype(run.dtype)
+    if rules is not None:
+        logits = logical(logits, rules, "dp", None, "tp")
+    logits = logits.astype(jnp.float32)
+    targets = batch["targets"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, cfg.vocab, dtype=jnp.float32)
+    true_logit = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    mask = batch.get("mask", jnp.ones_like(targets, jnp.float32))
+    nll = (lse - true_logit) * mask
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    metrics = {"loss": loss, "aux_loss": aux,
+               "tokens": jnp.sum(mask)}
+    return loss + 0.01 * aux, metrics
+
+
+# --------------------------------------------------------------------- #
+# decode (one token against a KV cache / recurrent state)
+# --------------------------------------------------------------------- #
+def init_cache_block(cfg: ModelConfig, kind: str, B: int, max_len: int,
+                     dtype, cross_len: int = 0):
+    hd = cfg.resolved_head_dim
+    kvh = cfg.n_kv_heads
+    c: Dict[str, Any] = {}
+    if kind in ("attn", "local"):
+        c["k"] = jnp.zeros((B, max_len, kvh, hd), dtype)
+        c["v"] = jnp.zeros((B, max_len, kvh, hd), dtype)
+    elif kind == "rglru":
+        w = cfg.recurrent.lru_width or cfg.d_model
+        c["conv"] = jnp.zeros((B, cfg.recurrent.d_conv - 1, w), dtype)
+        c["h"] = jnp.zeros((B, w), jnp.float32)
+    elif kind == "mamba":
+        di = cfg.ssm.expand * cfg.d_model
+        c["conv"] = jnp.zeros((B, cfg.ssm.d_conv - 1, di), dtype)
+        c["h"] = jnp.zeros((B, di, cfg.ssm.d_state), jnp.float32)
+    if cross_len:
+        c["xk"] = jnp.zeros((B, cross_len, kvh, hd), dtype)
+        c["xv"] = jnp.zeros((B, cross_len, kvh, hd), dtype)
+    return c
+
+
+def init_cache(cfg: ModelConfig, B: int, max_len: int, dtype=L.DEFAULT_DTYPE,
+               cross_len: int = 0):
+    """Cache pytree mirroring the stack grouping of init_lm."""
+    pat = cfg.block_pattern
+    reps = cfg.n_layers // len(pat)
+    rem = cfg.n_layers % len(pat)
+    mk = lambda kind: init_cache_block(cfg, kind, B, max_len, dtype, cross_len)
+    cache: Dict[str, Any] = {}
+    if reps >= 1:
+        one = {f"b{j}": mk(k) for j, k in enumerate(pat)}
+        if reps > 1:
+            cache["scan"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (reps,) + a.shape), one)
+        else:
+            cache["scan"] = one
+    for r in range(rem):
+        cache[f"rem{r}"] = mk(pat[r % len(pat)])
+    return cache
+
+
+def _decode_block(p, c, x, cfg: ModelConfig, kind: str, run: RunCfg,
+                  rules, *, pos, enc_out_used: bool):
+    """One block, T = 1, against its cache slice. Returns (x, new_cache)."""
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    window = cfg.local_window if kind == "local" else None
+    newc = dict(c)
+    B = x.shape[0]
+    positions = jnp.full((1,), pos)
+    if kind in ("attn", "local"):
+        hd = cfg.resolved_head_dim
+        kvh = cfg.n_kv_heads
+        g = cfg.n_heads // kvh
+        cast = lambda w_: w_.astype(run.dtype)
+        q = h @ cast(p["attn"]["wq"])
+        k = h @ cast(p["attn"]["wk"])
+        v = h @ cast(p["attn"]["wv"])
+        if cfg.qkv_bias:
+            q = q + cast(p["attn"]["bq"])
+            k = k + cast(p["attn"]["bk"])
+            v = v + cast(p["attn"]["bv"])
+        q = q.reshape(B, 1, kvh, g, hd)
+        k = k.reshape(B, 1, kvh, hd)
+        v = v.reshape(B, 1, kvh, hd)
+        if cfg.qk_norm:
+            q = L._qk_head_norm(q, p["attn"]["q_norm"], cfg.norm_eps)
+            k = L._qk_head_norm(k, p["attn"]["k_norm"], cfg.norm_eps)
+        q = L.apply_rope(q.reshape(B, 1, kvh * g, hd), positions,
+                         cfg.rope_theta).reshape(B, 1, kvh, g, hd)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        ck = jax.lax.dynamic_update_slice_in_dim(c["k"], k, pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(c["v"], v, pos, axis=1)
+        newc["k"], newc["v"] = ck, cv
+        S = ck.shape[1]
+        pos_k = jnp.arange(S)
+        live = pos_k <= pos
+        if window is not None:
+            live &= pos - pos_k < window
+        bias = jnp.where(live, 0.0, -jnp.inf).astype(jnp.float32)[None, :]
+        out = L._attn_naive(q, ck, cv, bias)
+        out = out.reshape(B, 1, cfg.n_heads * hd) @ cast(p["attn"]["wo"])
+    elif kind == "rglru":
+        out, (conv, hh) = L.rglru_block(p["rglru"], h, cfg,
+                                        state=(c["conv"], c["h"]),
+                                        dtype=run.dtype)
+        newc["conv"], newc["h"] = conv, hh
+    elif kind == "mamba":
+        out, (conv, hh) = L.mamba_block(p["mamba"], h, cfg,
+                                        state=(c["conv"], c["h"]),
+                                        dtype=run.dtype)
+        newc["conv"], newc["h"] = conv, hh
+    x = x + out
+    if enc_out_used:
+        hx = L.rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        qx, _ = L.attention(p["cross"], hx, cfg,
+                            kv=(c["xk"], c["xv"]),
+                            positions=positions, causal=False,
+                            impl="naive", dtype=run.dtype,
+                            use_rope=False)
+        x = x + qx
+    if kind != "mamba":
+        h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if cfg.moe is not None:
+            mo, _ = L.moe_dense(p["moe"], h2, cfg, run.dtype)
+        elif cfg.d_ff:
+            mo = L.mlp(p["mlp"], h2, cfg.mlp_kind, run.dtype)
+        else:
+            mo = jnp.zeros_like(x)
+        x = x + mo
+    if rules is not None:
+        x = logical(x, rules, "dp", None, None)
+    return x, newc
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig, run: RunCfg,
+                rules: Optional[MeshRules] = None):
+    """One decoding step. tokens: (B, 1) int32; pos: scalar int32.
+
+    Returns (logits (B, 1, V), new_cache).  For enc-dec models the cross
+    K/V live in the cache (filled at prefill from the encoder output).
+    """
+    pat = cfg.block_pattern
+    reps = cfg.n_layers // len(pat)
+    rem = cfg.n_layers % len(pat)
+    cross = cfg.n_encoder_layers > 0
+    x = embed_tokens(params, tokens, cfg, run, rules)
+
+    def super_dec(pp, cc, x):
+        newc = dict(cc)
+        for j, kind in enumerate(pat):
+            x, nc = _decode_block(pp[f"b{j}"], cc[f"b{j}"], x, cfg, kind, run,
+                                  rules, pos=pos, enc_out_used=cross)
+            newc[f"b{j}"] = nc
+        return x, newc
+
+    if reps == 1:
+        x, cache_scan = super_dec(params["scan"], cache["scan"], x)
+        cache = dict(cache, scan=cache_scan)
+    elif reps > 1:
+        def body(x, pc):
+            pp, cc = pc
+            x, nc = super_dec(pp, cc, x)
+            return x, nc
+        x, new_scan = jax.lax.scan(body, x, (params["scan"], cache["scan"]),
+                                   unroll=reps if run.unroll else 1)
+        cache = dict(cache, scan=new_scan)
+    for r in range(rem):
+        kind = pat[r % len(pat)]
+        x, nc = _decode_block(params[f"rem{r}"], cache[f"rem{r}"], x, cfg,
+                              kind, run, rules, pos=pos, enc_out_used=cross)
+        cache = dict(cache, **{f"rem{r}": nc})
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head.astype(run.dtype)
+    if rules is not None:
+        logits = logical(logits, rules, "dp", None, "tp")
+    return logits.astype(jnp.float32), cache
+
+
+# --------------------------------------------------------------------- #
+# prefill: full forward that returns last-token logits + a decode cache
+# --------------------------------------------------------------------- #
+def prefill(params, batch, cfg: ModelConfig, run: RunCfg,
+            rules: Optional[MeshRules] = None, max_len: Optional[int] = None):
+    """Serve-side prefill. batch: tokens (B, S) (+ enc inputs for enc-dec).
+
+    Returns (last_logits (B, V), cache) with the KV cache filled for
+    positions [0, S) (cache length = max_len or S).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    max_len = max_len or S
+    positions = jnp.arange(S)
+    cross_len = 0
+
+    enc_out = None
+    if cfg.n_encoder_layers:
+        if cfg.frontend == "audio_stub":
+            xe = batch["enc_embeds"].astype(run.dtype)
+        else:
+            xe = embed_tokens(params, batch["enc_tokens"], cfg, run, rules)
+        pe = jnp.arange(xe.shape[1])
+        xe, _, _ = _run_stack(params, xe, cfg, run, rules, positions=pe,
+                              causal=False, prefix="enc_")
+        enc_out = L.rmsnorm(params["enc_norm"], xe, cfg.norm_eps)
+        cross_len = enc_out.shape[1]
+
+    x = embed_tokens(params, tokens, cfg, run, rules)
+    x, _, groups = _run_stack(params, x, cfg, run, rules, positions=positions,
+                              causal=True, enc_out=enc_out)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    last_logits = (x[:, -1] @ head.astype(run.dtype)).astype(jnp.float32)
+
+    # ---- assemble the decode cache ------------------------------------
+    cache = init_cache(cfg, B, max_len, run.dtype, cross_len=cross_len)
+
+    def fill_kv(c, kv, state, stacked: bool):
+        newc = dict(c)
+        if kv is not None:
+            k, v = kv
+            if stacked:
+                newc["k"] = jax.lax.dynamic_update_slice(
+                    c["k"], k.astype(c["k"].dtype), (0, 0, 0, 0, 0))
+                newc["v"] = jax.lax.dynamic_update_slice(
+                    c["v"], v.astype(c["v"].dtype), (0, 0, 0, 0, 0))
+            else:
+                newc["k"] = jax.lax.dynamic_update_slice(
+                    c["k"], k.astype(c["k"].dtype), (0, 0, 0, 0))
+                newc["v"] = jax.lax.dynamic_update_slice(
+                    c["v"], v.astype(c["v"].dtype), (0, 0, 0, 0))
+        if state is not None:
+            conv, h = state
+            newc["conv"] = conv.astype(c["conv"].dtype)
+            newc["h"] = h
+        if cross_len and enc_out is not None:
+            pass  # filled below (cross kv shared per block)
+        return newc
+
+    pat = cfg.block_pattern
+    reps = cfg.n_layers // len(pat)
+    if reps >= 1:
+        kvs, states = groups["scan"]
+        stacked = reps > 1
+        new_scan = {}
+        for j in range(len(pat)):
+            new_scan[f"b{j}"] = fill_kv(cache["scan"][f"b{j}"], kvs[j],
+                                        states[j], stacked)
+        cache["scan"] = new_scan
+    rem = cfg.n_layers % len(pat)
+    for r in range(rem):
+        kvs, states = groups[f"rem{r}"]
+        cache[f"rem{r}"] = fill_kv(cache[f"rem{r}"], kvs[0], states[0], False)
+
+    # cross-attention K/V (enc-dec): computed once from the encoder output
+    if cross_len:
+        def fill_cross(c, p, stacked: bool):
+            cast = lambda w: w.astype(run.dtype)
+            if stacked:
+                # p["cross"]["wk"]: (reps, D, KVH*hd)
+                xk = jnp.einsum("bsd,rdk->rbsk", enc_out, cast(p["cross"]["wk"]))
+                xv = jnp.einsum("bsd,rdk->rbsk", enc_out, cast(p["cross"]["wv"]))
+                hd = cfg.resolved_head_dim
+                xk = xk.reshape(xk.shape[:3] + (cfg.n_kv_heads, hd))
+                xv = xv.reshape(xv.shape[:3] + (cfg.n_kv_heads, hd))
+            else:
+                xk, _ = None, None
+                kproj = enc_out @ cast(p["cross"]["wk"])
+                vproj = enc_out @ cast(p["cross"]["wv"])
+                hd = cfg.resolved_head_dim
+                xk = kproj.reshape(B, cross_len, cfg.n_kv_heads, hd)
+                xv = vproj.reshape(B, cross_len, cfg.n_kv_heads, hd)
+            c = dict(c)
+            c["xk"], c["xv"] = xk.astype(run.dtype), xv.astype(run.dtype)
+            return c
+
+        if reps >= 1:
+            stacked = reps > 1
+            new_scan = dict(cache["scan"])
+            for j in range(len(pat)):
+                pj = params["scan"][f"b{j}"]
+                new_scan[f"b{j}"] = fill_cross(new_scan[f"b{j}"], pj, stacked)
+            cache["scan"] = new_scan
+        for r in range(rem):
+            cache[f"rem{r}"] = fill_cross(cache[f"rem{r}"],
+                                          params[f"rem{r}"], False)
+    return last_logits, cache

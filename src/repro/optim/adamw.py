@@ -1,0 +1,101 @@
+"""AdamW with fp32 state, decoupled weight decay and global-norm clipping.
+
+Written against plain pytrees (no optax dependency in this environment).
+Optimizer state shards exactly like the parameters (same logical specs),
+which is what makes FSDP work: ZeRO-3 = params + m + v all sharded on the
+fsdp axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
+           "global_norm", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    # params with ndim <= 1 (norm scales, biases) skip weight decay
+    decay_min_ndim: int = 2
+    # keep an fp32 master copy when params are stored in bf16 (the
+    # "bf16-params" memory/collective optimisation, EXPERIMENTS.md §Perf)
+    master_fp32: bool = False
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    master: Any = None       # fp32 master params (only when cfg.master_fp32)
+
+
+def adamw_init(params, cfg: Optional["AdamWConfig"] = None) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    master = None
+    if cfg is not None and cfg.master_fp32:
+        master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params),
+                      master=master)
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq, jnp.zeros((), jnp.float32)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, tree), norm
+
+
+def adamw_update(cfg: AdamWConfig, grads, state: AdamWState, params):
+    """Returns (new_params, new_state, metrics).
+
+    With ``cfg.master_fp32`` the update reads/writes the fp32 master in the
+    optimizer state and emits bf16 params — compute layers then all-gather
+    2-byte weights instead of 4-byte (FSDP traffic and HBM both halve).
+    """
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        grads, _ = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = cfg.lr(step) if callable(cfg.lr) else jnp.asarray(cfg.lr, jnp.float32)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    base = state.master if cfg.master_fp32 else params
+
+    def upd(p32, g, m, v, out_dtype):
+        m = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p32.ndim >= cfg.decay_min_ndim and cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p32.astype(jnp.float32)
+        pnew = p32.astype(jnp.float32) - lr * delta
+        return pnew.astype(out_dtype), pnew, m, v
+
+    out = jax.tree.map(
+        lambda p32, p, g, m, v: upd(p32, g, m, v, p.dtype),
+        base, params, grads, state.m, state.v)
+    pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    new_params = pick(0)
+    new_master = pick(1) if cfg.master_fp32 else None
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, AdamWState(step, pick(2), pick(3), new_master), metrics

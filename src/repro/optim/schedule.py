@@ -1,0 +1,37 @@
+"""Learning-rate schedules (warmup + cosine / linear / constant)."""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine", "constant", "warmup_linear"]
+
+
+def constant(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1) -> Callable:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                     0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac) *
+                         0.5 * (1.0 + jnp.cos(math.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos).astype(jnp.float32)
+    return fn
+
+
+def warmup_linear(peak_lr: float, warmup_steps: int, total_steps: int) -> Callable:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                     0.0, 1.0)
+        return jnp.where(step < warmup_steps, warm,
+                         peak_lr * (1.0 - t)).astype(jnp.float32)
+    return fn

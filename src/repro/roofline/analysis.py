@@ -1,0 +1,161 @@
+"""Three-term roofline from the dry-run's compiled artifacts.
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+Methodology (see EXPERIMENTS.md §Roofline):
+
+  * XLA's ``cost_analysis()`` counts each loop body ONCE, so the dry-run
+    records, per cell, two extra truncated lowerings (1 and 2 pattern
+    groups, scans unrolled, single microbatch).  The delta is the exact
+    per-group cost; totals are reconstructed as
+
+        total = n_micro * (fixed + delta * n_groups)        (train)
+        total = fixed + delta * n_groups                    (prefill/decode)
+
+    with fixed = 2*c1 - c2 (embed/head/loss/optimizer paths) and
+    n_groups = n_layers / len(block_pattern) (fractional for remainder
+    layers).  The optimizer update is inside ``fixed`` and so is counted
+    once per microbatch instead of once per step — a <0.5% overcount,
+    noted here and ignored.
+
+  * collective_bytes come from regex-summing operand shapes of every
+    all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute in the optimized per-device HLO, reconstructed
+    through the same calibration.  Per-device wire traffic applies
+    op factors: all-reduce 2x (reduce+broadcast ring), reduce-scatter
+    (n-1)x its (scattered) output, others 1x.
+
+  * the compute term uses the bf16 peak for LM cells; the lattice engine
+    runs f64/f32 (factor applied by its own benchmark).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, Optional
+
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # B/s per chip
+ICI_BW = 50e9                     # B/s per link
+TP_DEGREE = 16                    # model-axis size on the production mesh
+
+__all__ = ["roofline_for_record", "build_table", "CellRoofline"]
+
+
+@dataclasses.dataclass
+class CellRoofline:
+    arch: str
+    shape: str
+    mesh: str
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float            # 6ND (train) / 2ND (inference), global
+    hlo_flops_per_chip: float
+    useful_ratio: float
+    note: str
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.t_compute*1e3:.2f} | "
+                f"{self.t_memory*1e3:.2f} | {self.t_collective*1e3:.2f} | "
+                f"{self.bottleneck} | {self.useful_ratio:.2f} | {self.note} |")
+
+
+def _coll_effective_bytes(by_op: Dict[str, float]) -> float:
+    f = {"all-gather": 1.0, "all-reduce": 2.0,
+         "reduce-scatter": float(TP_DEGREE - 1), "all-to-all": 1.0,
+         "collective-permute": 1.0}
+    return sum(f.get(op, 1.0) * b for op, b in by_op.items())
+
+
+def _reconstruct(rec: dict, key: str, coll: bool = False) -> Optional[float]:
+    """Total per-chip quantity from the g1/g2 calibration."""
+    c1, c2 = rec.get("calib_g1"), rec.get("calib_g2")
+    if not c1 or not c2:
+        return None
+    if coll:
+        v1 = _coll_effective_bytes(c1.get("collective_bytes_by_op", {}))
+        v2 = _coll_effective_bytes(c2.get("collective_bytes_by_op", {}))
+    else:
+        v1, v2 = c1.get(key), c2.get(key)
+    if v1 is None or v2 is None:
+        return None
+    delta = max(v2 - v1, 0.0)
+    fixed = max(v1 - delta, 0.0)
+    total = fixed + delta * rec["n_groups"]
+    if rec["mode"] == "train":
+        total *= rec["n_micro"]
+    return total
+
+
+def _tokens(rec: dict) -> float:
+    from ..configs.base import SHAPES
+    s = SHAPES[rec["shape"]]
+    if rec["mode"] == "decode":
+        return s.global_batch * 1.0
+    return s.global_batch * s.seq_len
+
+
+def roofline_for_record(rec: dict, chips: int = 256) -> Optional[CellRoofline]:
+    if not rec.get("ok"):
+        return None
+    flops = _reconstruct(rec, "flops_per_device")
+    mem = _reconstruct(rec, "bytes_accessed_per_device")
+    coll = _reconstruct(rec, "flops_per_device", coll=True)
+    if flops is None:
+        return None
+    t_c = flops / PEAK_FLOPS_BF16
+    t_m = mem / HBM_BW if mem is not None else float("nan")
+    t_x = coll / ICI_BW if coll is not None else float("nan")
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=lambda k: (terms[k]
+                                           if terms[k] == terms[k] else -1))
+    n = rec["n_params_active"]        # = n_params for dense; 6*N_active*D
+    mult = 6.0 if rec["mode"] == "train" else 2.0
+    model_flops = mult * n * _tokens(rec)
+    useful = model_flops / chips / flops if flops else 0.0
+    note = {
+        "compute": "MXU-bound: raise arithmetic intensity only by cutting "
+                   "recompute (remat policy) or redundant ops",
+        "memory": "HBM-bound: fuse / shrink activation dtype, raise "
+                  "per-chip batch, or cut optimizer-state traffic",
+        "collective": "ICI-bound: bigger per-chip shards (less TP), overlap "
+                      "collectives with compute, or compress gradients",
+    }[bottleneck]
+    return CellRoofline(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        bottleneck=bottleneck, model_flops=model_flops,
+        hlo_flops_per_chip=flops, useful_ratio=useful, note=note)
+
+
+def build_table(results_dir: Path, mesh: str = "16x16",
+                tag: str = "baseline") -> str:
+    rows = ["| arch | shape | t_comp ms | t_mem ms | t_coll ms | bound | "
+            "useful | note |",
+            "|---|---|---|---|---|---|---|---|"]
+    cells = []
+    for f in sorted((results_dir / tag / mesh).glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("skipped"):
+            rows.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                        f"skipped | — | {rec['skipped']} |")
+            continue
+        cr = roofline_for_record(rec)
+        if cr is None:
+            rows.append(f"| {rec.get('arch')} | {rec.get('shape')} | — | — "
+                        f"| — | FAILED | — | {rec.get('error', '?')} |")
+            continue
+        cells.append(cr)
+        rows.append(cr.row())
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import sys
+    base = Path(sys.argv[1]) if len(sys.argv) > 1 else \
+        Path(__file__).resolve().parents[3] / "results"
+    print(build_table(base))

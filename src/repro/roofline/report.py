@@ -1,0 +1,100 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from results/."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .analysis import roofline_for_record
+
+GB = 1024 ** 3
+
+
+def dryrun_table(results: Path, tag: str = "baseline") -> str:
+    rows = ["| arch | shape | mesh | params/dev GB | temp GB | collectives "
+            "(per loop-body occurrence) | compile s |",
+            "|---|---|---|---|---|---|---|"]
+    for mesh in ("16x16", "2x16x16"):
+        d = results / tag / mesh
+        if not d.exists():
+            continue
+        for f in sorted(d.glob("*.json")):
+            r = json.loads(f.read_text())
+            if r.get("skipped"):
+                rows.append(f"| {r['arch']} | {r['shape']} | {mesh} | — | — "
+                            f"| skipped: {r['skipped']} | — |")
+                continue
+            if not r.get("ok"):
+                rows.append(f"| {r['arch']} | {r['shape']} | {mesh} | — | — "
+                            f"| **FAILED** {r.get('error')} | — |")
+                continue
+            m = r["memory_analysis"]
+            arg = (m.get("argument_size_in_bytes") or 0) / GB
+            tmp = (m.get("temp_size_in_bytes") or 0) / GB
+            cc = r["collectives"]["count_by_op"]
+            cstr = " ".join(f"{k}:{v}" for k, v in sorted(cc.items()))
+            rows.append(f"| {r['arch']} | {r['shape']} | {mesh} | {arg:.2f} "
+                        f"| {tmp:.2f} | {cstr} | {r['compile_s']} |")
+    return "\n".join(rows)
+
+
+def roofline_table(results: Path, tag: str = "baseline") -> str:
+    rows = ["| arch | shape | t_comp ms | t_mem ms | t_coll ms | bound | "
+            "MODEL/HLO | roofline frac |",
+            "|---|---|---|---|---|---|---|---|"]
+    d = results / tag / "16x16"
+    for f in sorted(d.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("skipped") or not r.get("ok"):
+            continue
+        cr = roofline_for_record(r)
+        if cr is None:
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"no calibration | — | — |")
+            continue
+        dom = max(cr.t_compute,
+                  cr.t_memory if cr.t_memory == cr.t_memory else 0,
+                  cr.t_collective if cr.t_collective == cr.t_collective else 0)
+        frac = cr.t_compute / dom if dom > 0 else float("nan")
+        rows.append(
+            f"| {cr.arch} | {cr.shape} | {cr.t_compute*1e3:.1f} | "
+            f"{cr.t_memory*1e3:.1f} | {cr.t_collective*1e3:.1f} | "
+            f"{cr.bottleneck} | {cr.useful_ratio:.2f} | {frac:.2f} |")
+    return "\n".join(rows)
+
+
+def perf_compare(results: Path, tags, arch: str, shape: str) -> str:
+    """Side-by-side roofline terms for one cell across optimisation tags."""
+    rows = [f"**{arch} / {shape}**", "",
+            "| tag | t_comp ms | t_mem ms | t_coll ms | bound | dominant Δ |",
+            "|---|---|---|---|---|---|"]
+    prev = None
+    for tag in tags:
+        f = results / tag / "16x16" / f"{arch}__{shape}.json"
+        if not f.exists():
+            rows.append(f"| {tag} | — | — | — | missing | — |")
+            continue
+        r = json.loads(f.read_text())
+        cr = roofline_for_record(r)
+        if cr is None:
+            rows.append(f"| {tag} | — | — | — | no calib | — |")
+            continue
+        dom = {"compute": cr.t_compute, "memory": cr.t_memory,
+               "collective": cr.t_collective}[cr.bottleneck]
+        delta = "" if prev is None else f"{(dom-prev)/prev*100:+.0f}%"
+        prev = dom
+        rows.append(f"| {tag} | {cr.t_compute*1e3:.1f} | {cr.t_memory*1e3:.1f}"
+                    f" | {cr.t_collective*1e3:.1f} | {cr.bottleneck} | "
+                    f"{delta} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import sys
+    base = Path(sys.argv[1]) if len(sys.argv) > 1 else \
+        Path(__file__).resolve().parents[3] / "results"
+    which = sys.argv[2] if len(sys.argv) > 2 else "roofline"
+    tag = sys.argv[3] if len(sys.argv) > 3 else "baseline"
+    if which == "dryrun":
+        print(dryrun_table(base, tag))
+    else:
+        print(roofline_table(base, tag))

@@ -1,0 +1,122 @@
+"""Serving engines.
+
+Two first-class services:
+
+1. ``PricingEngine`` — the paper's workload as a production service: a
+   batched option-pricing desk.  Requests (contract parameter sets) are
+   queued, padded to the compiled contract-batch size, priced with the
+   distributed lattice engine (contracts over the data axis, lattice nodes
+   over the model axis), and answered with (ask, bid).
+
+2. ``LMEngine`` — LM prefill + decode loop with a batched KV cache
+   (the serve path exercised by the decode_32k / long_500k dry-run cells).
+
+Both engines are deliberately synchronous-batched (continuous batching is
+an orchestration layer above the compiled steps and out of scope for the
+dry-run; the hooks — per-slot position/validity — are in place).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core.payoff import american_call, american_put, bull_spread
+
+__all__ = ["PriceRequest", "PricingEngine", "LMEngine"]
+
+
+@dataclasses.dataclass
+class PriceRequest:
+    s0: float
+    sigma: float
+    rate: float
+    maturity: float
+    cost_rate: float
+    payoff: str = "put"
+    strike: float = 100.0
+
+
+class PricingEngine:
+    """Batched ask/bid pricing service on a (data, model) mesh."""
+
+    def __init__(self, mesh, *, n_steps: int, batch: int, capacity: int = 48,
+                 round_depth: int = 8, payoff: str = "put",
+                 strike: float = 100.0, data_axes=("data",)):
+        from ..core.distributed import build_rz_sharded
+        self.batch = batch
+        self.n_steps = n_steps
+        pay = {"put": american_put(strike), "call": american_call(strike),
+               "bull_spread": bull_spread()}[payoff]
+        self._fn = jax.jit(build_rz_sharded(
+            mesh, n_steps=n_steps, payoff=pay, capacity=capacity,
+            round_depth=round_depth, data_axes=data_axes))
+        self._pending: List[Tuple[PriceRequest, int]] = []
+        self._results: Dict[int, Tuple[float, float]] = {}
+        self._next_id = 0
+
+    def submit(self, req: PriceRequest) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self._pending.append((req, rid))
+        return rid
+
+    def flush(self) -> Dict[int, Tuple[float, float]]:
+        """Price all pending requests (padding the final partial batch)."""
+        out: Dict[int, Tuple[float, float]] = {}
+        while self._pending:
+            chunk = self._pending[:self.batch]
+            self._pending = self._pending[self.batch:]
+            pad = self.batch - len(chunk)
+            reqs = [c[0] for c in chunk] + [chunk[-1][0]] * pad
+            arr = lambda f: jnp.asarray([getattr(r, f) for r in reqs],
+                                        jnp.float64)
+            ask, bid, stat = self._fn(arr("s0"), arr("sigma"), arr("rate"),
+                                      arr("maturity"), arr("cost_rate"))
+            ask, bid = np.asarray(ask), np.asarray(bid)
+            for i, (_, rid) in enumerate(chunk):
+                out[rid] = (float(ask[i]), float(bid[i]))
+        self._results.update(out)
+        return out
+
+
+class LMEngine:
+    """Prefill-then-decode engine over a fixed request batch."""
+
+    def __init__(self, params, cfg: ModelConfig, run, *, batch: int,
+                 max_len: int, rules=None):
+        from ..models.transformer import decode_step, init_cache, prefill
+        self.cfg = cfg
+        self.run = run
+        self.batch = batch
+        self.max_len = max_len
+        self.params = params
+        self.rules = rules
+        self._prefill = jax.jit(
+            lambda p, b: prefill(p, b, cfg, run, rules, max_len=max_len))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(p, c, t, pos, cfg, run, rules))
+
+    def generate(self, tokens: np.ndarray, n_new: int,
+                 enc_embeds: Optional[np.ndarray] = None) -> np.ndarray:
+        """Greedy generation. tokens: (B, S0) prompt; returns (B, n_new)."""
+        B, S0 = tokens.shape
+        assert B == self.batch and S0 + n_new <= self.max_len
+        batch = {"tokens": jnp.asarray(tokens, jnp.int32)}
+        if enc_embeds is not None:
+            batch["enc_embeds"] = jnp.asarray(enc_embeds)
+        logits, cache = self._prefill(self.params, batch)
+        outs = []
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        for i in range(n_new):
+            outs.append(np.asarray(tok)[:, 0])
+            logits, cache = self._decode(self.params, cache, tok,
+                                         jnp.int32(S0 + i))
+            tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
+        return np.stack(outs, axis=1)

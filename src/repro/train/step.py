@@ -1,0 +1,88 @@
+"""Train-step factory: grad accumulation, clipping, AdamW, sharding.
+
+``make_train_step`` returns a jit-able ``step(state, batch) -> (state,
+metrics)`` with:
+
+  * microbatched gradient accumulation (``lax.scan`` over the leading
+    microbatch axis — batch arrives as (n_micro, B/n_micro, S)),
+  * loss in f32, params in f32, compute in the RunCfg dtype (bf16),
+  * optimizer state sharded like params (ZeRO-3 on the fsdp axis),
+  * donated state for in-place buffer reuse.
+
+``TrainState`` is a plain NamedTuple pytree so checkpointing is trivial.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.sharding import MeshRules
+from ..models.transformer import RunCfg, init_lm, lm_loss
+from ..optim.adamw import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+__all__ = ["TrainState", "make_train_step", "init_train_state",
+           "state_specs", "batch_specs"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def init_train_state(key, cfg: ModelConfig, param_dtype=None,
+                     opt_cfg: Optional[AdamWConfig] = None):
+    """param_dtype=bf16 stores compute params in bf16 with an fp32 master
+    inside the optimizer state (requires opt_cfg.master_fp32)."""
+    params, specs = init_lm(key, cfg)
+    if param_dtype is not None:
+        params = jax.tree.map(lambda p: p.astype(param_dtype), params)
+    return TrainState(params, adamw_init(params, opt_cfg)), specs
+
+
+def state_specs(specs, master_fp32: bool = False) -> TrainState:
+    """Optimizer state shards exactly like params; step is replicated."""
+    return TrainState(
+        params=specs,
+        opt=AdamWState(step=(), m=specs, v=specs,
+                       master=specs if master_fp32 else None))
+
+
+def make_train_step(cfg: ModelConfig, run: RunCfg, opt_cfg: AdamWConfig,
+                    rules: Optional[MeshRules] = None):
+    """batch: dict of arrays with leading (n_micro, local_batch) axes."""
+
+    def loss_fn(params, mb):
+        return lm_loss(params, mb, cfg, run, rules)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(state: TrainState, batch):
+        n_micro = jax.tree.leaves(batch)[0].shape[0]
+
+        if n_micro == 1:
+            mb = jax.tree.map(lambda a: a[0], batch)
+            (lsum, _), grads = grad_fn(state.params, mb)
+        else:
+            def micro(carry, mb):
+                gsum, lsum = carry
+                (loss, metrics), g = grad_fn(state.params, mb)
+                gsum = jax.tree.map(
+                    jnp.add, gsum,
+                    jax.tree.map(lambda x: x.astype(jnp.float32), g))
+                return (gsum, lsum + loss), metrics["tokens"]
+
+            gzero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 state.params)
+            (gsum, lsum), _ = jax.lax.scan(
+                micro, (gzero, jnp.zeros((), jnp.float32)), batch)
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+        params, opt, om = adamw_update(opt_cfg, grads, state.opt, state.params)
+        metrics = {"loss": lsum / n_micro, **om, "step": opt.step}
+        return TrainState(params, opt), metrics
+
+    return step

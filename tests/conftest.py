@@ -1,0 +1,21 @@
+"""Shared test config.
+
+NOTE: no XLA_FLAGS device-count override here — smoke tests and benches
+must see exactly one (real) device.  Multi-device tests spawn subprocesses
+with their own XLA_FLAGS (see test_distributed.py).
+"""
+import os
+import sys
+
+# pricing tests need x64; importing repro.core sets the flag before any
+# other jax use in the test process.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import repro.core  # noqa: E402,F401
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,46 @@
+"""Data pipeline: determinism, resume, memmap, prefetch."""
+import numpy as np
+
+from repro.data.pipeline import (MemmapSource, Prefetcher, SyntheticSource,
+                                 make_batches)
+
+
+def test_synthetic_deterministic_by_step():
+    s = SyntheticSource(vocab=100, global_batch=4, seq_len=16, n_micro=2)
+    a = s.batch(7)
+    b = s.batch(7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = s.batch(8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    assert a["tokens"].shape == (2, 2, 16)
+    # next-token targets
+    np.testing.assert_array_equal(a["tokens"][..., 1:], a["targets"][..., :-1])
+
+
+def test_memmap_source(tmp_path):
+    data = np.arange(10_000, dtype=np.int32) % 50
+    path = tmp_path / "toks.bin"
+    data.tofile(path)
+    s = MemmapSource(str(path), vocab=50, global_batch=2, seq_len=8)
+    b0 = s.batch(0)
+    assert b0["tokens"].shape == (1, 2, 8)
+    np.testing.assert_array_equal(b0["tokens"].ravel()[:8], data[:8])
+    # deterministic seek-by-step
+    np.testing.assert_array_equal(s.batch(3)["tokens"], s.batch(3)["tokens"])
+
+
+def test_prefetcher_orders_steps():
+    s = SyntheticSource(vocab=100, global_batch=2, seq_len=8)
+    pf = Prefetcher(s, depth=2, start_step=5)
+    steps = [next(pf)[0] for _ in range(4)]
+    pf.stop()
+    assert steps == [5, 6, 7, 8]
+
+
+def test_make_batches_resume():
+    s = SyntheticSource(vocab=100, global_batch=2, seq_len=8)
+    it = make_batches(s, start_step=3)
+    step, b = next(it)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(b["tokens"]),
+                                  s.batch(3)["tokens"])

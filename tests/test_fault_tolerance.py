@@ -1,0 +1,48 @@
+"""Elastic scaling + straggler policy (launch/elastic.py)."""
+import pytest
+
+import numpy as np
+
+from repro.launch.elastic import (StragglerPolicy, pick_mesh, pick_topology,
+                                  rescale_batch)
+
+
+def test_pick_mesh_single_device():
+    mesh = pick_mesh(1)
+    assert mesh.shape == {"data": 1, "model": 1}
+
+
+def test_pick_topology_degrades_monotonically():
+    """Topology selection alone (this host has 1 device; mesh construction
+    for larger topologies is exercised by the dry-run's 512 virtual
+    devices)."""
+    sizes = [int(np.prod(pick_topology(n)[0])) for n in (1, 2, 4, 8, 256,
+                                                         512)]
+    assert sizes == [1, 2, 4, 8, 256, 512]
+    # a lost pod falls back from the multi-pod mesh to one pod
+    assert pick_topology(511)[0] == (16, 16)
+    assert pick_topology(512)[0] == (2, 16, 16)
+
+
+def test_rescale_batch_preserves_global():
+    out = rescale_batch(256, 4096, data_parallel=16,
+                        per_device_tokens_budget=1 << 15)
+    assert 256 % out["n_micro"] == 0
+    per_dev_tokens = 256 // out["n_micro"] // 16 * 4096
+    assert per_dev_tokens <= 1 << 15
+
+
+def test_rescale_rejects_indivisible():
+    with pytest.raises(AssertionError):
+        rescale_batch(10, 128, data_parallel=3)
+
+
+def test_straggler_policy_streaks():
+    evicted = []
+    pol = StragglerPolicy(factor=2.0, tolerate=2,
+                          on_evict=lambda s: evicted.append(s))
+    assert pol.observe(1, dt=1.0, ewma=1.0) == "ok"
+    assert pol.observe(2, dt=5.0, ewma=1.0) == "tolerate"
+    assert pol.observe(3, dt=5.0, ewma=1.0) == "evict"
+    assert evicted == [3]
+    assert pol.observe(4, dt=1.0, ewma=1.0) == "ok"

@@ -1,0 +1,56 @@
+"""Pallas binomial lattice kernel: shape/dtype sweep vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import LatticeModel, american_put, price_notc_np
+from repro.kernels.binomial_ref import lattice_levels_ref
+from repro.kernels.binomial_step import lattice_round
+from repro.kernels.ops import price_notc_kernel
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float64, 1e-12),
+                                       (jnp.float32, 1e-4)])
+@pytest.mark.parametrize("block,levels,P", [
+    (128, 1, 512), (128, 7, 512), (128, 64, 512),
+    (64, 32, 256), (256, 100, 1024),
+])
+def test_round_matches_ref(dtype, tol, block, levels, P):
+    if levels > block:
+        pytest.skip("levels must be <= block")
+    v = jax.random.uniform(jax.random.PRNGKey(0), (P,), dtype) * 50
+    scalars = jnp.asarray([100.0, 0.53, 0.999, 100.0, 95.0, 0.01], dtype)
+    got = lattice_round(v, scalars, levels=levels, block=block,
+                        interpret=True)
+    want = lattice_levels_ref(v, scalars, levels=levels)
+    # all lanes except the final (boundary-clamped) block are exact
+    valid = P - block
+    np.testing.assert_allclose(np.asarray(got[:valid]),
+                               np.asarray(want[:valid]), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("kind", ["put", "call"])
+def test_round_kind(kind):
+    v = jax.random.uniform(jax.random.PRNGKey(1), (256,), jnp.float64) * 50
+    scalars = jnp.asarray([60.0, 0.5, 0.999, 100.0, 95.0, 0.01], jnp.float64)
+    got = lattice_round(v, scalars, levels=8, block=128, kind=kind,
+                        interpret=True)
+    want = lattice_levels_ref(v, scalars, levels=8, kind=kind)
+    np.testing.assert_allclose(np.asarray(got[:128]), np.asarray(want[:128]),
+                               rtol=1e-12)
+
+
+def test_end_to_end_price_matches_oracle():
+    m = LatticeModel(s0=100, sigma=0.3, rate=0.06, maturity=3.0, n_steps=300)
+    got = price_notc_kernel(m, 100.0, levels=32, block=64)
+    want = price_notc_np(m, american_put(100.0))
+    assert abs(got - want) < 1e-10
+
+
+def test_short_final_round_is_noop_protected():
+    """N not a multiple of L: the kernel's lvl>=0 guard handles the tail."""
+    m = LatticeModel(s0=100, sigma=0.2, rate=0.05, maturity=0.5, n_steps=123)
+    got = price_notc_kernel(m, 100.0, levels=50, block=64)
+    want = price_notc_np(m, american_put(100.0))
+    assert abs(got - want) < 1e-10

@@ -1,0 +1,44 @@
+"""No-transaction-cost engine: the paper's appendix workload."""
+import pytest
+
+from repro.core import (LatticeModel, american_put, price_notc_jax,
+                        price_notc_np)
+
+
+def test_jax_matches_numpy_oracle():
+    m = LatticeModel(s0=100, sigma=0.3, rate=0.06, maturity=3.0, n_steps=500)
+    put = american_put(100.0)
+    assert price_notc_jax(m, put) == pytest.approx(price_notc_np(m, put),
+                                                   abs=1e-10)
+
+
+def test_appendix_price_13_906():
+    """Paper appendix: American put K=100, S0=100, T=3, sigma=0.3, R=0.06
+    prices at 13.906 (8-byte doubles, N up to 40000).  CRR converges
+    O(1/N); N=5000 is within half a cent."""
+    m = LatticeModel(s0=100, sigma=0.3, rate=0.06, maturity=3.0, n_steps=5000)
+    p = price_notc_jax(m, american_put(100.0))
+    assert p == pytest.approx(13.906, abs=5e-3)
+
+
+def test_american_geq_european_and_intrinsic():
+    m = LatticeModel(s0=90, sigma=0.3, rate=0.06, maturity=1.0, n_steps=300)
+    put = american_put(100.0)
+    am = price_notc_np(m, put)
+    # European via plain discounted expectation on the same lattice
+    import numpy as np
+    n, r, p = m.n_steps, m.r, m.p_star
+    v = np.maximum(100.0 - m.stock_level(n), 0.0)
+    for lvl in range(n - 1, -1, -1):
+        v = (p * v[1:lvl + 2] + (1 - p) * v[:lvl + 1]) / r
+    eu = float(v[0])
+    assert am >= eu - 1e-12
+    assert am >= 100.0 - 90.0 - 1e-12      # intrinsic
+
+
+def test_monotone_in_spot():
+    put = american_put(100.0)
+    prices = [price_notc_np(
+        LatticeModel(s0=s, sigma=0.2, rate=0.05, maturity=0.5, n_steps=200),
+        put) for s in (90.0, 100.0, 110.0)]
+    assert prices[0] > prices[1] > prices[2]

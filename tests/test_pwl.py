@@ -1,0 +1,100 @@
+"""PWL algebra: exact oracle unit tests + JAX fixed-capacity vs oracle."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import pwl_ref as R
+from repro.core import pwl as P
+
+
+def test_worked_example_seller_ask_50():
+    """Paper §3 one-step example: z_t(0) = 50."""
+    r = 1.18
+    z_u = R.expense_function(130.0, -1.0, 144.0, 96.0)
+    z_d = R.expense_function(130.0, -1.0, 100.0, 200.0 / 3.0)
+    w = R.pwl_max(z_u, z_d).scale(1.0 / r)
+    v = R.cone_infconv(w, 120.0, 80.0)
+    u_t = R.expense_function(130.0, -1.0, 120.0, 80.0)
+    z = R.pwl_max(u_t, v)
+    assert z(0.0) == pytest.approx(50.0, abs=1e-12)
+    # eq. (5): z_t = u_t everywhere (the example's claim)
+    ys = np.linspace(-3, 3, 61)
+    np.testing.assert_allclose(z(ys), u_t(ys), rtol=1e-12)
+
+
+def test_worked_example_buyer_bid_10():
+    """Paper §3 / eq. (7): -z_t(0) = 10."""
+    r = 1.18
+    z_u = R.expense_function(-130.0, 1.0, 144.0, 96.0)
+    z_d = R.expense_function(-130.0, 1.0, 100.0, 200.0 / 3.0)
+    w = R.pwl_max(z_u, z_d).scale(1.0 / r)
+    v = R.cone_infconv(w, 120.0, 80.0)
+    u_t = R.expense_function(-130.0, 1.0, 120.0, 80.0)
+    z = R.pwl_min(u_t, v)
+    assert -z(0.0) == pytest.approx(10.0, abs=1e-12)
+
+
+def _random_ref(rng, max_m=6):
+    m = int(rng.integers(1, max_m + 1))
+    xs = np.sort(rng.normal(0, 2, m)) + np.arange(m) * 0.05
+    ys = rng.normal(0, 50, m)
+    sl = rng.uniform(-150, -50)
+    sr = rng.uniform(-100, -10)
+    return R.PWLRef(xs, ys, sl, sr)
+
+
+@pytest.mark.parametrize("take_max", [True, False])
+def test_envelope_matches_oracle(rng, take_max):
+    K = 16
+    ysq = jnp.linspace(-8.0, 8.0, 101)
+    for _ in range(60):
+        f, g = _random_ref(rng), _random_ref(rng)
+        ref = (R.pwl_max if take_max else R.pwl_min)(f, g)
+        h, _ = P.envelope2(P.from_ref(f, K), P.from_ref(g, K), K, take_max)
+        got = np.asarray(jax.vmap(lambda c: P.eval_at(h, c))(ysq))
+        np.testing.assert_allclose(got, ref(np.asarray(ysq)),
+                                   rtol=1e-8, atol=1e-8)
+
+
+def test_cone_matches_oracle(rng):
+    K = 16
+    ysq = jnp.linspace(-8.0, 8.0, 101)
+    for _ in range(60):
+        f = _random_ref(rng)
+        a = float(rng.uniform(80, 140))
+        b = float(rng.uniform(20, 70))
+        f.s_left = min(f.s_left, -b - 1.0)
+        f.s_right = max(f.s_right, -a)
+        ref = R.cone_infconv(f, a, b)
+        v, _ = P.cone_infconv(P.from_ref(f, K), a, b, K)
+        got = np.asarray(jax.vmap(lambda c: P.eval_at(v, c))(ysq))
+        np.testing.assert_allclose(got, ref(np.asarray(ysq)),
+                                   rtol=1e-8, atol=1e-8)
+
+
+def test_cone_equal_ask_bid_degenerates_to_affine(rng):
+    f = _random_ref(rng)
+    a = 100.0
+    f.s_left = min(f.s_left, -a)
+    f.s_right = max(f.s_right, -a)
+    ref = R.cone_infconv(f, a, a)
+    assert ref.m == 1 and ref.s_left == pytest.approx(ref.s_right)
+
+
+def test_compress_idempotent(rng):
+    for _ in range(20):
+        f = _random_ref(rng)
+        c1 = f.compress()
+        c2 = c1.compress()
+        assert c1.m == c2.m
+        ys = np.linspace(-5, 5, 51)
+        np.testing.assert_allclose(c1(ys), f(ys), rtol=1e-9)
+
+
+def test_expense_function_shape():
+    u = R.expense_function(130.0, -1.0, 120.0, 80.0)
+    # u(y) = 130 + (y+1)^- *120 - (y+1)^+ *80  (paper eq. (1) example)
+    assert u(-1.0) == pytest.approx(130.0)
+    assert u(0.0) == pytest.approx(50.0)
+    assert u(-2.0) == pytest.approx(250.0)

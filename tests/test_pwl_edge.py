@@ -1,0 +1,67 @@
+"""PWL edge cases: identical inputs, single-knot functions, capacity-1
+batches, affine degenerates — the boundaries the fuzz tests rarely hit."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pwl as P
+from repro.core import pwl_ref as R
+
+
+def _eval(f, ys):
+    return np.asarray(jax.vmap(lambda c: P.eval_at(f, c))(jnp.asarray(ys)))
+
+
+def test_envelope_of_identical_functions_is_identity():
+    ref = R.PWLRef(np.array([-1.0, 0.5]), np.array([3.0, -2.0]), -10.0, -1.0)
+    f = P.from_ref(ref, 8)
+    for take_max in (True, False):
+        h, _ = P.envelope2(f, f, 8, take_max)
+        ys = np.linspace(-4, 4, 33)
+        np.testing.assert_allclose(_eval(h, ys), ref(ys), rtol=1e-12)
+
+
+def test_envelope_affine_vs_affine():
+    f = P.make_affine(-2.0, 1.0, 8)        # -2y + 1
+    g = P.make_affine(-1.0, 0.0, 8)        # -y
+    h, _ = P.envelope2(f, g, 8, take_max=True)
+    ys = np.linspace(-5, 5, 41)
+    want = np.maximum(-2 * ys + 1, -ys)
+    np.testing.assert_allclose(_eval(h, ys), want, rtol=1e-12)
+    # crossing at y = 1 becomes the single knot
+    assert int(h.m) <= 2
+
+
+def test_single_knot_cone_is_v():
+    ref = R.PWLRef(np.array([0.5]), np.array([2.0]), -120.0, -80.0)
+    v, _ = P.cone_infconv(P.from_ref(ref, 8), 120.0, 80.0, 8)
+    ys = np.linspace(-3, 3, 25)
+    want = R.cone_infconv(ref, 120.0, 80.0)(ys)
+    np.testing.assert_allclose(_eval(v, ys), want, rtol=1e-10)
+
+
+def test_overflow_reported_not_silent():
+    """Force more crossings than capacity: m_raw must exceed out_cap."""
+    rng = np.random.default_rng(5)
+    xs = np.sort(rng.normal(0, 2, 6))
+    f = R.PWLRef(xs, rng.normal(0, 50, 6), -150.0, -10.0)
+    g = R.PWLRef(xs + 0.3, rng.normal(0, 50, 6), -140.0, -20.0)
+    _, m_raw = P.envelope2(P.from_ref(f, 8), P.from_ref(g, 8), 2,
+                           take_max=True)
+    assert int(m_raw) >= 2      # raw count available for the overflow check
+
+
+def test_scale_preserves_knots():
+    ref = R.PWLRef(np.array([-1.0, 1.0]), np.array([5.0, 1.0]), -8.0, -1.0)
+    f = P.scale(P.from_ref(ref, 8), 0.5)
+    ys = np.linspace(-3, 3, 25)
+    np.testing.assert_allclose(_eval(f, ys), 0.5 * ref(ys), rtol=1e-12)
+
+
+def test_expense_equal_prices_is_affine():
+    u = P.expense(jnp.float64(7.0), jnp.float64(-1.0), jnp.float64(100.0),
+                  jnp.float64(100.0), 8)
+    ys = np.linspace(-2, 2, 17)
+    want = 7.0 - 100.0 * (ys - (-1.0))
+    np.testing.assert_allclose(_eval(u, ys), want, rtol=1e-12)

@@ -1,0 +1,77 @@
+"""Property-based tests (hypothesis) for the PWL algebra invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pwl_ref as R
+
+_settings = settings(max_examples=60, deadline=None)
+
+
+def _pwl(xs, ys, sl, sr):
+    xs = np.sort(np.asarray(xs)) + np.arange(len(xs)) * 1e-3
+    return R.PWLRef(xs, np.asarray(ys), sl, sr)
+
+
+knots = st.integers(1, 5).flatmap(
+    lambda m: st.tuples(
+        st.lists(st.floats(-5, 5), min_size=m, max_size=m),
+        st.lists(st.floats(-100, 100), min_size=m, max_size=m)))
+end_slopes = st.tuples(st.floats(-150, -60), st.floats(-50, -5))
+
+
+@given(knots, knots, end_slopes, end_slopes)
+@_settings
+def test_max_dominates_both(kf, kg, ef, eg):
+    f = _pwl(kf[0], kf[1], *ef)
+    g = _pwl(kg[0], kg[1], *eg)
+    h = R.pwl_max(f, g)
+    ys = np.linspace(-8, 8, 81)
+    assert np.all(h(ys) >= f(ys) - 1e-7)
+    assert np.all(h(ys) >= g(ys) - 1e-7)
+    assert np.all(np.abs(h(ys) - np.maximum(f(ys), g(ys))) < 1e-6)
+
+
+@given(knots, knots, end_slopes, end_slopes)
+@_settings
+def test_min_is_pointwise(kf, kg, ef, eg):
+    f = _pwl(kf[0], kf[1], *ef)
+    g = _pwl(kg[0], kg[1], *eg)
+    h = R.pwl_min(f, g)
+    ys = np.linspace(-8, 8, 81)
+    assert np.all(np.abs(h(ys) - np.minimum(f(ys), g(ys))) < 1e-6)
+
+
+@given(knots, end_slopes, st.floats(80, 140), st.floats(20, 70))
+@_settings
+def test_cone_lower_bound_and_slopes(kf, ef, a, b):
+    """v <= f pointwise; v has slopes within [-a, -b]; v is the identity
+    when f already satisfies the slope constraint (convex case)."""
+    f = _pwl(kf[0], kf[1], min(ef[0], -b - 1), max(ef[1], -a))
+    v = R.cone_infconv(f, a, b)
+    ys = np.linspace(-8, 8, 81)
+    assert np.all(v(ys) <= f(ys) + 1e-7)
+    s = v.slopes()
+    assert np.all(s >= -a - 1e-7) and np.all(s <= -b + 1e-7)
+
+
+@given(knots, end_slopes, st.floats(80, 140), st.floats(20, 70),
+       st.floats(1.001, 1.2))
+@_settings
+def test_cone_monotone_in_spread(kf, ef, a, b, widen):
+    """Widening the bid-ask spread (a up, b down) raises the rebalancing
+    cost c(d) = max(a d, b d) pointwise, so the hedging expense v can only
+    increase: v_wide >= v_narrow.  (This is the per-step mechanism behind
+    the paper's Fig. 9: ask prices increase with the cost rate k.)"""
+    f = _pwl(kf[0], kf[1], min(ef[0], -b * widen - 1), max(ef[1], -a * widen))
+    v_narrow = R.cone_infconv(f, a, b)
+    v_wide = R.cone_infconv(f, a * widen, b / widen)
+    ys = np.linspace(-6, 6, 61)
+    assert np.all(v_wide(ys) >= v_narrow(ys) - 1e-6)
+
+
+@given(knots, end_slopes, st.floats(0.5, 2.0))
+@_settings
+def test_scale_linearity(kf, ef, alpha):
+    f = _pwl(kf[0], kf[1], *ef)
+    ys = np.linspace(-5, 5, 41)
+    np.testing.assert_allclose(f.scale(alpha)(ys), alpha * f(ys), rtol=1e-9)

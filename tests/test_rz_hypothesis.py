@@ -1,0 +1,61 @@
+"""Property-based tests of the full pricing recursion (hypothesis).
+
+Invariants from the paper's §3 (no-arbitrage interval structure) over
+random market parameters — the system-level complement to the per-op
+properties in test_pwl_hypothesis.py.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (LatticeModel, american_put, price_notc_np, price_ref)
+
+_settings = settings(max_examples=12, deadline=None)
+
+markets = st.fixed_dictionaries({
+    "s0": st.floats(80.0, 120.0),
+    "sigma": st.floats(0.1, 0.4),
+    "rate": st.floats(0.0, 0.1),
+    "maturity": st.floats(0.1, 1.0),
+    "k": st.floats(0.0005, 0.01),
+})
+
+
+@given(markets)
+@_settings
+def test_bid_below_classic_below_ask(m):
+    model = LatticeModel(s0=m["s0"], sigma=m["sigma"], rate=m["rate"],
+                         maturity=m["maturity"], n_steps=8,
+                         cost_rate=m["k"])
+    put = american_put(100.0)
+    res = price_ref(model, put)
+    classic = price_notc_np(model, put)
+    assert res.bid <= classic + 1e-9
+    assert classic <= res.ask + 1e-9
+    assert res.ask >= 0.0 and res.bid >= -1e-12
+
+
+@given(markets)
+@_settings
+def test_ask_dominates_immediate_exercise(m):
+    """The seller must be able to cover exercise at t=0: ask >= intrinsic
+    (cash needed to deliver (K, -1) with no stock: K - S0 when positive,
+    evaluated without t=0 costs)."""
+    model = LatticeModel(s0=m["s0"], sigma=m["sigma"], rate=m["rate"],
+                         maturity=m["maturity"], n_steps=8,
+                         cost_rate=m["k"])
+    res = price_ref(model, american_put(100.0))
+    intrinsic = max(100.0 - m["s0"], 0.0)
+    assert res.ask >= intrinsic - 1e-9
+
+
+@given(markets, st.floats(1.5, 3.0))
+@_settings
+def test_spread_monotone_in_k(m, factor):
+    model = LatticeModel(s0=m["s0"], sigma=m["sigma"], rate=m["rate"],
+                         maturity=m["maturity"], n_steps=8,
+                         cost_rate=m["k"])
+    put = american_put(100.0)
+    lo = price_ref(model, put)
+    hi = price_ref(model.with_(cost_rate=min(m["k"] * factor, 0.05)), put)
+    assert hi.ask >= lo.ask - 1e-9
+    assert hi.bid <= lo.bid + 1e-9

@@ -1,0 +1,86 @@
+"""Roux–Zastawniak pricing: oracle + vectorised engine, paper anchors."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (LatticeModel, american_call, american_put,
+                        bull_spread, price_notc_np, price_ref)
+from repro.core.rz import price_rz, price_rz_batch
+
+PUT = american_put(100.0)
+
+
+def test_zero_costs_reduce_to_classic_binomial():
+    m = LatticeModel(s0=100, sigma=0.2, rate=0.1, maturity=0.25, n_steps=20,
+                     cost_rate=0.0)
+    res = price_ref(m, PUT)
+    classic = price_notc_np(m, PUT)
+    assert res.ask == pytest.approx(classic, abs=1e-10)
+    assert res.bid == pytest.approx(classic, abs=1e-10)
+
+
+@pytest.mark.parametrize("n,k", [(10, 0.005), (20, 0.01), (25, 0.02)])
+def test_jax_engine_matches_oracle_put(n, k):
+    m = LatticeModel(s0=100, sigma=0.2, rate=0.1, maturity=0.25, n_steps=n,
+                     cost_rate=k)
+    ref = price_ref(m, PUT)
+    got = price_rz(m, PUT, capacity=24)
+    assert got.ask == pytest.approx(ref.ask, abs=1e-9)
+    assert got.bid == pytest.approx(ref.bid, abs=1e-9)
+
+
+def test_jax_engine_matches_oracle_bull_spread():
+    m = LatticeModel(s0=100, sigma=0.2, rate=0.1, maturity=0.25, n_steps=15,
+                     cost_rate=0.01)
+    bs = bull_spread()
+    ref = price_ref(m, bs)
+    got = price_rz(m, bs, capacity=48)
+    assert got.ask == pytest.approx(ref.ask, abs=1e-9)
+    assert got.bid == pytest.approx(ref.bid, abs=1e-9)
+
+
+def test_spread_monotone_in_cost_rate():
+    """Paper Fig. 9 ordering: bid(k2) <= bid(k1) <= pi(0) <= ask(k1) <= ask(k2)."""
+    m0 = LatticeModel(s0=100, sigma=0.2, rate=0.1, maturity=0.25, n_steps=20)
+    classic = price_notc_np(m0, PUT)
+    asks, bids = [], []
+    for k in (0.0025, 0.005):
+        r = price_ref(m0.with_(cost_rate=k), PUT)
+        asks.append(r.ask)
+        bids.append(r.bid)
+    assert bids[1] <= bids[0] + 1e-12 <= classic + 1e-9
+    assert classic - 1e-9 <= asks[0] <= asks[1] + 1e-12
+
+
+def test_call_prices_sane():
+    m = LatticeModel(s0=100, sigma=0.2, rate=0.1, maturity=0.25, n_steps=15,
+                     cost_rate=0.01)
+    call = american_call(100.0)
+    r = price_ref(m, call)
+    assert r.ask >= r.bid >= 0.0
+    # ask at least intrinsic at the money forward-ish
+    assert r.ask > 0.5
+
+
+def test_batched_contracts():
+    got = price_rz_batch(
+        jnp.array([100.0, 95.0]), jnp.array([0.2, 0.2]),
+        jnp.array([0.1, 0.1]), jnp.array([0.25, 0.25]),
+        jnp.array([0.005, 0.005]),
+        n_steps=12, capacity=24, payoff=PUT)
+    ask, bid, _ = (np.asarray(x) for x in got)
+    for i, s0 in enumerate([100.0, 95.0]):
+        m = LatticeModel(s0=s0, sigma=0.2, rate=0.1, maturity=0.25,
+                         n_steps=12, cost_rate=0.005)
+        ref = price_ref(m, PUT)
+        assert ask[i] == pytest.approx(ref.ask, abs=1e-9)
+        assert bid[i] == pytest.approx(ref.bid, abs=1e-9)
+    # a put is worth more at lower spot
+    assert ask[1] > ask[0]
+
+
+def test_capacity_overflow_detected():
+    m = LatticeModel(s0=100, sigma=0.2, rate=0.1, maturity=0.25, n_steps=25,
+                     cost_rate=0.01)
+    with pytest.raises(OverflowError):
+        price_rz(m, bull_spread(), capacity=4)
