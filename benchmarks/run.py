@@ -15,7 +15,7 @@ import traceback
 
 def main() -> None:
     from . import (bench_kernels, fig9_spreads, rz_convergence,
-                   table1_node_counts, table2_tc_speedup,
+                   scenario_grid, table1_node_counts, table2_tc_speedup,
                    table3_notc_speedup)
     all_benches = {
         "table1": table1_node_counts.run,
@@ -24,6 +24,7 @@ def main() -> None:
         "fig9": fig9_spreads.run,
         "convergence": rz_convergence.run,
         "kernels": bench_kernels.run,
+        "grid": scenario_grid.run,
     }
     wanted = sys.argv[1:] or list(all_benches)
     csv_rows = []

@@ -3,6 +3,9 @@ costs (the paper's §3/§5 workload) and sanity-check it against the
 friction-free price.
 
     PYTHONPATH=src python examples/quickstart.py
+
+For the stable top-level API (single quotes + scenario grids) see
+``repro.api`` and ``examples/scenario_grid.py``.
 """
 import sys
 from pathlib import Path

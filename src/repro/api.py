@@ -1,0 +1,155 @@
+"""Stable top-level pricing API.
+
+Everything a user needs to price American options — one contract or a
+scenario grid, with or without transaction costs — behind two functions:
+
+  * :func:`price_american`  — one contract -> :class:`PriceQuote`
+  * :func:`price_grid`      — a grid of scenarios -> ``GridResult``
+    (one compiled call per tree depth)
+
+plus the building blocks re-exported from the core:
+:class:`~repro.scenarios.ScenarioGrid`,
+:class:`~repro.core.lattice.LatticeModel`, and the payoff constructors.
+
+Quickstart::
+
+    >>> from repro.api import price_american, price_grid, ScenarioGrid
+    >>> q = price_american(s0=100.0, sigma=0.2, rate=0.1, maturity=0.25,
+    ...                    n_steps=100, payoff="put", strike=100.0,
+    ...                    cost_rate=0.005)
+    >>> round(q.ask, 4), round(q.bid, 4)
+    (4.6761, 0.2374)
+    >>> grid = ScenarioGrid.cartesian(
+    ...     s0=(95.0, 100.0, 105.0), cost_rate=(0.0, 0.01),
+    ...     payoff=("put", "call"), strike=100.0, n_steps=24)
+    >>> res = price_grid(grid, capacity=24)
+    >>> res.ask.shape        # (s0, sigma, rate, T, lambda, payoff, strike)
+    (3, 1, 1, 1, 2, 2, 1)
+    >>> bool((res.spread >= -1e-12).all())   # ask >= bid everywhere
+    True
+
+The prices above are deterministic: float64 lattice engines, validated
+against the sequential oracles (see ``docs/ARCHITECTURE.md``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+from .core.lattice import LatticeModel
+from .core.payoff import (PayoffProcess, american_call, american_put,
+                          bull_spread, cash_settled)
+from .scenarios import (PAYOFF_FAMILIES, GridResult, ScenarioGrid,
+                        price_grid_notc, price_grid_rz)
+
+__all__ = [
+    "price_american", "price_grid", "PriceQuote", "GridResult",
+    "ScenarioGrid", "LatticeModel", "PayoffProcess", "PAYOFF_FAMILIES",
+    "american_put", "american_call", "bull_spread", "cash_settled",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PriceQuote:
+    """Two-sided quote for one contract.
+
+    Under proportional transaction costs the arbitrage-free price is an
+    interval: ``ask`` is the seller's (upper) price, ``bid`` the buyer's
+    (lower) price.  Without frictions ask == bid == the binomial price.
+    ``max_pieces`` reports the peak PWL knot count (0 for the no-TC path).
+    """
+    ask: float
+    bid: float
+    max_pieces: int = 0
+
+    @property
+    def mid(self) -> float:
+        return 0.5 * (self.ask + self.bid)
+
+    @property
+    def spread(self) -> float:
+        return self.ask - self.bid
+
+
+def _mk_payoff(payoff: Union[str, PayoffProcess], strike: float,
+               strike2: Optional[float]) -> PayoffProcess:
+    if isinstance(payoff, PayoffProcess):
+        return payoff
+    if payoff == "put":
+        return american_put(strike)
+    if payoff == "call":
+        return american_call(strike)
+    if payoff == "bull_spread":
+        return bull_spread(strike, strike + 10.0 if strike2 is None
+                           else strike2)
+    raise ValueError(f"unknown payoff {payoff!r}; "
+                     f"supported: {PAYOFF_FAMILIES} or a PayoffProcess")
+
+
+def price_american(*, s0: float, sigma: float, rate: float, maturity: float,
+                   n_steps: int, payoff: Union[str, PayoffProcess] = "put",
+                   strike: float = 100.0, strike2: Optional[float] = None,
+                   cost_rate: float = 0.0, capacity: int = 48) -> PriceQuote:
+    """Price one American option on a CRR binomial tree.
+
+    With ``cost_rate`` (the proportional transaction-cost rate lambda) at
+    0 this runs the classic friction-free backward induction; otherwise
+    the Roux–Zastawniak PWL recursion, returning the seller/buyer price
+    interval.  ``payoff`` is a family name (``put``, ``call``,
+    ``bull_spread``) or any :class:`~repro.core.payoff.PayoffProcess`.
+    """
+    model = LatticeModel(s0=s0, sigma=sigma, rate=rate, maturity=maturity,
+                         n_steps=n_steps, cost_rate=cost_rate)
+    pay = _mk_payoff(payoff, strike, strike2)
+    if cost_rate == 0.0:
+        from .core.notc import price_notc_np
+        p = price_notc_np(model, pay)
+        return PriceQuote(ask=p, bid=p, max_pieces=0)
+    from .core.rz import price_rz
+    res = price_rz(model, pay, capacity=capacity)
+    return PriceQuote(ask=res.ask, bid=res.bid, max_pieces=res.max_pieces)
+
+
+def price_grid(grid: Optional[ScenarioGrid] = None, *,
+               engine: str = "auto", capacity: int = 48,
+               greeks: bool = False, backend: str = "jnp",
+               n_steps: Union[int, Sequence[int], None] = None,
+               levels: int = 64, block: int = 256, interpret: bool = True,
+               **axes) -> Union[GridResult, list]:
+    """Price a whole grid of scenarios in one compiled call.
+
+    Pass a prebuilt :class:`ScenarioGrid`, or cartesian axes as keyword
+    arguments (forwarded to :meth:`ScenarioGrid.cartesian`)::
+
+        price_grid(s0=(95, 100, 105), cost_rate=(0.0, 0.005),
+                   payoff=("put", "call"), n_steps=100)
+
+    ``engine="auto"`` picks the transaction-cost engine when any scenario
+    has ``cost_rate > 0`` and the friction-free engine otherwise.
+    ``backend`` selects the friction-free implementation ("jnp" or
+    "pallas"); ``levels``/``block``/``interpret`` tune the Pallas kernel
+    (set ``interpret=False`` on real TPU hardware).  The tree depth is
+    compile-time static: passing a *sequence* of ``n_steps`` prices one
+    grid per distinct depth and returns the list of results in order.
+    """
+    if grid is None:
+        if isinstance(n_steps, (list, tuple)):
+            return [price_grid(engine=engine, capacity=capacity,
+                               greeks=greeks, backend=backend, n_steps=int(n),
+                               levels=levels, block=block,
+                               interpret=interpret, **axes) for n in n_steps]
+        grid = ScenarioGrid.cartesian(n_steps=int(n_steps or 100), **axes)
+    elif axes or n_steps is not None:
+        raise TypeError("pass either a ScenarioGrid or cartesian axes, "
+                        "not both")
+    if engine == "auto":
+        engine = "rz" if np.any(grid.cost_rate > 0.0) else "notc"
+    if engine == "rz":
+        return price_grid_rz(grid, capacity=capacity, greeks=greeks)
+    if engine == "notc":
+        return price_grid_notc(grid, backend=backend, greeks=greeks,
+                               levels=levels, block=block,
+                               interpret=interpret)
+    raise ValueError(f"unknown engine {engine!r}; use 'auto', 'rz' or 'notc'")

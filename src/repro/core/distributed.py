@@ -36,6 +36,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as PS
 
 from . import pwl as P
+from ..compat import shard_map
 from .payoff import PayoffProcess
 from .rz import rz_level_step
 
@@ -223,7 +224,7 @@ def build_rz_sharded(mesh: Mesh, *, n_steps: int, payoff: PayoffProcess,
         return ask, bid, stat
 
     cspec = PS(data_axes if len(data_axes) > 1 else data_axes[0])
-    f = jax.shard_map(
+    f = shard_map(
         sharded_body, mesh=mesh,
         in_specs=(cspec,) * 5,
         out_specs=(cspec, cspec, PS()),
@@ -286,7 +287,7 @@ def build_notc_sharded(mesh: Mesh, *, n_steps: int, strike: float,
         return price
 
     cspec = PS(data_axes if len(data_axes) > 1 else data_axes[0])
-    f = jax.shard_map(
+    f = shard_map(
         sharded_body, mesh=mesh,
         in_specs=(cspec,) * 4, out_specs=cspec,
         check_vma=False)

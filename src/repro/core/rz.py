@@ -31,7 +31,8 @@ from . import pwl as P
 from .lattice import LatticeModel
 from .payoff import PayoffProcess
 
-__all__ = ["price_rz", "price_rz_batch", "rz_level_step", "RZResult"]
+__all__ = ["price_rz", "price_rz_batch", "rz_backward", "rz_level_step",
+           "RZResult"]
 
 
 @dataclasses.dataclass
@@ -103,9 +104,15 @@ def _leaf_level(n_steps: int, params, capacity: int, dtype) -> P.PWL:
     return P.expense(zero, zero, a, b, capacity, dtype)
 
 
-@partial(jax.jit, static_argnames=("n_steps", "capacity", "payoff", "dtype"))
-def _price_rz_jit(s0, sigma, rate, maturity, k, *, n_steps: int, capacity: int,
-                  payoff: PayoffProcess, dtype=jnp.float64):
+def rz_backward(s0, sigma, rate, maturity, k, *, n_steps: int, capacity: int,
+                payoff: PayoffProcess, dtype=jnp.float64):
+    """Traceable full backward recursion -> (ask, bid, max_pieces).
+
+    Unlike :func:`price_rz` this is not jitted and ``payoff`` need not be
+    hashable/static — its xi/zeta closures may capture traced values, which
+    is what the scenario-grid engine (:mod:`repro.scenarios`) relies on to
+    batch heterogeneous contracts through one compiled call.
+    """
     dt = maturity / n_steps
     params = dict(
         s0=s0, k=k,
@@ -132,6 +139,13 @@ def _price_rz_jit(s0, sigma, rate, maturity, k, *, n_steps: int, capacity: int,
     ask = P.eval_at(root(z_s), jnp.zeros((), dtype))
     bid = -P.eval_at(root(z_b), jnp.zeros((), dtype))
     return ask, bid, pieces
+
+
+@partial(jax.jit, static_argnames=("n_steps", "capacity", "payoff", "dtype"))
+def _price_rz_jit(s0, sigma, rate, maturity, k, *, n_steps: int, capacity: int,
+                  payoff: PayoffProcess, dtype=jnp.float64):
+    return rz_backward(s0, sigma, rate, maturity, k, n_steps=n_steps,
+                       capacity=capacity, payoff=payoff, dtype=dtype)
 
 
 def price_rz(model: LatticeModel, payoff: PayoffProcess,

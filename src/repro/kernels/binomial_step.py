@@ -29,9 +29,37 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["lattice_round", "DEFAULT_BLOCK"]
+__all__ = ["lattice_round", "lattice_round_param", "DEFAULT_BLOCK",
+           "PARAM_SCALARS"]
 
 DEFAULT_BLOCK = 256
+
+# scalar-vector layout of the payoff-parameterised kernel:
+#   [lvl0, p_up, inv_r, s0, sig_sqrt_dt, alpha, zeta, w1, w2, k1, k2]
+# intrinsic(s) = max(alpha*k1 + w1*(s-k1)^+ + w2*(s-k2)^+ + zeta*s, 0)
+# (put: alpha=1, zeta=-1; call: alpha=-1, zeta=+1; bull spread: w1=1, w2=-1)
+PARAM_SCALARS = 11
+
+
+def _block_inputs(cur_ref, nxt_ref, block: int):
+    """(buf, idx): this block + its right-neighbour halo and the global
+    column index of each of the 2*block lanes."""
+    i = pl.program_id(0)
+    buf = jnp.concatenate([cur_ref[...], nxt_ref[...]])        # (2*block,)
+    idx = (i * block + jax.lax.broadcasted_iota(jnp.int32, (2 * block,), 0)
+           ).astype(buf.dtype)
+    return buf, idx
+
+
+def _backward_steps(buf, lvl0, p_up, inv_r, payoff, levels: int):
+    """``levels`` backward induction steps on one lane buffer."""
+    for j in range(levels):                                    # static unroll
+        lvl = lvl0 - (j + 1)
+        cont = (p_up * jnp.roll(buf, -1) + (1.0 - p_up) * buf) * inv_r
+        new = jnp.maximum(payoff(lvl), cont)
+        # final (short) round: levels below 0 are no-ops
+        buf = jnp.where(lvl >= 0, new, buf)
+    return buf
 
 
 def _round_kernel(lvl_ref, cur_ref, nxt_ref, out_ref, *, levels: int,
@@ -42,32 +70,72 @@ def _round_kernel(lvl_ref, cur_ref, nxt_ref, out_ref, *, levels: int,
     cur_ref/nxt_ref: this block and its right neighbour (same array);
     out_ref: updated block.
     """
-    i = pl.program_id(0)
-    lvl0 = lvl_ref[0]
-    p_up = lvl_ref[1]
-    inv_r = lvl_ref[2]
-    strike = lvl_ref[3]
-    s0 = lvl_ref[4]
-    sig = lvl_ref[5]
-
-    buf = jnp.concatenate([cur_ref[...], nxt_ref[...]])        # (2*block,)
-    dtype = buf.dtype
-    idx = (i * block + jax.lax.broadcasted_iota(jnp.int32, (2 * block,), 0)
-           ).astype(dtype)
+    lvl0, p_up, inv_r, strike, s0, sig = (lvl_ref[j] for j in range(6))
+    buf, idx = _block_inputs(cur_ref, nxt_ref, block)
 
     def payoff(lvl):
         s = s0 * jnp.exp((2.0 * idx - lvl) * sig)
         pay = strike - s if kind == "put" else s - strike
         return jnp.maximum(pay, jnp.zeros_like(pay))
 
-    for j in range(levels):                                    # static unroll
-        lvl = lvl0 - (j + 1)
-        cont = (p_up * jnp.roll(buf, -1) + (1.0 - p_up) * buf) * inv_r
-        new = jnp.maximum(payoff(lvl), cont)
-        # final (short) round: levels below 0 are no-ops
-        buf = jnp.where(lvl >= 0, new, buf)
-
+    buf = _backward_steps(buf, lvl0, p_up, inv_r, payoff, levels)
     out_ref[...] = buf[:block]
+
+
+def _round_kernel_param(sc_ref, cur_ref, nxt_ref, out_ref, *, levels: int,
+                        block: int):
+    """Payoff-parameterised variant of :func:`_round_kernel`.
+
+    The payoff family is data, not code: the intrinsic is the branchless
+    4-parameter form documented at ``PARAM_SCALARS``, so one compiled
+    kernel serves puts, calls and cash-settled spreads — the scenario-grid
+    engine batches mixed payoffs through it with a single ``vmap``.
+    """
+    lvl0, p_up, inv_r, s0, sig = (sc_ref[j] for j in range(5))
+    alpha, zeta, w1, w2, k1, k2 = (sc_ref[5 + j] for j in range(6))
+    buf, idx = _block_inputs(cur_ref, nxt_ref, block)
+
+    def payoff(lvl):
+        s = s0 * jnp.exp((2.0 * idx - lvl) * sig)
+        pay = (alpha * k1 + w1 * jnp.maximum(s - k1, 0.0)
+               + w2 * jnp.maximum(s - k2, 0.0) + zeta * s)
+        return jnp.maximum(pay, jnp.zeros_like(pay))
+
+    buf = _backward_steps(buf, lvl0, p_up, inv_r, payoff, levels)
+    out_ref[...] = buf[:block]
+
+
+def _round_call(kernel, v, scalars, block: int, interpret: bool):
+    """Shared pallas_call scaffolding: per-block grid, double BlockSpec
+    (own block + right-neighbour halo over the same HBM array, clamped at
+    the boundary where lanes are beyond the live tree)."""
+    P = v.shape[0]
+    nblk = P // block
+    return pl.pallas_call(
+        kernel,
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),     # scalars, loaded whole
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (jnp.minimum(i + 1, nblk - 1),)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((P,), v.dtype),
+        interpret=interpret,
+    )(scalars, v, v)
+
+
+def lattice_round_param(v, scalars, *, levels: int,
+                        block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """One round of ``levels`` steps with the payoff passed as data.
+
+    v: (P,) node values, P a multiple of ``block``; scalars: (11,) array
+    with the ``PARAM_SCALARS`` layout (dtype of v).
+    """
+    assert v.shape[0] % block == 0 and levels <= block
+    kernel = functools.partial(_round_kernel_param, levels=levels,
+                               block=block)
+    return _round_call(kernel, v, scalars, block, interpret)
 
 
 def lattice_round(v, scalars, *, levels: int, block: int = DEFAULT_BLOCK,
@@ -77,23 +145,7 @@ def lattice_round(v, scalars, *, levels: int, block: int = DEFAULT_BLOCK,
     v: (P,) node values, P a multiple of ``block``;  scalars: (6,) array
     [lvl0, p_up, inv_r, strike, s0, sig_sqrt_dt] (dtype of v).
     """
-    P = v.shape[0]
-    assert P % block == 0 and levels <= block
-    nblk = P // block
-    grid = (nblk,)
+    assert v.shape[0] % block == 0 and levels <= block
     kernel = functools.partial(_round_kernel, levels=levels, block=block,
                                kind=kind)
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),     # scalars, loaded whole
-            pl.BlockSpec((block,), lambda i: (i,)),
-            # right-neighbour halo: same array, shifted one block (clamped
-            # at the boundary; those lanes are beyond the live tree)
-            pl.BlockSpec((block,), lambda i: (jnp.minimum(i + 1, nblk - 1),)),
-        ],
-        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((P,), v.dtype),
-        interpret=interpret,
-    )(scalars, v, v)
+    return _round_call(kernel, v, scalars, block, interpret)

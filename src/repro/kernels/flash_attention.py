@@ -27,7 +27,7 @@ _NEG = -1e30
 def _fa_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_kv: int,
                seq_kv: int, causal: bool, window, scale: float):
     iq = pl.program_id(1)
-    q = q_ref[0]                                   # (bq, hd)
+    q = q_ref[...][0]                              # (bq, hd)
     hd = q.shape[-1]
     nkv = seq_kv // block_kv
 
@@ -35,10 +35,12 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_kv: int,
 
     def body(j, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, pl.dslice(j * block_kv, block_kv),
-                            slice(None)))          # (bkv, hd)
-        v = pl.load(v_ref, (0, pl.dslice(j * block_kv, block_kv),
-                            slice(None)))
+        # NOTE: int indexers inside pl.load break interpret-mode discharge
+        # on jax 0.4.x; use a width-1 dslice and drop the axis after load.
+        k = pl.load(k_ref, (pl.dslice(0, 1), pl.dslice(j * block_kv, block_kv),
+                            slice(None)))[0]       # (bkv, hd)
+        v = pl.load(v_ref, (pl.dslice(0, 1), pl.dslice(j * block_kv, block_kv),
+                            slice(None)))[0]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale   # (bq, bkv)
@@ -64,7 +66,7 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_kv: int,
     l0 = jnp.zeros((block_q, 1), jnp.float32)
     a0 = jnp.zeros((block_q, hd), jnp.float32)
     m, l, acc = jax.lax.fori_loop(0, nkv, body, (m0, l0, a0))
-    o_ref[0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)[None]
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window=None,

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as PS
 
+from ..compat import axis_size, shard_map
+
 __all__ = ["ring_attention_local", "make_ring_attention"]
 
 _NEG = -1e30
@@ -39,7 +41,7 @@ def ring_attention_local(q, k, v, axis_name: str, *, causal: bool = True,
     q: (B, Sl, KVH, G, hd); k, v: (B, Sl, KVH, hd).  Returns (B, Sl, KVH,
     G, hd) — exact global attention over the ring.
     """
-    W = jax.lax.axis_size(axis_name)
+    W = axis_size(axis_name)
     me = jax.lax.axis_index(axis_name)
     B, Sl, KVH, G, hd = q.shape
     scale = 1.0 / math.sqrt(hd)
@@ -85,7 +87,7 @@ def make_ring_attention(mesh: Mesh, axis_name: str = "model", *,
     body = partial(ring_attention_local, axis_name=axis_name, causal=causal,
                    window=window)
     seq_spec = PS(None, axis_name)
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(seq_spec, seq_spec, seq_spec),
         out_specs=seq_spec,

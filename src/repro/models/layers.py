@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as PS
 
+from ..compat import shard_map
 from ..configs.base import ModelConfig
 
 Params = Dict[str, Any]
@@ -424,7 +425,7 @@ def moe_dispatch(params, x, cfg: ModelConfig, rules, dtype=DEFAULT_DTYPE,
 
     in_specs = (PS(dp_spec), PS(dp_spec), PS(dp_spec),
                 PS(tp_spec), PS(tp_spec), PS(tp_spec))
-    y = jax.shard_map(
+    y = shard_map(
         body, mesh=rules.mesh,
         in_specs=in_specs, out_specs=PS(dp_spec),
         check_vma=False,

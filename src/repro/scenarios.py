@@ -1,0 +1,391 @@
+"""Scenario-grid pricing: batch whole grids of contracts through the engines.
+
+The paper prices one American option per run; its parallelism is *within*
+a contract (blocks/regions/rounds over the tree).  This module adds the
+orthogonal, JAX-shaped axis: a **scenario grid** — the cartesian product
+(or an explicit list) of market/contract parameters
+
+    spot s0 x volatility sigma x rate x maturity x transaction-cost
+    rate lambda x payoff family x strike(s)
+
+is flattened into struct-of-arrays form and pushed through the lattice
+engines in ONE compiled call (``vmap`` over contracts), optionally with
+central-difference Greeks (delta, vega) fused into the same call.
+
+Mixed payoff families batch together because the payoff is carried as
+*data*, not code: every supported contract is an instance of the
+4-parameter family
+
+    xi(s)   = alpha * K1 + w1 * (s - K1)^+ + w2 * (s - K2)^+
+    zeta(s) = zeta                                      (constant)
+
+==============  =====  =====  ====  ====
+payoff          alpha  zeta    w1    w2
+==============  =====  =====  ====  ====
+put(K1)           +1    -1      0     0
+call(K1)          -1    +1      0     0
+bull_spread       0      0     +1    -1
+==============  =====  =====  ====  ====
+
+Two engines are exposed:
+
+  * ``price_grid_rz``    — Roux–Zastawniak ask/bid under proportional
+    transaction costs (``core/rz.py`` / ``core/pwl.py``); exact for
+    lambda = 0 too (ask = bid = the friction-free price).
+  * ``price_grid_notc``  — friction-free binomial price; ``backend="jnp"``
+    is the vectorised ``core/notc.py`` recursion, ``backend="pallas"``
+    routes through the blocked lattice kernel
+    (``kernels/binomial_step.py::lattice_round_param``).
+
+Oracles: ``core/rz_ref.py`` (sequential PWL recursion) and
+``core/notc.py::price_notc_np`` — see ``tests/test_scenarios.py``.
+
+The tree depth ``n_steps`` is a *static* (shape-determining) parameter:
+one grid = one compiled program.  ``repro.api.price_grid`` accepts a list
+of step counts and prices one grid per distinct value.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .core.payoff import PayoffProcess
+from .core.rz import rz_backward
+
+__all__ = ["ScenarioGrid", "GridResult", "price_grid_rz", "price_grid_notc",
+           "PAYOFF_FAMILIES", "payoff_params"]
+
+PAYOFF_FAMILIES = ("put", "call", "bull_spread")
+
+# finite-difference bump sizes (relative in s0, absolute in sigma)
+_DELTA_REL_BUMP = 1e-4
+_VEGA_BUMP = 1e-4
+
+
+def payoff_params(kind: str):
+    """(alpha, zeta, w1, w2) of the 4-parameter payoff family.
+
+    The strikes K1/K2 are threaded separately (they scale with the
+    scenario); these four numbers only select the family.
+    """
+    if kind == "put":
+        return (1.0, -1.0, 0.0, 0.0)
+    if kind == "call":
+        return (-1.0, 1.0, 0.0, 0.0)
+    if kind == "bull_spread":
+        return (0.0, 0.0, 1.0, -1.0)
+    raise ValueError(f"unknown payoff family {kind!r}; "
+                     f"supported: {PAYOFF_FAMILIES}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioGrid:
+    """A flat SoA batch of pricing scenarios sharing one tree depth.
+
+    All per-scenario fields are float64 numpy arrays of equal length
+    ``n_scenarios``; ``shape`` is the logical (cartesian) grid shape the
+    result surfaces are reshaped to (``(n_scenarios,)`` for explicit
+    grids).  Build with :meth:`cartesian` or :meth:`explicit`.
+    """
+    s0: np.ndarray
+    sigma: np.ndarray
+    rate: np.ndarray
+    maturity: np.ndarray
+    cost_rate: np.ndarray
+    strike: np.ndarray
+    strike2: np.ndarray
+    payoff: tuple            # per-scenario family name, len n_scenarios
+    n_steps: int
+    shape: tuple             # logical grid shape, prod == n_scenarios
+    axes: tuple = ()         # (name, values) pairs for cartesian grids
+
+    @property
+    def n_scenarios(self) -> int:
+        return self.s0.shape[0]
+
+    def payoff_param_arrays(self):
+        """(alpha, zeta, w1, w2) as float64 arrays over scenarios."""
+        by_kind = {k: payoff_params(k) for k in set(self.payoff)}
+        p = np.asarray([by_kind[k] for k in self.payoff], dtype=np.float64)
+        return p[:, 0], p[:, 1], p[:, 2], p[:, 3]
+
+    # ----------------------------------------------------------------- #
+    @classmethod
+    def cartesian(cls, *, s0=100.0, sigma=0.2, rate=0.1, maturity=0.25,
+                  cost_rate=0.0, payoff="put", strike=100.0,
+                  strike2=None, n_steps: int = 100) -> "ScenarioGrid":
+        """Cartesian product of the given axes (scalars = length-1 axes).
+
+        ``payoff`` entries are family names from ``PAYOFF_FAMILIES``;
+        ``strike2`` (second strike of ``bull_spread``) defaults to
+        ``strike + 10``.
+        """
+        def ax(v, name):
+            if isinstance(v, str):
+                v = (v,)
+            arr = tuple(np.atleast_1d(v).tolist())
+            return (name, arr)
+
+        axes = (ax(s0, "s0"), ax(sigma, "sigma"), ax(rate, "rate"),
+                ax(maturity, "maturity"), ax(cost_rate, "cost_rate"),
+                ax(payoff, "payoff"), ax(strike, "strike"))
+        shape = tuple(len(vals) for _, vals in axes)
+        rows = list(itertools.product(*(vals for _, vals in axes)))
+        cols = {name: [r[i] for r in rows]
+                for i, (name, _) in enumerate(axes)}
+        k1 = np.asarray(cols["strike"], np.float64)
+        if strike2 is None:
+            k2 = k1 + 10.0
+        else:
+            k2 = np.broadcast_to(np.asarray(strike2, np.float64),
+                                 k1.shape).copy()
+        f64 = lambda n: np.asarray(cols[n], np.float64)
+        return cls(s0=f64("s0"), sigma=f64("sigma"), rate=f64("rate"),
+                   maturity=f64("maturity"), cost_rate=f64("cost_rate"),
+                   strike=k1, strike2=k2, payoff=tuple(cols["payoff"]),
+                   n_steps=int(n_steps), shape=shape, axes=axes)
+
+    @classmethod
+    def explicit(cls, *, s0, sigma, rate, maturity, cost_rate=0.0,
+                 payoff="put", strike=100.0, strike2=None,
+                 n_steps: int = 100) -> "ScenarioGrid":
+        """Element-wise scenario list; array arguments broadcast together."""
+        arrs = [np.atleast_1d(np.asarray(v, np.float64))
+                for v in (s0, sigma, rate, maturity, cost_rate, strike)]
+        n = max(a.shape[0] for a in arrs)
+        s0a, siga, ra, ma, ka, k1 = (np.broadcast_to(a, (n,)) for a in arrs)
+        if isinstance(payoff, str):
+            payoff = (payoff,) * n
+        if len(payoff) != n:
+            raise ValueError(f"payoff has {len(payoff)} entries, "
+                             f"expected {n}")
+        k2 = (k1 + 10.0 if strike2 is None else
+              np.broadcast_to(np.asarray(strike2, np.float64), (n,)))
+        return cls(s0=s0a.copy(), sigma=siga.copy(), rate=ra.copy(),
+                   maturity=ma.copy(), cost_rate=ka.copy(), strike=k1.copy(),
+                   strike2=np.asarray(k2, np.float64).copy(),
+                   payoff=tuple(payoff), n_steps=int(n_steps), shape=(n,))
+
+
+@dataclasses.dataclass
+class GridResult:
+    """Ask/bid surfaces (and optional Greeks) over a scenario grid.
+
+    All arrays have ``grid.shape``.  For the friction-free engine
+    ask == bid == the binomial price (``price`` is an alias for ``ask``).
+    Greeks are central finite differences fused into the same compiled
+    call: ``delta_* = dP/ds0``, ``vega_* = dP/dsigma``.
+    """
+    grid: ScenarioGrid
+    ask: np.ndarray
+    bid: np.ndarray
+    max_pieces: int = 0
+    delta_ask: Optional[np.ndarray] = None
+    delta_bid: Optional[np.ndarray] = None
+    vega_ask: Optional[np.ndarray] = None
+    vega_bid: Optional[np.ndarray] = None
+
+    @property
+    def price(self) -> np.ndarray:
+        return self.ask
+
+    @property
+    def spread(self) -> np.ndarray:
+        return self.ask - self.bid
+
+
+def _param_payoff(alpha, zeta, w1, w2, k1, k2) -> PayoffProcess:
+    """PayoffProcess whose xi/zeta close over traced per-scenario params."""
+    def xi(s):
+        return (alpha * k1 + w1 * jnp.maximum(s - k1, 0.0)
+                + w2 * jnp.maximum(s - k2, 0.0))
+
+    def zeta_fn(s):
+        return jnp.full_like(s, zeta)
+
+    return PayoffProcess(name="param", xi=xi, zeta=zeta_fn)
+
+
+# --------------------------------------------------------------------- #
+# Roux–Zastawniak grid engine (transaction costs; exact at lambda = 0)
+# --------------------------------------------------------------------- #
+@partial(jax.jit, static_argnames=("n_steps", "capacity"))
+def _rz_grid_jit(s0, sigma, rate, maturity, k, alpha, zeta, w1, w2, k1, k2,
+                 *, n_steps: int, capacity: int):
+    def one(s0_, sig_, r_, t_, k_, al_, ze_, w1_, w2_, k1_, k2_):
+        pay = _param_payoff(al_, ze_, w1_, w2_, k1_, k2_)
+        return rz_backward(s0_, sig_, r_, t_, k_, n_steps=n_steps,
+                           capacity=capacity, payoff=pay)
+    return jax.vmap(one)(s0, sigma, rate, maturity, k,
+                         alpha, zeta, w1, w2, k1, k2)
+
+
+def _grid_inputs(grid: ScenarioGrid):
+    alpha, zeta, w1, w2 = grid.payoff_param_arrays()
+    return tuple(jnp.asarray(a, jnp.float64) for a in (
+        grid.s0, grid.sigma, grid.rate, grid.maturity, grid.cost_rate,
+        alpha, zeta, w1, w2, grid.strike, grid.strike2))
+
+
+def _with_bumps(inputs, greeks: bool):
+    """Stack [base, s0+, s0-, sigma+, sigma-] along the scenario axis."""
+    if not greeks:
+        return inputs, 1
+    s0, sigma = inputs[0], inputs[1]
+    ds = _DELTA_REL_BUMP * s0
+    dv = _VEGA_BUMP
+    variants = [
+        (s0, sigma), (s0 + ds, sigma), (s0 - ds, sigma),
+        (s0, sigma + dv), (s0, sigma - dv),
+    ]
+    out = []
+    for i, a in enumerate(inputs):
+        if i == 0:
+            out.append(jnp.concatenate([v[0] for v in variants]))
+        elif i == 1:
+            out.append(jnp.concatenate([v[1] for v in variants]))
+        else:
+            out.append(jnp.tile(a, 5))
+    return tuple(out), 5
+
+
+def _split_bumps(vals, n: int, copies: int, s0, shape):
+    """(surface, d/ds0, d/dsigma) from the stacked FD evaluation."""
+    r = lambda a: np.asarray(a).reshape(shape)
+    base = r(vals[:n])
+    if copies == 1:
+        return base, None, None
+    ds = (_DELTA_REL_BUMP * s0).reshape(shape)
+    delta = (r(vals[n:2 * n]) - r(vals[2 * n:3 * n])) / (2.0 * ds)
+    vega = (r(vals[3 * n:4 * n]) - r(vals[4 * n:5 * n])) / (2.0 * _VEGA_BUMP)
+    return base, delta, vega
+
+
+def price_grid_rz(grid: ScenarioGrid, *, capacity: int = 48,
+                  greeks: bool = False) -> GridResult:
+    """Price every scenario of ``grid`` under transaction costs.
+
+    One jitted, vmapped call over the whole (bumped, if ``greeks``) batch;
+    returns ask/bid surfaces of ``grid.shape``.  Raises ``OverflowError``
+    if any scenario needs more than ``capacity`` PWL knots (re-run with a
+    larger capacity), mirroring :func:`repro.core.rz.price_rz`.
+    """
+    inputs, copies = _with_bumps(_grid_inputs(grid), greeks)
+    ask, bid, pieces = _rz_grid_jit(*inputs, n_steps=grid.n_steps,
+                                    capacity=capacity)
+    n = grid.n_scenarios
+    max_pieces = int(jnp.max(pieces))
+    if max_pieces > capacity:
+        raise OverflowError(
+            f"PWL capacity overflow: needed {max_pieces} > K={capacity}; "
+            "re-run with a larger capacity")
+    a, da, va = _split_bumps(ask, n, copies, grid.s0, grid.shape)
+    b, db, vb = _split_bumps(bid, n, copies, grid.s0, grid.shape)
+    return GridResult(grid=grid, ask=a, bid=b, max_pieces=max_pieces,
+                      delta_ask=da, delta_bid=db, vega_ask=va, vega_bid=vb)
+
+
+# --------------------------------------------------------------------- #
+# friction-free grid engine (core/notc.py recursion or the Pallas kernel)
+# --------------------------------------------------------------------- #
+def _notc_one_jnp(s0, sigma, rate, maturity, alpha, zeta, w1, w2, k1, k2,
+                  *, n_steps: int):
+    """Fixed-buffer backward induction with the payoff carried as data
+    (the parameterised form of ``core.notc._notc_kernel``)."""
+    dtype = jnp.float64
+    dt = maturity / n_steps
+    u = jnp.exp(sigma * jnp.sqrt(dt))
+    r = jnp.exp(rate * dt)
+    p = (r - 1.0 / u) / (u - 1.0 / u)
+    idx = jnp.arange(n_steps + 1, dtype=dtype)
+
+    def intrinsic(lvl):
+        s = s0 * jnp.exp((2.0 * idx - lvl) * sigma * jnp.sqrt(dt))
+        pay = (alpha * k1 + w1 * jnp.maximum(s - k1, 0.0)
+               + w2 * jnp.maximum(s - k2, 0.0) + zeta * s)
+        return jnp.where(idx <= lvl, jnp.maximum(pay, 0.0), 0.0)
+
+    v0 = intrinsic(jnp.asarray(n_steps, dtype))
+
+    def body(step, v):
+        lvl = jnp.asarray(n_steps - 1 - step, dtype)
+        cont = (p * jnp.roll(v, -1) + (1.0 - p) * v) / r
+        return jnp.maximum(intrinsic(lvl), cont)
+
+    return jax.lax.fori_loop(0, n_steps, body, v0)[0]
+
+
+@partial(jax.jit, static_argnames=("n_steps",))
+def _notc_grid_jnp(s0, sigma, rate, maturity, alpha, zeta, w1, w2, k1, k2,
+                   *, n_steps: int):
+    return jax.vmap(partial(_notc_one_jnp, n_steps=n_steps))(
+        s0, sigma, rate, maturity, alpha, zeta, w1, w2, k1, k2)
+
+
+@partial(jax.jit, static_argnames=("n_steps", "levels", "block", "interpret"))
+def _notc_grid_pallas(s0, sigma, rate, maturity, alpha, zeta, w1, w2, k1, k2,
+                      *, n_steps: int, levels: int, block: int,
+                      interpret: bool):
+    from .kernels.binomial_step import lattice_round_param
+    dtype = jnp.float64
+
+    def one(s0_, sig_, r_, t_, al_, ze_, w1_, w2_, k1_, k2_):
+        dt = t_ / n_steps
+        u = jnp.exp(sig_ * jnp.sqrt(dt))
+        r = jnp.exp(r_ * dt)
+        p_up = (r - 1.0 / u) / (u - 1.0 / u)
+        sig = sig_ * jnp.sqrt(dt)
+        P = -(-(n_steps + 1) // block) * block
+        idx = jnp.arange(P, dtype=dtype)
+        s_leaf = s0_ * jnp.exp((2.0 * idx - n_steps) * sig)
+        pay = (al_ * k1_ + w1_ * jnp.maximum(s_leaf - k1_, 0.0)
+               + w2_ * jnp.maximum(s_leaf - k2_, 0.0) + ze_ * s_leaf)
+        v0 = jnp.maximum(pay, 0.0)
+        rounds = -(-n_steps // levels)
+
+        def body(rr, v):
+            lvl0 = jnp.asarray(n_steps - rr * levels, dtype)
+            scalars = jnp.stack([lvl0, p_up, 1.0 / r, s0_, sig,
+                                 al_, ze_, w1_, w2_, k1_, k2_])
+            return lattice_round_param(v, scalars, levels=levels,
+                                       block=block, interpret=interpret)
+
+        return jax.lax.fori_loop(0, rounds, body, v0)[0]
+
+    return jax.vmap(one)(s0, sigma, rate, maturity,
+                         alpha, zeta, w1, w2, k1, k2)
+
+
+def price_grid_notc(grid: ScenarioGrid, *, backend: str = "jnp",
+                    greeks: bool = False, levels: int = 64,
+                    block: int = 256, interpret: bool = True) -> GridResult:
+    """Friction-free binomial prices for every scenario of ``grid``.
+
+    ``backend="jnp"`` runs the vectorised ``core/notc.py`` recursion;
+    ``backend="pallas"`` vmaps the blocked lattice kernel
+    (``kernels/binomial_step.py``), exercising the paper's §4 block scheme
+    per scenario.  ``grid.cost_rate`` is ignored (must be 0 for the result
+    to be meaningful as a two-sided quote).
+    """
+    inputs, copies = _with_bumps(_grid_inputs(grid), greeks)
+    # drop the cost-rate column (index 4) — this engine is friction-free
+    args = inputs[:4] + inputs[5:]
+    if backend == "jnp":
+        vals = _notc_grid_jnp(*args, n_steps=grid.n_steps)
+    elif backend == "pallas":
+        vals = _notc_grid_pallas(*args, n_steps=grid.n_steps, levels=levels,
+                                 block=block, interpret=interpret)
+    else:
+        raise ValueError(f"unknown backend {backend!r}; use 'jnp' or 'pallas'")
+    n = grid.n_scenarios
+    p, dp, vp = _split_bumps(vals, n, copies, grid.s0, grid.shape)
+    cp = lambda a: None if a is None else a.copy()
+    return GridResult(grid=grid, ask=p, bid=p.copy(), max_pieces=0,
+                      delta_ask=dp, delta_bid=cp(dp),
+                      vega_ask=vp, vega_bid=cp(vp))

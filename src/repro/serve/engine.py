@@ -3,10 +3,14 @@
 Two first-class services:
 
 1. ``PricingEngine`` — the paper's workload as a production service: a
-   batched option-pricing desk.  Requests (contract parameter sets) are
-   queued, padded to the compiled contract-batch size, priced with the
-   distributed lattice engine (contracts over the data axis, lattice nodes
-   over the model axis), and answered with (ask, bid).
+   batched option-pricing desk.  Single-contract requests (``submit`` /
+   ``flush``) are queued, padded to the compiled contract-batch size, and
+   priced with the distributed lattice engine (contracts over the data
+   axis, lattice nodes over the model axis).  Whole scenario grids
+   (``price_grid`` with a :class:`GridRequest`) go through the
+   ``repro.scenarios`` batch engine instead: the flat scenario batch is
+   padded to a small set of bucket sizes so repeat grid traffic reuses the
+   already-compiled program (one compile per (bucket, n_steps, greeks)).
 
 2. ``LMEngine`` — LM prefill + decode loop with a batched KV cache
    (the serve path exercised by the decode_32k / long_500k dry-run cells).
@@ -29,7 +33,7 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..core.payoff import american_call, american_put, bull_spread
 
-__all__ = ["PriceRequest", "PricingEngine", "LMEngine"]
+__all__ = ["PriceRequest", "GridRequest", "PricingEngine", "LMEngine"]
 
 
 @dataclasses.dataclass
@@ -43,6 +47,26 @@ class PriceRequest:
     strike: float = 100.0
 
 
+@dataclasses.dataclass
+class GridRequest:
+    """A scenario-grid pricing request (cartesian axes; scalars allowed).
+
+    Each axis may be a scalar or a sequence; the engine prices the full
+    cartesian product in one compiled call (see ``repro.scenarios``).
+    ``n_steps`` is compile-time static per request.
+    """
+    s0: Any = 100.0
+    sigma: Any = 0.2
+    rate: Any = 0.1
+    maturity: Any = 0.25
+    cost_rate: Any = 0.0
+    payoff: Any = "put"
+    strike: Any = 100.0
+    strike2: Any = None
+    n_steps: int = 100
+    greeks: bool = False
+
+
 class PricingEngine:
     """Batched ask/bid pricing service on a (data, model) mesh."""
 
@@ -52,6 +76,7 @@ class PricingEngine:
         from ..core.distributed import build_rz_sharded
         self.batch = batch
         self.n_steps = n_steps
+        self.capacity = capacity
         pay = {"put": american_put(strike), "call": american_call(strike),
                "bull_spread": bull_spread()}[payoff]
         self._fn = jax.jit(build_rz_sharded(
@@ -60,6 +85,7 @@ class PricingEngine:
         self._pending: List[Tuple[PriceRequest, int]] = []
         self._results: Dict[int, Tuple[float, float]] = {}
         self._next_id = 0
+        self.grid_stats: Dict[str, int] = {"grids": 0, "scenarios": 0}
 
     def submit(self, req: PriceRequest) -> int:
         rid = self._next_id
@@ -84,6 +110,49 @@ class PricingEngine:
                 out[rid] = (float(ask[i]), float(bid[i]))
         self._results.update(out)
         return out
+
+    # ---- scenario-grid path (repro.scenarios batch engine) ------------ #
+    @staticmethod
+    def _pad_grid(grid, to: int):
+        """Pad the flat scenario batch to ``to`` rows (repeat the last)."""
+        from ..scenarios import ScenarioGrid
+        n = grid.n_scenarios
+        pad = to - n
+        rep = lambda a: np.concatenate([a, np.repeat(a[-1:], pad)])
+        return ScenarioGrid(
+            s0=rep(grid.s0), sigma=rep(grid.sigma), rate=rep(grid.rate),
+            maturity=rep(grid.maturity), cost_rate=rep(grid.cost_rate),
+            strike=rep(grid.strike), strike2=rep(grid.strike2),
+            payoff=grid.payoff + (grid.payoff[-1],) * pad,
+            n_steps=grid.n_steps, shape=(to,))
+
+    def price_grid(self, req: GridRequest):
+        """Price a :class:`GridRequest` through the scenario batch engine.
+
+        The flat batch is padded up to the next power-of-two bucket so a
+        stream of differently-sized grids hits a handful of compiled
+        programs; results are unpadded and reshaped to the grid's logical
+        (cartesian) shape before returning.
+        """
+        from ..scenarios import GridResult, ScenarioGrid, price_grid_rz
+        grid = ScenarioGrid.cartesian(
+            s0=req.s0, sigma=req.sigma, rate=req.rate,
+            maturity=req.maturity, cost_rate=req.cost_rate,
+            payoff=req.payoff, strike=req.strike, strike2=req.strike2,
+            n_steps=req.n_steps)
+        n = grid.n_scenarios
+        bucket = max(self.batch, 1 << (n - 1).bit_length())
+        res = price_grid_rz(self._pad_grid(grid, bucket),
+                            capacity=self.capacity, greeks=req.greeks)
+        cut = lambda a: (None if a is None
+                         else a.ravel()[:n].reshape(grid.shape))
+        self.grid_stats["grids"] += 1
+        self.grid_stats["scenarios"] += n
+        return GridResult(
+            grid=grid, ask=cut(res.ask), bid=cut(res.bid),
+            max_pieces=res.max_pieces,
+            delta_ask=cut(res.delta_ask), delta_bid=cut(res.delta_bid),
+            vega_ask=cut(res.vega_ask), vega_bid=cut(res.vega_bid))
 
 
 class LMEngine:

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as PS
 
+from ..compat import shard_map
 from ..configs.base import ModelConfig
 from ..models import layers as L
 from ..models.transformer import RunCfg, _super_block, init_lm
@@ -142,7 +143,7 @@ def make_pp_loss(cfg: ModelConfig, run: RunCfg, mesh, *, stages: int,
         return total
 
     def loss_fn(params_pp, batch):
-        return jax.shard_map(
+        return shard_map(
             piped, mesh=mesh,
             in_specs=(_pp_in_specs(params_pp, pipe_axis),
                       jax.tree.map(lambda _: PS(), batch)),

@@ -73,7 +73,8 @@ def test_compressed_psum_error_feedback():
         red2, ef2 = compressed_psum(gg, ef, "data")
         return red, red2, ef2.residual
 
-    red, red2, resid = jax.jit(jax.shard_map(
+    from repro.compat import shard_map
+    red, red2, resid = jax.jit(shard_map(
         body, mesh=mesh, in_specs=({"w": PS()},),
         out_specs=({"w": PS()}, {"w": PS()}, {"w": PS()}),
         check_vma=False))(g)

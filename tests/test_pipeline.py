@@ -5,6 +5,7 @@ import sys
 import textwrap
 from pathlib import Path
 
+import jax
 import pytest
 
 from repro.configs import get_config, reduced_config
@@ -39,6 +40,12 @@ def test_split_stages_rejects_uneven():
 
 
 @pytest.mark.slow
+@pytest.mark.xfail(
+    not hasattr(jax, "shard_map"),
+    reason="partial-manual shard_map (axis_names={'pod'}, data axis auto) "
+           "lowers axis_index to a PartitionId instruction the jax 0.4.x "
+           "SPMD partitioner rejects; needs jax >= 0.5 "
+           "(see docs/KNOWN_ISSUES.md)")
 def test_pipelined_loss_matches_single_device():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"

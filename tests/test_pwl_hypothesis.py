@@ -1,6 +1,10 @@
 """Property-based tests (hypothesis) for the PWL algebra invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this environment")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import pwl_ref as R
 

@@ -5,9 +5,14 @@ random market parameters — the system-level complement to the per-op
 properties in test_pwl_hypothesis.py.
 """
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
-from repro.core import (LatticeModel, american_put, price_notc_np, price_ref)
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this environment")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import (LatticeModel, american_put, price_notc_np,  # noqa: E402
+                        price_ref)
 
 _settings = settings(max_examples=12, deadline=None)
 

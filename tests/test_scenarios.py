@@ -1,0 +1,178 @@
+"""Scenario-grid engine vs. the sequential per-contract oracles.
+
+The acceptance gate of the grid subsystem: a mixed grid (payoff families
+x transaction-cost rates incl. 0 x spots x vols x strikes, > 100
+scenarios) priced in ONE jitted call must match pricing each contract
+individually with the exact sequential recursions (``core/rz_ref.py``,
+``core/notc.py::price_notc_np``) within the repo's tolerance policy
+(absolute 1e-9 on prices — float64 engines vs float64 oracles).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (LatticeModel, american_call, american_put,
+                        bull_spread, price_notc_np, price_ref)
+from repro.scenarios import (ScenarioGrid, price_grid_notc, price_grid_rz)
+
+TOL = 1e-9
+
+
+def _oracle_payoff(kind, k1, k2):
+    if kind == "bull_spread":
+        return bull_spread(k1, k2)
+    return {"put": american_put, "call": american_call}[kind](k1)
+
+
+def _model_of(grid, i, cost=True):
+    return LatticeModel(
+        s0=grid.s0[i], sigma=grid.sigma[i], rate=grid.rate[i],
+        maturity=grid.maturity[i], n_steps=grid.n_steps,
+        cost_rate=grid.cost_rate[i] if cost else 0.0)
+
+
+@pytest.fixture(scope="module")
+def big_grid():
+    # 2*2*3*3*3 = 108 scenarios, one compiled call
+    return ScenarioGrid.cartesian(
+        s0=(95.0, 105.0), sigma=(0.15, 0.25),
+        cost_rate=(0.0, 0.005, 0.01),
+        payoff=("put", "call", "bull_spread"),
+        strike=(95.0, 100.0, 105.0),
+        n_steps=10)
+
+
+def test_grid_rz_matches_sequential_oracle(big_grid):
+    grid = big_grid
+    assert grid.n_scenarios >= 100
+    res = price_grid_rz(grid, capacity=16)
+    ask, bid = res.ask.ravel(), res.bid.ravel()
+    for i in range(grid.n_scenarios):
+        ref = price_ref(_model_of(grid, i),
+                        _oracle_payoff(grid.payoff[i], grid.strike[i],
+                                       grid.strike2[i]))
+        assert ask[i] == pytest.approx(ref.ask, abs=TOL), (i, grid.payoff[i])
+        assert bid[i] == pytest.approx(ref.bid, abs=TOL), (i, grid.payoff[i])
+    assert res.max_pieces <= 16
+
+
+def test_grid_rz_interval_structure(big_grid):
+    """bid <= ask everywhere; lambda = 0 collapses to a point quote."""
+    res = price_grid_rz(big_grid, capacity=16)
+    assert (res.spread >= -1e-12).all()
+    lam0 = big_grid.cost_rate.reshape(big_grid.shape) == 0.0
+    assert np.abs((res.ask - res.bid)[lam0]).max() < TOL
+
+
+def test_grid_notc_both_backends_match_numpy_oracle():
+    grid = ScenarioGrid.cartesian(
+        s0=(90.0, 100.0, 110.0), sigma=(0.2, 0.3),
+        payoff=("put", "call", "bull_spread"), strike=(95.0, 100.0),
+        n_steps=16)
+    r_jnp = price_grid_notc(grid, backend="jnp")
+    r_pal = price_grid_notc(grid, backend="pallas", levels=8, block=16)
+    p_jnp, p_pal = r_jnp.price.ravel(), r_pal.price.ravel()
+    for i in range(grid.n_scenarios):
+        want = price_notc_np(_model_of(grid, i, cost=False),
+                             _oracle_payoff(grid.payoff[i], grid.strike[i],
+                                            grid.strike2[i]))
+        assert p_jnp[i] == pytest.approx(want, abs=TOL)
+        assert p_pal[i] == pytest.approx(want, abs=TOL)
+
+
+def test_grid_rz_at_lambda0_equals_notc():
+    """The k = 0 TC engine and the friction-free engine agree (the
+    paper's consistency anchor), now at grid level."""
+    grid = ScenarioGrid.cartesian(s0=(95.0, 100.0, 105.0),
+                                  payoff=("put", "call"), strike=100.0,
+                                  n_steps=12)
+    rz = price_grid_rz(grid, capacity=16)
+    notc = price_grid_notc(grid)
+    np.testing.assert_allclose(rz.ask, notc.price, atol=TOL)
+    np.testing.assert_allclose(rz.bid, notc.price, atol=TOL)
+
+
+def test_grid_greeks_signs_and_fd_consistency():
+    grid = ScenarioGrid.explicit(
+        s0=(100.0, 100.0), sigma=0.2, rate=0.1, maturity=0.25,
+        cost_rate=0.005, payoff=("put", "call"), strike=(100.0, 100.0),
+        n_steps=10)
+    res = price_grid_rz(grid, capacity=16, greeks=True)
+    put, call = 0, 1
+    assert res.delta_ask[put] < 0.0 < res.delta_ask[call]
+    assert res.vega_ask[put] > 0.0 and res.vega_ask[call] > 0.0
+    # FD against explicitly bumped grids (same engine, separate calls)
+    h = 1e-4 * 100.0
+    up = price_grid_rz(ScenarioGrid.explicit(
+        s0=(100.0 + h,) * 2, sigma=0.2, rate=0.1, maturity=0.25,
+        cost_rate=0.005, payoff=("put", "call"), strike=(100.0, 100.0),
+        n_steps=10), capacity=16)
+    dn = price_grid_rz(ScenarioGrid.explicit(
+        s0=(100.0 - h,) * 2, sigma=0.2, rate=0.1, maturity=0.25,
+        cost_rate=0.005, payoff=("put", "call"), strike=(100.0, 100.0),
+        n_steps=10), capacity=16)
+    want = (up.ask - dn.ask) / (2 * h)
+    np.testing.assert_allclose(res.delta_ask, want, atol=1e-9)
+
+
+def test_explicit_grid_broadcasts():
+    g = ScenarioGrid.explicit(s0=(90.0, 100.0, 110.0), sigma=0.2, rate=0.1,
+                              maturity=0.25, cost_rate=0.01, payoff="put",
+                              strike=100.0, n_steps=8)
+    assert g.n_scenarios == 3 and g.shape == (3,)
+    assert g.payoff == ("put",) * 3
+    res = price_grid_rz(g, capacity=16)
+    # puts deeper in the money are worth more
+    assert res.ask[0] > res.ask[1] > res.ask[2]
+
+
+def test_capacity_overflow_raises():
+    g = ScenarioGrid.cartesian(s0=100.0, cost_rate=0.01,
+                               payoff="bull_spread", strike=95.0,
+                               strike2=105.0, n_steps=12)
+    with pytest.raises(OverflowError):
+        price_grid_rz(g, capacity=3)
+
+
+def test_api_price_american_routes_and_matches():
+    from repro.api import price_american
+    q = price_american(s0=100.0, sigma=0.2, rate=0.1, maturity=0.25,
+                       n_steps=12, payoff="put", strike=100.0,
+                       cost_rate=0.01, capacity=16)
+    ref = price_ref(LatticeModel(s0=100.0, sigma=0.2, rate=0.1,
+                                 maturity=0.25, n_steps=12, cost_rate=0.01),
+                    american_put(100.0))
+    assert q.ask == pytest.approx(ref.ask, abs=TOL)
+    assert q.bid == pytest.approx(ref.bid, abs=TOL)
+    q0 = price_american(s0=100.0, sigma=0.2, rate=0.1, maturity=0.25,
+                        n_steps=12, payoff="put", strike=100.0)
+    assert q0.ask == q0.bid  # friction-free: point quote
+    assert q.bid - TOL <= q0.ask <= q.ask + TOL
+
+
+def test_api_price_grid_multi_steps():
+    from repro.api import price_grid
+    out = price_grid(s0=(95.0, 105.0), payoff="put", strike=100.0,
+                     cost_rate=0.005, n_steps=(8, 12), capacity=16)
+    assert isinstance(out, list) and len(out) == 2
+    assert out[0].grid.n_steps == 8 and out[1].grid.n_steps == 12
+
+
+def test_serve_engine_grid_request():
+    import jax
+    from repro.serve.engine import GridRequest, PricingEngine
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    eng = PricingEngine(mesh, n_steps=12, batch=4, capacity=16,
+                        round_depth=4)
+    req = GridRequest(s0=(95.0, 100.0, 105.0), cost_rate=(0.0, 0.01),
+                      payoff=("put", "call"), strike=100.0, n_steps=12)
+    res = eng.price_grid(req)
+    grid = res.grid
+    assert res.ask.shape == grid.shape and grid.n_scenarios == 12
+    ask = res.ask.ravel()
+    for i in (0, grid.n_scenarios - 1):   # spot-check against the oracle
+        ref = price_ref(_model_of(grid, i),
+                        _oracle_payoff(grid.payoff[i], grid.strike[i],
+                                       grid.strike2[i]))
+        assert ask[i] == pytest.approx(ref.ask, abs=TOL)
+    assert eng.grid_stats["grids"] == 1
+    assert eng.grid_stats["scenarios"] == 12
