@@ -1,0 +1,123 @@
+"""TC grid engine backends head-to-head: jnp vs blocked Pallas rounds.
+
+Prices the same transaction-cost scenario batch through both
+``price_grid_rz`` backends (compile excluded; steady-state serving cost)
+and writes a machine-readable ``BENCH_rz.json`` so the perf trajectory of
+the paper's headline workload is tracked, not anecdotal:
+
+    PYTHONPATH=src python -m benchmarks.bench_rz_pallas \
+        [--n-steps 512] [--contracts 2] [--capacity 24] [--repeats 1] \
+        [--lambda 0.005] [--levels L] [--block B] [--out BENCH_rz.json]
+
+Why the Pallas backend wins on CPU even in interpret mode: the jnp path
+is one ``fori_loop`` over N+1 levels at the *fixed leaf-level width*, so
+it computes ~N^2 lane-levels; the Pallas engine walks the
+``core/partition.py::kernel_round_plan`` schedule, whose per-round
+**re-balancing** (the paper's §4.2 thread shedding) shrinks the lane
+extent with the live tree — ~N^2/2 lane-levels.  On TPU the same rounds
+are the VMEM-resident block scheme.  ``BENCH_*.json`` files are
+deliberately git-ignored (machine-local measurements; CI uploads them as
+artifacts, reference numbers live in docs/ARCHITECTURE.md).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.scenarios import ScenarioGrid, price_grid_rz
+
+# harness (benchmarks.run) defaults: sized for the 1-core CPU budget;
+# the acceptance configuration is the CLI default --n-steps 512.
+HARNESS_N_STEPS = 96
+DEFAULT_N_STEPS = 512
+
+
+def _bench(grid, *, capacity, backend, repeats, levels=None, block=None):
+    kw = dict(capacity=capacity, backend=backend, levels=levels, block=block)
+    res = price_grid_rz(grid, **kw)                       # compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        res = price_grid_rz(grid, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return res, dt
+
+
+def bench(n_steps: int = DEFAULT_N_STEPS, contracts: int = 2,
+          capacity: int = 24, cost_rate: float = 0.005, repeats: int = 1,
+          levels=None, block=None, out: str = "BENCH_rz.json") -> dict:
+    import jax
+    grid = ScenarioGrid.explicit(
+        s0=tuple(np.linspace(95.0, 105.0, contracts)),
+        sigma=0.2, rate=0.1, maturity=0.25, cost_rate=cost_rate,
+        payoff="put", strike=100.0, n_steps=n_steps)
+    n = grid.n_scenarios
+    print(f"{n} contracts (put, lambda={cost_rate}), N={n_steps}, "
+          f"capacity={capacity}")
+
+    r_jnp, t_jnp = _bench(grid, capacity=capacity, backend="jnp",
+                          repeats=repeats)
+    print(f"jnp    : {t_jnp:8.2f} s  ({n / t_jnp:8.3f} contracts/s)")
+    r_pal, t_pal = _bench(grid, capacity=capacity, backend="pallas",
+                          repeats=repeats, levels=levels, block=block)
+    print(f"pallas : {t_pal:8.2f} s  ({n / t_pal:8.3f} contracts/s)  "
+          f"[interpret mode]")
+    gap_ask = float(np.max(np.abs(r_jnp.ask - r_pal.ask)))
+    gap_bid = float(np.max(np.abs(r_jnp.bid - r_pal.bid)))
+    ratio = t_jnp / t_pal
+    print(f"pallas/jnp contracts/s: {ratio:.2f}x   "
+          f"max|diff| ask {gap_ask:.2e} bid {gap_bid:.2e}   "
+          f"max_pieces {r_pal.max_pieces}/{capacity}")
+
+    report = {
+        "bench": "rz_grid_backends",
+        "n_steps": n_steps, "contracts": n, "capacity": capacity,
+        "payoff": "put", "cost_rate": cost_rate, "repeats": repeats,
+        "levels": levels, "block": block, "interpret": True,
+        "device": jax.devices()[0].platform,
+        "jnp": {"seconds": t_jnp, "contracts_per_sec": n / t_jnp},
+        "pallas": {"seconds": t_pal, "contracts_per_sec": n / t_pal},
+        "pallas_over_jnp": ratio,
+        "max_abs_diff_ask": gap_ask, "max_abs_diff_bid": gap_bid,
+        "max_pieces": int(r_pal.max_pieces),
+        "max_pieces_jnp": int(r_jnp.max_pieces),
+    }
+    Path(out).write_text(json.dumps(report, indent=2) + "\n")
+    print(f"wrote {out}")
+    return report
+
+
+def run() -> list[str]:
+    """benchmarks.run entry — harness-sized depth, full JSON artifact."""
+    rep = bench(n_steps=HARNESS_N_STEPS)
+    us = rep["pallas"]["seconds"] * 1e6 / rep["contracts"]
+    return [
+        f"rz_pallas,{us:.0f},"
+        f"ratio={rep['pallas_over_jnp']:.2f}x;"
+        f"jnp_cps={rep['jnp']['contracts_per_sec']:.3f};"
+        f"pallas_cps={rep['pallas']['contracts_per_sec']:.3f};"
+        f"N={rep['n_steps']}",
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n-steps", type=int, default=DEFAULT_N_STEPS)
+    ap.add_argument("--contracts", type=int, default=2)
+    ap.add_argument("--capacity", type=int, default=24)
+    ap.add_argument("--repeats", type=int, default=1)
+    ap.add_argument("--lambda", dest="cost_rate", type=float, default=0.005)
+    ap.add_argument("--levels", type=int, default=None)
+    ap.add_argument("--block", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_rz.json")
+    a = ap.parse_args()
+    bench(n_steps=a.n_steps, contracts=a.contracts, capacity=a.capacity,
+          cost_rate=a.cost_rate, repeats=a.repeats, levels=a.levels,
+          block=a.block, out=a.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -86,6 +86,17 @@ def run() -> list[str]:
     print(f"speedup   : {t_loop / t_grid:.2f}x  "
           f"(max PWL knots {res.max_pieces}/{CAPACITY})")
 
+    # ---- TC engine, blocked-Pallas backend (kernels/rz_step.py) -------
+    price_grid_rz(grid, capacity=CAPACITY, backend="pallas")    # compile
+    t0 = time.perf_counter()
+    res_pal = price_grid_rz(grid, capacity=CAPACITY, backend="pallas")
+    t_rz_pal = time.perf_counter() - t0
+    gap_tc = float(max(np.max(np.abs(res.ask - res_pal.ask)),
+                       np.max(np.abs(res.bid - res_pal.bid))))
+    print(f"pallas    : {t_rz_pal*1e3:8.1f} ms  ({n / t_rz_pal:8.1f} "
+          f"contracts/s, interpret)  max|diff|={gap_tc:.1e}  "
+          f"(deeper-tree head-to-head: benchmarks/bench_rz_pallas.py)")
+
     # ---- greeks fused into the same call ------------------------------
     price_grid_rz(grid, capacity=CAPACITY, greeks=True)     # compile
     t0 = time.perf_counter()
@@ -114,6 +125,8 @@ def run() -> list[str]:
         f"scenario_grid,{t_grid*1e6/n:.0f},"
         f"grid_cps={cs_grid:.0f};loop_cps={cs_loop:.0f};"
         f"speedup={t_loop/t_grid:.2f}x",
+        f"scenario_grid_rz_pallas,{t_rz_pal*1e6/n:.0f},"
+        f"vs_jnp={t_grid/t_rz_pal:.2f}x;gap={gap_tc:.1e}",
         f"scenario_grid_greeks,{t_greeks*1e6/n:.0f},"
         f"rel_cost={t_greeks/t_grid:.2f}x",
         f"scenario_grid_notc,{t_jnp*1e6/nog.n_scenarios:.0f},"

@@ -116,7 +116,8 @@ def price_grid(grid: Optional[ScenarioGrid] = None, *,
                engine: str = "auto", capacity: int = 48,
                greeks: bool = False, backend: str = "jnp",
                n_steps: Union[int, Sequence[int], None] = None,
-               levels: int = 64, block: int = 256, interpret: bool = True,
+               levels: Optional[int] = None, block: Optional[int] = None,
+               interpret: bool = True,
                **axes) -> Union[GridResult, list]:
     """Price a whole grid of scenarios in one compiled call.
 
@@ -128,11 +129,15 @@ def price_grid(grid: Optional[ScenarioGrid] = None, *,
 
     ``engine="auto"`` picks the transaction-cost engine when any scenario
     has ``cost_rate > 0`` and the friction-free engine otherwise.
-    ``backend`` selects the friction-free implementation ("jnp" or
-    "pallas"); ``levels``/``block``/``interpret`` tune the Pallas kernel
-    (set ``interpret=False`` on real TPU hardware).  The tree depth is
-    compile-time static: passing a *sequence* of ``n_steps`` prices one
-    grid per distinct depth and returns the list of results in order.
+    ``backend`` selects the implementation of *either* engine ("jnp" or
+    "pallas" — for the TC engine the blocked PWL rounds of
+    ``kernels/rz_step.py``, for the friction-free one
+    ``kernels/binomial_step.py``); ``levels``/``block``/``interpret``
+    tune the Pallas kernels (set ``interpret=False`` on real TPU
+    hardware; TC ``block``/``levels`` default to the
+    ``core/partition.py`` schedule).  The tree depth is compile-time
+    static: passing a *sequence* of ``n_steps`` prices one grid per
+    distinct depth and returns the list of results in order.
     """
     if grid is None:
         if isinstance(n_steps, (list, tuple)):
@@ -147,9 +152,12 @@ def price_grid(grid: Optional[ScenarioGrid] = None, *,
     if engine == "auto":
         engine = "rz" if np.any(grid.cost_rate > 0.0) else "notc"
     if engine == "rz":
-        return price_grid_rz(grid, capacity=capacity, greeks=greeks)
+        return price_grid_rz(grid, capacity=capacity, greeks=greeks,
+                             backend=backend, levels=levels, block=block,
+                             interpret=interpret)
     if engine == "notc":
         return price_grid_notc(grid, backend=backend, greeks=greeks,
-                               levels=levels, block=block,
+                               levels=64 if levels is None else levels,
+                               block=256 if block is None else block,
                                interpret=interpret)
     raise ValueError(f"unknown engine {engine!r}; use 'auto', 'rz' or 'notc'")

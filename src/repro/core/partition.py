@@ -37,7 +37,16 @@ from __future__ import annotations
 import dataclasses
 from typing import List
 
-__all__ = ["RoundInfo", "ScheduleResult", "simulate_schedule", "table1_reference"]
+__all__ = ["RoundInfo", "ScheduleResult", "simulate_schedule",
+           "table1_reference", "pick_round_depth", "kernel_round_plan",
+           "KernelRound", "DEFAULT_KERNEL_L"]
+
+# Default per-round depth for the blocked Pallas kernels.  The paper's
+# measured optimum L = 5 reflects pthread signal/barrier costs; for a
+# fused VMEM round the per-round cost is one kernel dispatch, so larger L
+# wins until the halo-staleness bound D <= block binds (see
+# kernels/rz_step.py).
+DEFAULT_KERNEL_L = 64
 
 
 @dataclasses.dataclass
@@ -125,6 +134,78 @@ def simulate_schedule(n_steps: int, p: int, L: int,
                          per_thread=counts, rounds=rounds, total_nodes=total)
     res._init_counts = init_counts
     return res
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelRound:
+    """One round of the blocked-kernel schedule (all fields static).
+
+    ``lvl0`` is the base level B whose node values exist when the round
+    starts; the round computes levels ``B-1 .. B-depth``.  ``lanes`` is the
+    (re-balanced) node-axis extent the round operates on — a multiple of
+    ``block`` — and ``nblk = lanes // block`` is the kernel grid size.
+    """
+    lvl0: int
+    depth: int
+    lanes: int
+    block: int
+
+    @property
+    def nblk(self) -> int:
+        return self.lanes // self.block
+
+
+def pick_round_depth(base_level: int, block: int | None,
+                     L: int | None = None) -> int:
+    """Round depth D for the blocked kernels — Algorithm 1's ``D = min(L,
+    q-1)`` with q = nodes per thread, specialised to fixed-size blocks.
+
+    A multi-block round carries one right-neighbour halo block, so stale
+    data reaches the owned lanes after ``block`` steps: D <= block.  A
+    single-block round has no halo (the whole live level is in VMEM) and D
+    is bounded only by the remaining levels.
+    """
+    L = DEFAULT_KERNEL_L if L is None else L
+    d = min(L, base_level)
+    if block is not None and base_level + 1 > block:   # multi-block: halo bound
+        d = min(d, block)
+    return max(1, d)
+
+
+def kernel_round_plan(n_steps: int, *, levels: int | None = None,
+                      block: int | None = None) -> List[KernelRound]:
+    """Static round schedule for the blocked Pallas TC engine.
+
+    Mirrors Algorithm 1's outer loop: the base level B starts at N+1 (the
+    extra instant) and each round advances ``D = pick_round_depth(B)``
+    levels.  Before every round the lane extent is **re-balanced** to the
+    live tree — the kernel analogue of the paper shedding threads as the
+    tree narrows (§4.2): a round at base level B only needs lanes
+    ``0..B``, so later rounds run on ever smaller (statically shaped)
+    arrays instead of dragging the full leaf-level width to the root.
+
+    ``block`` of None means one block per round sized to the live level
+    (pure re-balancing, no halo); otherwise lanes are padded to a multiple
+    of ``block`` and rounds with more than one block use the
+    right-neighbour halo scheme of ``kernels/rz_step.py``.
+    """
+    if n_steps < 1:
+        raise ValueError("need n_steps >= 1")
+    if block is not None and block < 1:
+        raise ValueError("need block >= 1")
+    B = n_steps + 1
+    plan: List[KernelRound] = []
+    while B > 0:
+        D = pick_round_depth(B, block, levels)
+        live = B + 1                       # input lanes 0..B
+        if block is None or live <= block:
+            lanes, blk = live, live        # single block, no halo
+        else:
+            lanes = -(-live // block) * block
+            blk = block
+        plan.append(KernelRound(lvl0=B, depth=D, lanes=lanes, block=blk))
+        B -= D
+    return plan
 
 
 def table1_reference() -> dict:

@@ -24,7 +24,7 @@ import numpy as np
 
 __all__ = [
     "PayoffProcess", "american_put", "american_call", "bull_spread",
-    "cash_settled",
+    "cash_settled", "param_payoff",
 ]
 
 
@@ -35,14 +35,43 @@ class PayoffProcess:
     ``xi``/``zeta`` are written in jnp so they are traceable inside jitted
     engines; they also accept plain numpy arrays (the reference oracles
     convert results back with ``np.asarray``).
+
+    ``params``, when set, is the ``(alpha, zeta, w1, w2, k1, k2)`` tuple of
+    the 4-parameter payoff *family* (payoff-as-data, see
+    :func:`param_payoff`).  Engines that carry the payoff as kernel scalars
+    (the Pallas backends) require it; closure-only payoffs leave it None.
     """
     name: str
     xi: Callable
     zeta: Callable
+    params: tuple = None
 
     # scalar intrinsic value xi + zeta * S (used by the no-TC engine)
     def intrinsic(self, s) -> np.ndarray:
         return np.asarray(self.xi(s) + self.zeta(s) * s)
+
+
+def param_payoff(alpha, zeta, w1, w2, k1, k2,
+                 name: str = "param") -> PayoffProcess:
+    """The 4-parameter payoff family with the parameters carried as data:
+
+        xi(s)   = alpha*k1 + w1*(s - k1)^+ + w2*(s - k2)^+
+        zeta(s) = zeta                                  (constant)
+
+    (put: alpha=1, zeta=-1; call: alpha=-1, zeta=+1; bull spread: w1=1,
+    w2=-1.)  The arguments may be traced scalars — the scenario-grid
+    engines batch heterogeneous contracts by closing xi/zeta over traced
+    per-scenario parameters — or plain floats.
+    """
+    def xi(s):
+        return (alpha * k1 + w1 * jnp.maximum(s - k1, 0.0)
+                + w2 * jnp.maximum(s - k2, 0.0))
+
+    def zeta_fn(s):
+        return jnp.full_like(s, zeta)
+
+    return PayoffProcess(name=name, xi=xi, zeta=zeta_fn,
+                         params=(alpha, zeta, w1, w2, k1, k2))
 
 
 def american_put(strike: float) -> PayoffProcess:
@@ -52,6 +81,7 @@ def american_put(strike: float) -> PayoffProcess:
         name=f"put(K={k:g})",
         xi=lambda s: jnp.full_like(s, k),
         zeta=lambda s: jnp.full_like(s, -1.0),
+        params=(1.0, -1.0, 0.0, 0.0, k, k),
     )
 
 
@@ -62,11 +92,14 @@ def american_call(strike: float) -> PayoffProcess:
         name=f"call(K={k:g})",
         xi=lambda s: jnp.full_like(s, -k),
         zeta=lambda s: jnp.full_like(s, 1.0),
+        params=(-1.0, 1.0, 0.0, 0.0, k, k),
     )
 
 
-def cash_settled(name: str, g: Callable) -> PayoffProcess:
-    return PayoffProcess(name=name, xi=g, zeta=lambda s: jnp.zeros_like(s))
+def cash_settled(name: str, g: Callable,
+                 params: tuple = None) -> PayoffProcess:
+    return PayoffProcess(name=name, xi=g, zeta=lambda s: jnp.zeros_like(s),
+                         params=params)
 
 
 def bull_spread(k_long: float = 95.0, k_short: float = 105.0) -> PayoffProcess:
@@ -75,4 +108,5 @@ def bull_spread(k_long: float = 95.0, k_short: float = 105.0) -> PayoffProcess:
     return cash_settled(
         f"bull_spread({kl:g},{ks:g})",
         lambda s: jnp.maximum(s - kl, 0.0) - jnp.maximum(s - ks, 0.0),
+        params=(0.0, 0.0, 1.0, -1.0, kl, ks),
     )

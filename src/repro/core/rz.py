@@ -20,9 +20,7 @@ reported via the returned ``max_pieces``; callers assert it fits.
 from __future__ import annotations
 
 import dataclasses
-import math
 from functools import partial
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +30,10 @@ from .lattice import LatticeModel
 from .payoff import PayoffProcess
 
 __all__ = ["price_rz", "price_rz_batch", "rz_backward", "rz_level_step",
-           "RZResult"]
+           "rz_level_step_lanes", "rz_backward_pallas", "RZResult",
+           "RZ_BACKENDS"]
+
+RZ_BACKENDS = ("jnp", "pallas")
 
 
 @dataclasses.dataclass
@@ -61,14 +62,16 @@ def _shift_up(f: P.PWL) -> P.PWL:
     return P.PWL(sh(f.xs), sh(f.ys), sh(f.sl), sh(f.sr), sh(f.m))
 
 
-def rz_level_step(z: P.PWL, lvl, params, *, capacity: int, seller: bool,
-                  payoff: PayoffProcess, dtype, idx_offset=0):
-    """One backward level update on a full (node-padded) level.
+def rz_level_step_lanes(z: P.PWL, lvl, params, *, capacity: int, seller: bool,
+                        payoff: PayoffProcess, dtype, idx_offset=0):
+    """One backward level update, returning *per-lane* piece counts.
 
     z: PWL batch over node axis (P lanes);  lvl: scalar level index (traced);
     params: dict with s0, sig_sqrt_dt, r, k.  ``idx_offset`` maps local lane
-    j to global tree column idx_offset + j (used by the sharded engine).
-    Returns (z_new, max_pieces).
+    j to global tree column idx_offset + j (used by the sharded engine and
+    the blocked Pallas kernel).  Returns (z_new, pieces) with ``pieces`` an
+    int32 vector over lanes (0 on non-live lanes) so callers that only own
+    a sub-range of the lanes (kernel halos) can mask before reducing.
     """
     P_nodes = z.sl.shape[0]
     idx = idx_offset + jnp.arange(P_nodes, dtype=dtype)
@@ -90,12 +93,26 @@ def rz_level_step(z: P.PWL, lvl, params, *, capacity: int, seller: bool,
 
     z_out = _select(live, z_new, z)
     pieces = jnp.where(live, jnp.maximum(jnp.maximum(m1, m2), m3), 0)
+    return z_out, pieces
+
+
+def rz_level_step(z: P.PWL, lvl, params, *, capacity: int, seller: bool,
+                  payoff: PayoffProcess, dtype, idx_offset=0):
+    """One backward level update -> (z_new, max_pieces) (scalar reduce)."""
+    z_out, pieces = rz_level_step_lanes(
+        z, lvl, params, capacity=capacity, seller=seller, payoff=payoff,
+        dtype=dtype, idx_offset=idx_offset)
     return z_out, jnp.max(pieces)
 
 
-def _leaf_level(n_steps: int, params, capacity: int, dtype) -> P.PWL:
-    """z at the extra instant t = N+1 with payoff (0, 0)."""
-    P_nodes = n_steps + 2
+def _leaf_level(n_steps: int, params, capacity: int, dtype,
+                lanes: int | None = None) -> P.PWL:
+    """z at the extra instant t = N+1 with payoff (0, 0).
+
+    ``lanes`` (>= n_steps + 2) overrides the node-axis extent — the
+    blocked Pallas engine pads it to a multiple of its block size.
+    """
+    P_nodes = n_steps + 2 if lanes is None else lanes
     idx = jnp.arange(P_nodes, dtype=dtype)
     s = params["s0"] * jnp.exp((2.0 * idx - (n_steps + 1)) * params["sig_sqrt_dt"])
     a = (1.0 + params["k"]) * s
@@ -141,20 +158,98 @@ def rz_backward(s0, sigma, rate, maturity, k, *, n_steps: int, capacity: int,
     return ask, bid, pieces
 
 
-@partial(jax.jit, static_argnames=("n_steps", "capacity", "payoff", "dtype"))
+def rz_backward_pallas(s0, sigma, rate, maturity, k, *, n_steps: int,
+                       capacity: int, payoff: PayoffProcess,
+                       levels: int | None = None, block: int | None = None,
+                       interpret: bool = True, dtype=jnp.float64):
+    """Traceable TC backward recursion through the blocked Pallas kernel.
+
+    Same contract as :func:`rz_backward` — (ask, bid, max_pieces) — but the
+    level walk runs as ``kernels/rz_step.py`` rounds: each pallas_call
+    advances a tile of lattice nodes ``D`` levels entirely in VMEM (the
+    paper's §4 block/region rounds), with the round schedule — depth D and
+    the re-balanced lane extent per round — picked statically by
+    ``core/partition.py::kernel_round_plan``.
+
+    Requires a payoff of the 4-parameter family (``payoff.params`` set):
+    the kernel carries the payoff as scalar data, not closures.  ``block``
+    of None runs one re-balanced block per round (no halo — the right
+    choice whenever a whole level fits in VMEM); an explicit ``block``
+    exercises the multi-block right-neighbour-halo scheme.
+    """
+    from .partition import kernel_round_plan
+    from ..kernels.rz_step import rz_round
+    if payoff.params is None:
+        raise ValueError(
+            f"backend='pallas' needs a 4-parameter-family payoff "
+            f"(payoff.params set); {payoff.name!r} is closure-only. "
+            "Use core.payoff.param_payoff / american_put / american_call / "
+            "bull_spread, or backend='jnp'.")
+    dt = maturity / n_steps
+    params = dict(
+        s0=s0, k=k,
+        sig_sqrt_dt=sigma * jnp.sqrt(dt),
+        r=jnp.exp(rate * dt),
+    )
+    plan = kernel_round_plan(n_steps, levels=levels, block=block)
+    z_s = _leaf_level(n_steps, params, capacity, dtype, lanes=plan[0].lanes)
+    z_b = _leaf_level(n_steps, params, capacity, dtype, lanes=plan[0].lanes)
+    pieces = jnp.zeros((), jnp.int32)
+
+    sc = [params["s0"], params["sig_sqrt_dt"], params["r"], params["k"],
+          *payoff.params]
+    for rnd in plan:
+        # re-balance: shrink the lane extent to this round's live tree
+        cut = lambda f: jax.tree.map(lambda a: a[:rnd.lanes], f)
+        z_s, z_b = cut(z_s), cut(z_b)
+        scalars = jnp.stack([jnp.asarray(v, dtype)
+                             for v in (float(rnd.lvl0), *sc)])
+        z_s, p1 = rz_round(z_s, scalars, levels=rnd.depth, block=rnd.block,
+                           seller=True, interpret=interpret)
+        z_b, p2 = rz_round(z_b, scalars, levels=rnd.depth, block=rnd.block,
+                           seller=False, interpret=interpret)
+        pieces = jnp.maximum(pieces, jnp.maximum(p1, p2))
+
+    root = lambda z: jax.tree.map(lambda a: a[0], z)
+    ask = P.eval_at(root(z_s), jnp.zeros((), dtype))
+    bid = -P.eval_at(root(z_b), jnp.zeros((), dtype))
+    return ask, bid, pieces
+
+
+@partial(jax.jit, static_argnames=("n_steps", "capacity", "payoff", "dtype",
+                                   "backend", "levels", "block", "interpret"))
 def _price_rz_jit(s0, sigma, rate, maturity, k, *, n_steps: int, capacity: int,
-                  payoff: PayoffProcess, dtype=jnp.float64):
+                  payoff: PayoffProcess, dtype=jnp.float64,
+                  backend: str = "jnp", levels=None, block=None,
+                  interpret: bool = True):
+    if backend == "pallas":
+        return rz_backward_pallas(s0, sigma, rate, maturity, k,
+                                  n_steps=n_steps, capacity=capacity,
+                                  payoff=payoff, levels=levels, block=block,
+                                  interpret=interpret, dtype=dtype)
+    if backend != "jnp":
+        raise ValueError(f"unknown backend {backend!r}; use one of "
+                         f"{RZ_BACKENDS}")
     return rz_backward(s0, sigma, rate, maturity, k, n_steps=n_steps,
                        capacity=capacity, payoff=payoff, dtype=dtype)
 
 
 def price_rz(model: LatticeModel, payoff: PayoffProcess,
-             capacity: int = 48) -> RZResult:
-    """Jitted vectorised ask/bid under proportional transaction costs."""
+             capacity: int = 48, *, backend: str = "jnp",
+             levels: int | None = None, block: int | None = None,
+             interpret: bool = True) -> RZResult:
+    """Jitted vectorised ask/bid under proportional transaction costs.
+
+    ``backend="jnp"`` walks levels with ``lax.fori_loop`` over the full
+    node axis; ``backend="pallas"`` runs the blocked VMEM rounds of
+    :func:`rz_backward_pallas`.  Both report overflow identically via
+    ``max_pieces`` / ``OverflowError``.
+    """
     ask, bid, pieces = _price_rz_jit(
         jnp.float64(model.s0), jnp.float64(model.sigma), jnp.float64(model.rate),
         jnp.float64(model.maturity), jnp.float64(model.cost_rate),
-        n_steps=model.n_steps, capacity=capacity, payoff=payoff)
+        n_steps=model.n_steps, capacity=capacity, payoff=payoff,
+        backend=backend, levels=levels, block=block, interpret=interpret)
     res = RZResult(ask=float(ask), bid=float(bid), max_pieces=int(pieces))
     if res.max_pieces > capacity:
         raise OverflowError(

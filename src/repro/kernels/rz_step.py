@@ -1,0 +1,165 @@
+"""Pallas kernel: blocked Roux–Zastawniak PWL rounds (transaction costs).
+
+This is the paper's *headline* workload — American option pricing under
+proportional transaction costs (§3) — run through the §4 block/region
+scheme as a Pallas kernel, the TC sibling of ``binomial_step.py``:
+
+  * the node axis is tiled into blocks of ``block`` lanes; each lane
+    carries one fixed-capacity SoA PWL record (``core/pwl.py``:
+    ``xs, ys: (lanes, K)``, ``sl, sr: (lanes,)``, ``m: (lanes,)``);
+  * one kernel invocation advances a block ``levels`` (the paper's L)
+    levels toward the root entirely in VMEM — per level the full §3
+    recursion ``w = max(z_up, z); v = cone(w / r); z = max/min(u, v)``
+    (``core/rz.py::rz_level_step_lanes``), data-parallel over lanes;
+  * the dependency window (paper's region B) is satisfied by mapping the
+    *same* HBM arrays through two BlockSpecs — the block and its right
+    neighbour — so each invocation sees ``2*block`` lanes and can take up
+    to ``levels <= block`` steps before the stale tail reaches its owned
+    lanes;
+  * blocks are independent within a round (region-A property); rounds
+    iterate on the host (``core/rz.py::rz_backward_pallas``) following the
+    static schedule of ``core/partition.py::kernel_round_plan``, which
+    also re-balances the lane extent as the tree narrows (§4.2's thread
+    shedding).  A single-block round (``nblk == 1``) skips the halo
+    operands entirely: the whole live level is the block.
+
+Capacity overflow reporting is identical to the jnp path: the kernel's
+second output is the per-block maximum of the raw (pre-truncation) knot
+counts over *owned, live* lanes; the engine carries the running max and
+the caller raises ``OverflowError`` if it exceeded K.  Halo lanes are
+excluded — their values go stale within a round, and their owning block
+reports the authoritative count.
+
+The PWL level step is built from sorts/scatters the Mosaic TPU compiler
+does not take today, so this kernel family targets **interpret mode**
+(CPU-exact, float64, used by the parity tests and benchmarks); the no-TC
+``binomial_step.py`` remains the compiled-TPU showcase.  The BlockSpec /
+grid structure is the one a future Mosaic lowering would keep.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core import pwl as P
+from ..core.payoff import param_payoff
+from ..core.rz import rz_level_step_lanes
+
+__all__ = ["rz_round", "RZ_SCALARS"]
+
+# scalar-vector layout of the round kernel:
+#   [lvl0, s0, sig_sqrt_dt, r, k, alpha, zeta, w1, w2, k1, k2]
+# lvl0 is the base level B (levels B-1 .. B-levels are computed); the
+# payoff tail is the 4-parameter family of core/payoff.py::param_payoff.
+RZ_SCALARS = 11
+
+
+def _rz_round_kernel(sc_ref, *refs, levels: int, block: int, seller: bool,
+                     halo: bool):
+    """Advance one block of PWL lanes ``levels`` levels toward the root."""
+    ncomp = 5                                   # xs, ys, sl, sr, m
+    lvl0, s0, sig, r, k = (sc_ref[j] for j in range(5))
+    pay = param_payoff(*(sc_ref[5 + j] for j in range(6)))
+    params = dict(s0=s0, k=k, sig_sqrt_dt=sig, r=r)
+
+    if halo:
+        cur, nxt = refs[:ncomp], refs[ncomp:2 * ncomp]
+        z = P.PWL(*(jnp.concatenate([c[...], n[...]])
+                    for c, n in zip(cur, nxt)))
+        outs = refs[2 * ncomp:]
+    else:
+        z = P.PWL(*(c[...] for c in refs[:ncomp]))
+        outs = refs[ncomp:]
+    dtype = z.xs.dtype
+    capacity = z.capacity
+    lanes = z.sl.shape[0]
+    idx0 = pl.program_id(0) * block
+    owned = jnp.arange(lanes) < block
+
+    def body(j, carry):
+        z, pieces = carry
+        lvl = lvl0 - (j + 1).astype(dtype)
+        z, pc = rz_level_step_lanes(z, lvl, params, capacity=capacity,
+                                    seller=seller, payoff=pay, dtype=dtype,
+                                    idx_offset=idx0)
+        pieces = jnp.maximum(pieces, jnp.max(jnp.where(owned, pc, 0)))
+        return z, pieces
+
+    z, pieces = jax.lax.fori_loop(0, levels, body,
+                                  (z, jnp.zeros((), jnp.int32)))
+    for ref, arr in zip(outs[:ncomp], z):
+        ref[...] = arr[:block]
+    outs[ncomp][...] = pieces[None]
+
+
+def rz_round(z: P.PWL, scalars, *, levels: int, block: int,
+             seller: bool, interpret: bool = True):
+    """One round of ``levels`` TC level-steps over all node blocks.
+
+    z: PWL with node axis of P lanes, P a multiple of ``block``; scalars:
+    (RZ_SCALARS,) array (dtype of z.xs).  Multi-block rounds require
+    ``levels <= block`` (halo staleness bound).  Returns ``(z_new,
+    pieces)`` with ``pieces`` the scalar int32 max raw knot count over
+    owned live lanes — the overflow signal the engines carry.
+    """
+    lanes = z.sl.shape[0]
+    # loud ValueErrors, not asserts: these are user-reachable contracts and
+    # a violation misprices silently (a short scalars vector clamp-indexes
+    # inside the kernel; levels > block lets halo staleness reach owned
+    # lanes) — they must survive python -O
+    if lanes % block != 0:
+        raise ValueError(f"lanes {lanes} not a multiple of block {block}")
+    if scalars.shape != (RZ_SCALARS,):
+        raise ValueError(f"scalars must have shape ({RZ_SCALARS},), "
+                         f"got {scalars.shape}")
+    nblk = lanes // block
+    halo = nblk > 1
+    if halo and levels > block:
+        raise ValueError(f"multi-block round needs levels <= block "
+                         f"(halo staleness bound), got levels={levels} "
+                         f"> block={block}")
+    K = z.capacity
+    dtype = z.xs.dtype
+
+    cur_specs = [
+        pl.BlockSpec((block, K), lambda i: (i, 0)),          # xs
+        pl.BlockSpec((block, K), lambda i: (i, 0)),          # ys
+        pl.BlockSpec((block,), lambda i: (i,)),              # sl
+        pl.BlockSpec((block,), lambda i: (i,)),              # sr
+        pl.BlockSpec((block,), lambda i: (i,)),              # m
+    ]
+    nxt = lambda i: jnp.minimum(i + 1, nblk - 1)             # clamped halo
+    nxt_specs = [
+        pl.BlockSpec((block, K), lambda i: (nxt(i), 0)),
+        pl.BlockSpec((block, K), lambda i: (nxt(i), 0)),
+        pl.BlockSpec((block,), lambda i: (nxt(i),)),
+        pl.BlockSpec((block,), lambda i: (nxt(i),)),
+        pl.BlockSpec((block,), lambda i: (nxt(i),)),
+    ]
+    in_specs = [pl.BlockSpec(memory_space=pl.ANY)] + cur_specs
+    operands = [scalars, *z]
+    if halo:
+        in_specs += nxt_specs
+        operands += list(z)
+
+    kernel = functools.partial(_rz_round_kernel, levels=levels, block=block,
+                               seller=seller, halo=halo)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nblk,),
+        in_specs=in_specs,
+        out_specs=[*cur_specs, pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[
+            jax.ShapeDtypeStruct((lanes, K), dtype),         # xs
+            jax.ShapeDtypeStruct((lanes, K), dtype),         # ys
+            jax.ShapeDtypeStruct((lanes,), dtype),           # sl
+            jax.ShapeDtypeStruct((lanes,), dtype),           # sr
+            jax.ShapeDtypeStruct((lanes,), jnp.int32),       # m
+            jax.ShapeDtypeStruct((nblk,), jnp.int32),        # pieces/block
+        ],
+        interpret=interpret,
+    )(*operands)
+    return P.PWL(*out[:5]), jnp.max(out[5])

@@ -11,7 +11,12 @@ given axes, via ``repro.scenarios``):
 
     PYTHONPATH=src python -m repro.launch.price --grid \
         --n-steps 100 --s0 90,100,110 --sigmas 0.15,0.25 \
-        --lambdas 0,0.005,0.01 --payoffs put,call,bull_spread [--greeks]
+        --lambdas 0,0.005,0.01 --payoffs put,call,bull_spread [--greeks] \
+        [--backend pallas [--levels L] [--block B]]
+
+``--backend pallas`` routes the transaction-cost engine through the
+blocked Pallas kernel rounds (kernels/rz_step.py); the friction-free
+engine (all lambdas 0) likewise uses its Pallas lattice kernel.
 """
 from __future__ import annotations
 
@@ -41,7 +46,8 @@ def run_grid(args) -> None:
         strike=_floats(args.strikes))
     t0 = time.perf_counter()
     res = price_grid(n_steps=args.n_steps, capacity=args.capacity,
-                     greeks=args.greeks, **grid_kwargs)
+                     greeks=args.greeks, backend=args.backend,
+                     levels=args.levels, block=args.block, **grid_kwargs)
     n = res.grid.n_scenarios
     dt = time.perf_counter() - t0
     ask, bid = res.ask.ravel(), res.bid.ravel()
@@ -81,6 +87,14 @@ def main():
     ap.add_argument("--payoffs", default="put")
     ap.add_argument("--strikes", default="100")
     ap.add_argument("--greeks", action="store_true")
+    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"],
+                    help="grid-engine implementation: vectorised jnp "
+                         "recursion or the blocked Pallas kernel rounds")
+    ap.add_argument("--levels", type=int, default=None,
+                    help="Pallas round depth L (default: partition.py pick)")
+    ap.add_argument("--block", type=int, default=None,
+                    help="Pallas node-block size (default: one re-balanced "
+                         "block per round)")
     args = ap.parse_args()
 
     if args.grid:

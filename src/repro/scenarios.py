@@ -55,8 +55,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .core.payoff import PayoffProcess
-from .core.rz import rz_backward
+from .core.payoff import param_payoff
+from .core.rz import RZ_BACKENDS, rz_backward, rz_backward_pallas
 
 __all__ = ["ScenarioGrid", "GridResult", "price_grid_rz", "price_grid_notc",
            "PAYOFF_FAMILIES", "payoff_params"]
@@ -200,16 +200,9 @@ class GridResult:
         return self.ask - self.bid
 
 
-def _param_payoff(alpha, zeta, w1, w2, k1, k2) -> PayoffProcess:
-    """PayoffProcess whose xi/zeta close over traced per-scenario params."""
-    def xi(s):
-        return (alpha * k1 + w1 * jnp.maximum(s - k1, 0.0)
-                + w2 * jnp.maximum(s - k2, 0.0))
-
-    def zeta_fn(s):
-        return jnp.full_like(s, zeta)
-
-    return PayoffProcess(name="param", xi=xi, zeta=zeta_fn)
+# PayoffProcess whose xi/zeta close over traced per-scenario params —
+# now the shared core/payoff.py::param_payoff (kept under the old name).
+_param_payoff = param_payoff
 
 
 # --------------------------------------------------------------------- #
@@ -222,6 +215,21 @@ def _rz_grid_jit(s0, sigma, rate, maturity, k, alpha, zeta, w1, w2, k1, k2,
         pay = _param_payoff(al_, ze_, w1_, w2_, k1_, k2_)
         return rz_backward(s0_, sig_, r_, t_, k_, n_steps=n_steps,
                            capacity=capacity, payoff=pay)
+    return jax.vmap(one)(s0, sigma, rate, maturity, k,
+                         alpha, zeta, w1, w2, k1, k2)
+
+
+@partial(jax.jit, static_argnames=("n_steps", "capacity", "levels", "block",
+                                   "interpret"))
+def _rz_grid_pallas(s0, sigma, rate, maturity, k, alpha, zeta, w1, w2, k1, k2,
+                    *, n_steps: int, capacity: int, levels, block,
+                    interpret: bool):
+    def one(s0_, sig_, r_, t_, k_, al_, ze_, w1_, w2_, k1_, k2_):
+        pay = _param_payoff(al_, ze_, w1_, w2_, k1_, k2_)
+        return rz_backward_pallas(s0_, sig_, r_, t_, k_, n_steps=n_steps,
+                                  capacity=capacity, payoff=pay,
+                                  levels=levels, block=block,
+                                  interpret=interpret)
     return jax.vmap(one)(s0, sigma, rate, maturity, k,
                          alpha, zeta, w1, w2, k1, k2)
 
@@ -268,17 +276,33 @@ def _split_bumps(vals, n: int, copies: int, s0, shape):
 
 
 def price_grid_rz(grid: ScenarioGrid, *, capacity: int = 48,
-                  greeks: bool = False) -> GridResult:
+                  greeks: bool = False, backend: str = "jnp",
+                  levels: Optional[int] = None, block: Optional[int] = None,
+                  interpret: bool = True) -> GridResult:
     """Price every scenario of ``grid`` under transaction costs.
 
     One jitted, vmapped call over the whole (bumped, if ``greeks``) batch;
     returns ask/bid surfaces of ``grid.shape``.  Raises ``OverflowError``
     if any scenario needs more than ``capacity`` PWL knots (re-run with a
     larger capacity), mirroring :func:`repro.core.rz.price_rz`.
+
+    ``backend="jnp"`` walks levels with ``lax.fori_loop`` over the full
+    node axis; ``backend="pallas"`` runs the blocked VMEM rounds of
+    ``kernels/rz_step.py`` under the ``core/partition.py`` round schedule
+    (``levels``/``block`` tune it; ``interpret`` as in the no-TC kernel).
+    Both report ``max_pieces`` identically.
     """
     inputs, copies = _with_bumps(_grid_inputs(grid), greeks)
-    ask, bid, pieces = _rz_grid_jit(*inputs, n_steps=grid.n_steps,
-                                    capacity=capacity)
+    if backend == "jnp":
+        ask, bid, pieces = _rz_grid_jit(*inputs, n_steps=grid.n_steps,
+                                        capacity=capacity)
+    elif backend == "pallas":
+        ask, bid, pieces = _rz_grid_pallas(*inputs, n_steps=grid.n_steps,
+                                           capacity=capacity, levels=levels,
+                                           block=block, interpret=interpret)
+    else:
+        raise ValueError(f"unknown backend {backend!r}; use one of "
+                         f"{RZ_BACKENDS}")
     n = grid.n_scenarios
     max_pieces = int(jnp.max(pieces))
     if max_pieces > capacity:

@@ -65,6 +65,7 @@ class GridRequest:
     strike2: Any = None
     n_steps: int = 100
     greeks: bool = False
+    backend: str = "jnp"     # TC engine implementation: "jnp" | "pallas"
 
 
 class PricingEngine:
@@ -143,7 +144,8 @@ class PricingEngine:
         n = grid.n_scenarios
         bucket = max(self.batch, 1 << (n - 1).bit_length())
         res = price_grid_rz(self._pad_grid(grid, bucket),
-                            capacity=self.capacity, greeks=req.greeks)
+                            capacity=self.capacity, greeks=req.greeks,
+                            backend=req.backend)
         cut = lambda a: (None if a is None
                          else a.ravel()[:n].reshape(grid.shape))
         self.grid_stats["grids"] += 1

@@ -1,0 +1,134 @@
+"""Blocked Pallas TC kernel (``kernels/rz_step.py``) — oracle-locked.
+
+Every configuration of the transaction-cost Pallas engine must reproduce
+the exact sequential recursion (``core/rz_ref.py``) and the vectorised
+jnp engine bit-for-bit at the 1e-9 price tolerance, with identical
+``max_pieces`` overflow reporting.  The kernel is also checked white-box:
+one ``rz_round`` call equals the equivalent chain of
+``rz_level_step_lanes`` updates on its owned lanes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (LatticeModel, american_put, bull_spread,
+                        cash_settled, price_notc_np, price_ref)
+from repro.core.partition import kernel_round_plan
+from repro.core.rz import (price_rz, rz_backward, rz_backward_pallas,
+                           rz_level_step_lanes, _leaf_level)
+from repro.kernels.rz_step import RZ_SCALARS, rz_round
+
+TOL = 1e-9
+
+
+def _model(n=10, k=0.01, **kw):
+    return LatticeModel(s0=100.0, sigma=0.2, rate=0.1, maturity=0.25,
+                        n_steps=n, cost_rate=k, **kw)
+
+
+@pytest.mark.parametrize("payoff", [american_put(100.0),
+                                    bull_spread(95.0, 105.0)])
+def test_pallas_matches_oracle_and_jnp(payoff):
+    m = _model()
+    ref = price_ref(m, payoff)
+    r_jnp = price_rz(m, payoff, capacity=16)
+    r_pal = price_rz(m, payoff, capacity=16, backend="pallas")
+    assert r_pal.ask == pytest.approx(ref.ask, abs=TOL)
+    assert r_pal.bid == pytest.approx(ref.bid, abs=TOL)
+    assert r_pal.ask == pytest.approx(r_jnp.ask, abs=TOL)
+    assert r_pal.bid == pytest.approx(r_jnp.bid, abs=TOL)
+    assert r_pal.max_pieces == r_jnp.max_pieces
+
+
+def test_pallas_blocked_halo_rounds_match():
+    """Multi-block rounds (right-neighbour halo BlockSpec) == jnp."""
+    m = _model(n=10)
+    pay = american_put(100.0)
+    r_jnp = price_rz(m, pay, capacity=16)
+    r_pal = price_rz(m, pay, capacity=16, backend="pallas",
+                     levels=3, block=4)
+    assert r_pal.ask == pytest.approx(r_jnp.ask, abs=TOL)
+    assert r_pal.bid == pytest.approx(r_jnp.bid, abs=TOL)
+    assert r_pal.max_pieces == r_jnp.max_pieces
+
+
+def test_pallas_lambda0_collapses_to_notc():
+    """k = 0: ask == bid == the friction-free binomial price."""
+    m = _model(n=12, k=0.0)
+    pay = american_put(100.0)
+    want = price_notc_np(m, pay)
+    r = price_rz(m, pay, capacity=16, backend="pallas")
+    assert r.ask == pytest.approx(want, abs=TOL)
+    assert r.bid == pytest.approx(want, abs=TOL)
+
+
+def test_pallas_rejects_closure_only_payoff():
+    """The kernel carries the payoff as data; closure-only payoffs must
+    fail loudly, not silently misprice."""
+    pay = cash_settled("weird", lambda s: jnp.maximum(90.0 - 0.5 * s, 0.0))
+    assert pay.params is None
+    with pytest.raises(ValueError, match="pallas"):
+        price_rz(_model(), pay, capacity=16, backend="pallas")
+
+
+def test_pallas_overflow_reported_identically():
+    """Overflow contract parity: same max_pieces from both backends, and
+    both raise OverflowError when it exceeds the capacity."""
+    m = _model(n=12)
+    pay = bull_spread(95.0, 105.0)
+    args = (jnp.float64(m.s0), jnp.float64(m.sigma), jnp.float64(m.rate),
+            jnp.float64(m.maturity), jnp.float64(m.cost_rate))
+    kw = dict(n_steps=m.n_steps, capacity=3, payoff=pay)
+    *_, p_jnp = jax.jit(lambda *a: rz_backward(*a, **kw))(*args)
+    *_, p_pal = jax.jit(lambda *a: rz_backward_pallas(*a, **kw))(*args)
+    assert int(p_jnp) == int(p_pal) > 3
+    for backend in ("jnp", "pallas"):
+        with pytest.raises(OverflowError):
+            price_rz(m, pay, capacity=3, backend=backend)
+
+
+def test_rz_round_equals_level_step_chain():
+    """White-box: one blocked round == ``levels`` full-width level steps
+    on the owned live lanes (the region-A/halo construction is exact)."""
+    n_steps, capacity, block, levels = 9, 12, 4, 3
+    dtype = jnp.float64
+    pay = american_put(100.0)
+    dt = 0.25 / n_steps
+    params = dict(s0=jnp.float64(100.0), k=jnp.float64(0.01),
+                  sig_sqrt_dt=0.2 * jnp.sqrt(jnp.float64(dt)),
+                  r=jnp.exp(jnp.float64(0.1 * dt)))
+    lanes = 12                                   # n_steps+2=11 -> pad to 3 blocks
+    z = _leaf_level(n_steps, params, capacity, dtype, lanes=lanes)
+
+    # reference: full-width level steps
+    z_ref, lvl0 = z, n_steps + 1
+    pieces_ref = jnp.zeros((lanes,), jnp.int32)
+    for j in range(levels):
+        z_ref, pc = rz_level_step_lanes(
+            z_ref, jnp.asarray(lvl0 - (j + 1), dtype), params,
+            capacity=capacity, seller=True, payoff=pay, dtype=dtype)
+        pieces_ref = jnp.maximum(pieces_ref, pc)
+
+    scalars = jnp.stack([jnp.asarray(v, dtype) for v in
+                         (lvl0, 100.0, float(params["sig_sqrt_dt"]),
+                          float(params["r"]), 0.01, *pay.params)])
+    assert scalars.shape == (RZ_SCALARS,)
+    z_krn, pieces = rz_round(z, scalars, levels=levels, block=block,
+                             seller=True)
+    live = np.arange(lanes) <= lvl0 - levels     # live lanes at the new base
+    for a_ref, a_krn in zip(z_ref, z_krn):
+        np.testing.assert_array_equal(np.asarray(a_ref)[live],
+                                      np.asarray(a_krn)[live])
+    assert int(pieces) == int(jnp.max(pieces_ref))
+
+
+@pytest.mark.parametrize("levels,block", [(None, None), (2, None), (3, 4)])
+def test_round_plan_is_respected(levels, block):
+    """The engine prices through exactly the partition.py schedule."""
+    plan = kernel_round_plan(10, levels=levels, block=block)
+    assert sum(r.depth for r in plan) == 11
+    r = price_rz(_model(), american_put(100.0), capacity=16,
+                 backend="pallas", levels=levels, block=block)
+    ref = price_ref(_model(), american_put(100.0))
+    assert r.ask == pytest.approx(ref.ask, abs=TOL)

@@ -40,12 +40,21 @@ def test_split_stages_rejects_uneven():
 
 
 @pytest.mark.slow
-@pytest.mark.xfail(
+# Versioned quarantine, NOT an xfail: on jax 0.4.x the partial-manual
+# shard_map (axis_names={'pod'}, data axis auto) lowers axis_index to a
+# PartitionId instruction the SPMD partitioner rejects with
+# "UNIMPLEMENTED: PartitionId instruction is not supported for SPMD
+# partitioning".  The failure mode is a ~15-minute subprocess crash, so an
+# xfail would burn the whole slow-lane budget documenting a known
+# toolchain gap.  The guard keys on the `jax.shard_map` top-level export
+# (the repro/compat.py probe, present from jax 0.5), so the test re-arms
+# itself the moment the pinned toolchain moves.  Tracked in
+# docs/KNOWN_ISSUES.md ("Open" section).
+@pytest.mark.skipif(
     not hasattr(jax, "shard_map"),
-    reason="partial-manual shard_map (axis_names={'pod'}, data axis auto) "
-           "lowers axis_index to a PartitionId instruction the jax 0.4.x "
-           "SPMD partitioner rejects; needs jax >= 0.5 "
-           "(see docs/KNOWN_ISSUES.md)")
+    reason="partial-manual shard_map needs jax >= 0.5 (PartitionId "
+           "unsupported by the 0.4.x SPMD partitioner); see "
+           "docs/KNOWN_ISSUES.md")
 def test_pipelined_loss_matches_single_device():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"

@@ -79,3 +79,94 @@ def test_scale_linearity(kf, ef, alpha):
     f = _pwl(kf[0], kf[1], *ef)
     ys = np.linspace(-5, 5, 41)
     np.testing.assert_allclose(f.scale(alpha)(ys), alpha * f(ys), rtol=1e-9)
+
+
+# ---------------------------------------------------------------------- #
+# fixed-capacity SoA engine (core/pwl.py) vs the exact oracle
+# ---------------------------------------------------------------------- #
+CAP = 32          # roomy capacity: these properties are about *values*
+_QS = np.linspace(-8.0, 8.0, 97)
+
+
+def _soa(ref):
+    from repro.core import pwl as P
+    return P.from_ref(ref, CAP)
+
+
+@given(knots, end_slopes, st.floats(80, 140), st.floats(20, 70))
+@_settings
+def test_soa_cone_matches_oracle(kf, ef, a, b):
+    """core/pwl.py::cone_infconv == pwl_ref oracle, values and end slopes."""
+    from repro.core import pwl as P
+    f = _pwl(kf[0], kf[1], min(ef[0], -b - 1), max(ef[1], -a))
+    want = R.cone_infconv(f, a, b)
+    got, m_raw = P.cone_infconv(_soa(f), a, b, CAP)
+    assert int(m_raw) <= CAP          # capacity sized for the property
+    got_ref = P.to_ref(got)
+    np.testing.assert_allclose(got_ref(_QS), want(_QS), atol=1e-7)
+    assert abs(got_ref.s_left - want.s_left) < 1e-7 * (1 + abs(want.s_left))
+    assert abs(got_ref.s_right - want.s_right) < 1e-7 * (1 + abs(want.s_right))
+    # overflow contract on the cone: a too-small output capacity must be
+    # *reported* via the raw count, never silently truncated away
+    tiny = 2
+    _, m_tiny = P.cone_infconv(_soa(f), a, b, tiny)
+    if want.m > tiny:
+        assert int(m_tiny) > tiny
+    assert int(m_tiny) == int(m_raw)  # raw count is capacity-independent
+
+
+@given(knots, end_slopes, st.floats(20, 140))
+@_settings
+def test_soa_cone_lambda0_degenerate(kf, ef, a):
+    """lambda = 0 collapses the cost cone to a line (a == b): the
+    inf-convolution must still be exact, not NaN/divide-by-zero, in both
+    implementations (this is the k=0 'no transaction costs' path and the
+    t=0 'no costs at time zero' path of the engines)."""
+    from repro.core import pwl as P
+    f = _pwl(kf[0], kf[1], min(ef[0], -a - 1), max(ef[1], -a))
+    want = R.cone_infconv(f, a, a)
+    got, m_raw = P.cone_infconv(_soa(f), a, a, CAP)
+    got_ref = P.to_ref(got)
+    vals = got_ref(_QS)
+    assert np.all(np.isfinite(vals))
+    np.testing.assert_allclose(vals, want(_QS), atol=1e-7)
+    # a == b: result slopes all equal -a (an affine function)
+    assert np.all(np.abs(got_ref.slopes() + a) < 1e-6 * (1 + a))
+
+
+@given(st.floats(-50, 50), st.floats(-3, 3), st.floats(80, 140),
+       st.floats(20, 70))
+@_settings
+def test_soa_expense_matches_oracle(xi, zeta, s_ask, s_bid):
+    """core/pwl.py::expense == pwl_ref.expense_function (eq. (1)/(6)),
+    including the degenerate s_ask == s_bid (lambda = 0) form."""
+    from repro.core import pwl as P
+    for ask, bid in ((s_ask, s_bid), (s_ask, s_ask)):   # incl. degenerate
+        want = R.expense_function(xi, zeta, ask, bid)
+        got = P.to_ref(P.expense(xi, zeta, ask, bid, CAP))
+        np.testing.assert_allclose(got(_QS), want(_QS), atol=1e-8)
+        # value at the kink is exactly xi by construction
+        np.testing.assert_allclose(got(zeta), xi, atol=1e-9)
+
+
+@given(knots, knots, end_slopes, end_slopes, st.integers(2, 4))
+@_settings
+def test_soa_envelope_overflow_is_reported_never_silent(kf, kg, ef, eg, cap):
+    """The overflow contract of docs/ARCHITECTURE.md §2: every envelope
+    returns the raw knot count BEFORE truncation.  Whenever the exact
+    result needs more knots than the output capacity, m_raw must say so
+    (m_raw > cap); and whenever m_raw fits, the truncated result must be
+    the exact oracle envelope — overflow is detected, never silent."""
+    from repro.core import pwl as P
+    f = _pwl(kf[0], kf[1], *ef)
+    g = _pwl(kg[0], kg[1], *eg)
+    want = R.pwl_max(f, g)
+    got, m_raw = P.envelope2(P.from_ref(f, CAP), P.from_ref(g, CAP),
+                             cap, take_max=True)
+    m_raw = int(m_raw)
+    if want.m > cap:
+        assert m_raw > cap, (
+            f"oracle needs {want.m} knots > cap={cap} but m_raw={m_raw} "
+            "reported a fit: silent truncation")
+    if m_raw <= cap:
+        np.testing.assert_allclose(P.to_ref(got)(_QS), want(_QS), atol=1e-7)

@@ -41,18 +41,68 @@ def big_grid():
         n_steps=10)
 
 
-def test_grid_rz_matches_sequential_oracle(big_grid):
+@pytest.fixture(scope="module")
+def big_grid_oracle(big_grid):
+    """Exact sequential (ask, bid) per scenario — computed once, shared
+    by the per-backend parity tests."""
+    out = []
+    for i in range(big_grid.n_scenarios):
+        ref = price_ref(_model_of(big_grid, i),
+                        _oracle_payoff(big_grid.payoff[i], big_grid.strike[i],
+                                       big_grid.strike2[i]))
+        out.append((ref.ask, ref.bid))
+    return np.asarray(out)
+
+
+def test_grid_rz_matches_sequential_oracle(big_grid, big_grid_oracle):
     grid = big_grid
     assert grid.n_scenarios >= 100
     res = price_grid_rz(grid, capacity=16)
     ask, bid = res.ask.ravel(), res.bid.ravel()
     for i in range(grid.n_scenarios):
-        ref = price_ref(_model_of(grid, i),
-                        _oracle_payoff(grid.payoff[i], grid.strike[i],
-                                       grid.strike2[i]))
-        assert ask[i] == pytest.approx(ref.ask, abs=TOL), (i, grid.payoff[i])
-        assert bid[i] == pytest.approx(ref.bid, abs=TOL), (i, grid.payoff[i])
+        want_ask, want_bid = big_grid_oracle[i]
+        assert ask[i] == pytest.approx(want_ask, abs=TOL), (i, grid.payoff[i])
+        assert bid[i] == pytest.approx(want_bid, abs=TOL), (i, grid.payoff[i])
     assert res.max_pieces <= 16
+
+
+def test_grid_rz_pallas_backend_parity(big_grid, big_grid_oracle):
+    """Acceptance gate of the blocked Pallas TC engine: on the same
+    108-scenario mixed grid (payoff families x lambda in {0, 0.5%, 1%} x
+    spots x vols x strikes), ``backend="pallas"`` must match
+    ``backend="jnp"`` AND the exact sequential oracle to 1e-9 on ask and
+    bid, with identical ``max_pieces`` overflow reporting — for both the
+    lambda > 0 rows and the degenerate lambda = 0 rows."""
+    grid = big_grid
+    res_j = price_grid_rz(grid, capacity=16)
+    res_p = price_grid_rz(grid, capacity=16, backend="pallas")
+    np.testing.assert_allclose(res_p.ask, res_j.ask, atol=TOL)
+    np.testing.assert_allclose(res_p.bid, res_j.bid, atol=TOL)
+    assert res_p.max_pieces == res_j.max_pieces
+    ask, bid = res_p.ask.ravel(), res_p.bid.ravel()
+    np.testing.assert_allclose(ask, big_grid_oracle[:, 0], atol=TOL)
+    np.testing.assert_allclose(bid, big_grid_oracle[:, 1], atol=TOL)
+    # lambda = 0 rows collapse to a point quote on the pallas path too
+    lam0 = grid.cost_rate.reshape(grid.shape) == 0.0
+    assert np.abs((res_p.ask - res_p.bid)[lam0]).max() < TOL
+    assert (res_p.spread >= -1e-12).all()
+
+
+def test_grid_rz_pallas_blocked_halo_config():
+    """The multi-block (right-neighbour halo) kernel configuration, at
+    grid level: small blocks force several blocks + rounds per level
+    walk."""
+    grid = ScenarioGrid.explicit(
+        s0=(95.0, 105.0, 100.0, 100.0), sigma=0.2, rate=0.1, maturity=0.25,
+        cost_rate=(0.01, 0.0, 0.005, 0.01),
+        payoff=("put", "call", "bull_spread", "put"),
+        strike=100.0, n_steps=12)
+    res_j = price_grid_rz(grid, capacity=16)
+    res_p = price_grid_rz(grid, capacity=16, backend="pallas",
+                          levels=6, block=8)
+    np.testing.assert_allclose(res_p.ask, res_j.ask, atol=TOL)
+    np.testing.assert_allclose(res_p.bid, res_j.bid, atol=TOL)
+    assert res_p.max_pieces == res_j.max_pieces
 
 
 def test_grid_rz_interval_structure(big_grid):
@@ -176,3 +226,12 @@ def test_serve_engine_grid_request():
         assert ask[i] == pytest.approx(ref.ask, abs=TOL)
     assert eng.grid_stats["grids"] == 1
     assert eng.grid_stats["scenarios"] == 12
+    # the serving path threads the TC backend through GridRequest
+    res_p = eng.price_grid(GridRequest(
+        s0=(95.0, 100.0, 105.0), cost_rate=(0.0, 0.01),
+        payoff=("put", "call"), strike=100.0, n_steps=12,
+        backend="pallas"))
+    np.testing.assert_allclose(res_p.ask, res.ask, atol=TOL)
+    np.testing.assert_allclose(res_p.bid, res.bid, atol=TOL)
+    assert res_p.max_pieces == res.max_pieces
+    assert eng.grid_stats["grids"] == 2
