@@ -1,0 +1,183 @@
+"""Serving throughput: coalescing scheduler vs one-flush-per-request desk.
+
+Replays the same synthetic request trace (mixed payoff families, strikes,
+spots, vols and tree depths — ``repro.launch.serve_pricing.synth_trace``)
+through
+
+  * ``scheduler`` — :class:`repro.serve.scheduler.PricingService` with
+    size-triggered micro-batches (``--max-batch``), power-of-two padding
+    and the result LRU cache (also measured with the cache disabled, so
+    the coalescing win is reported separately from the caching win);
+  * ``baseline``  — one ``flush`` per request through ``PricingEngine``
+    (batch 1, no cache): the pre-scheduler serving shape.
+
+and writes ``BENCH_serve.json`` with contracts/sec for each, the
+scheduler/baseline speedup, and an **oracle audit**: every quote the
+scheduler returned is checked against ``repro.api.price_american`` at
+1e-9.  Replays are measured jit-warm (a warm-up replay compiles every
+batch shape first) — steady-state serving cost, the repo's benchmark
+convention.  ``BENCH_*.json`` files are git-ignored; CI uploads this one
+as an artifact.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve \
+        [--requests 1000] [--max-batch 64] [--n-steps 16,24] \
+        [--tc-fraction 0.0] [--capacity 16] [--out BENCH_serve.json]
+
+``--tc-fraction`` adds a transaction-cost slice; the RZ engine compiles
+for ~15 s per batch shape on this CPU and coalesces to only ~2x
+per-contract, so the slice defaults to 0 (route-correctness for TC
+traffic is covered by ``tests/test_serve.py``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+from repro.api import price_american
+from repro.launch.serve_pricing import synth_trace
+from repro.serve.engine import PricingEngine
+from repro.serve.scheduler import PricingService
+
+HARNESS_REQUESTS = 200
+DEFAULT_REQUESTS = 1000
+
+
+def _replay_scheduler(trace, *, max_batch, capacity, cache_size):
+    svc = PricingService(max_batch=max_batch, capacity=capacity,
+                         result_cache_size=cache_size, deadline_ms=1e9)
+    t0 = time.perf_counter()
+    ids = [svc.submit(r) for r in trace]   # size trigger flushes full buckets
+    svc.flush()
+    dt = time.perf_counter() - t0
+    return {rid: svc.result(rid) for rid in ids}, dt, svc.metrics()
+
+
+def _replay_baseline(trace, *, capacity):
+    eng = PricingEngine(None, n_steps=trace[0].n_steps, batch=1,
+                        capacity=capacity)
+    quotes = {}
+    t0 = time.perf_counter()
+    for req in trace:
+        rid = eng.submit(req)
+        quotes[rid] = eng.flush()[rid]
+    dt = time.perf_counter() - t0
+    return quotes, dt, eng.service.metrics()
+
+
+def _audit(trace, quotes, ids_in_order):
+    """max |quote - price_american| over the whole trace (dedup by key)."""
+    refs = {}
+    worst = 0.0
+    for req, rid in zip(trace, ids_in_order):
+        key = (req.s0, req.sigma, req.rate, req.maturity, req.cost_rate,
+               req.payoff, req.strike, req.n_steps)
+        if key not in refs:
+            refs[key] = price_american(
+                s0=req.s0, sigma=req.sigma, rate=req.rate,
+                maturity=req.maturity, n_steps=req.n_steps,
+                payoff=req.payoff, strike=req.strike,
+                cost_rate=req.cost_rate, capacity=32)
+        ref = refs[key]
+        q = quotes[rid]
+        ask, bid = (q.ask, q.bid) if hasattr(q, "ask") else q
+        worst = max(worst, abs(ask - ref.ask), abs(bid - ref.bid))
+    return worst, len(refs)
+
+
+def bench(requests: int = DEFAULT_REQUESTS, max_batch: int = 64,
+          n_steps=(16, 24), tc_fraction: float = 0.0, capacity: int = 16,
+          seed: int = 0, out: str = "BENCH_serve.json") -> dict:
+    import jax
+    trace = synth_trace(requests, n_steps=n_steps, tc_fraction=tc_fraction,
+                        seed=seed)
+    n = len(trace)
+    print(f"{n}-request mixed trace (payoffs x strikes x spots x vols x "
+          f"depths {n_steps}, tc_fraction={tc_fraction})")
+
+    # warm-up replays: compile every batch shape both paths will hit
+    _replay_scheduler(trace, max_batch=max_batch, capacity=capacity,
+                      cache_size=4096)
+    _replay_baseline(trace, capacity=capacity)
+
+    quotes, t_sched, m_sched = _replay_scheduler(
+        trace, max_batch=max_batch, capacity=capacity, cache_size=4096)
+    print(f"scheduler          : {t_sched:7.3f} s "
+          f"({n / t_sched:9.1f} contracts/s)  "
+          f"batches={m_sched['batches']} "
+          f"cache_hits={m_sched['cache_hits']} "
+          f"pad_waste={m_sched['pad_waste']:.1%}")
+    _, t_nc, m_nc = _replay_scheduler(
+        trace, max_batch=max_batch, capacity=capacity, cache_size=0)
+    print(f"scheduler (no LRU) : {t_nc:7.3f} s "
+          f"({n / t_nc:9.1f} contracts/s)  batches={m_nc['batches']}")
+    base_quotes, t_base, m_base = _replay_baseline(trace, capacity=capacity)
+    print(f"per-request flush  : {t_base:7.3f} s "
+          f"({n / t_base:9.1f} contracts/s)  batches={m_base['batches']}")
+
+    speedup = t_base / t_sched
+    speedup_nocache = t_base / t_nc
+    worst, distinct = _audit(trace, quotes, sorted(quotes))
+    worst_base, _ = _audit(trace, base_quotes, sorted(base_quotes))
+    print(f"speedup: {speedup:.2f}x with result cache, "
+          f"{speedup_nocache:.2f}x coalescing only (criterion: >= 2x)")
+    print(f"oracle audit: {distinct} distinct scenarios, "
+          f"max|err| scheduler {worst:.2e} baseline {worst_base:.2e} "
+          f"(tol 1e-9)")
+    assert worst < 1e-9 and worst_base < 1e-9
+
+    report = {
+        "bench": "serve_scheduler_vs_per_request",
+        "requests": n, "max_batch": max_batch, "n_steps": list(n_steps),
+        "tc_fraction": tc_fraction, "capacity": capacity, "seed": seed,
+        "device": jax.devices()[0].platform,
+        "scheduler": {"seconds": t_sched, "contracts_per_sec": n / t_sched,
+                      "metrics": m_sched},
+        "scheduler_nocache": {"seconds": t_nc,
+                              "contracts_per_sec": n / t_nc,
+                              "metrics": m_nc},
+        "baseline": {"seconds": t_base, "contracts_per_sec": n / t_base,
+                     "metrics": m_base},
+        "speedup": speedup, "speedup_nocache": speedup_nocache,
+        "meets_2x_criterion": bool(speedup_nocache >= 2.0),
+        "oracle": {"distinct_scenarios": distinct,
+                   "max_abs_err_scheduler": worst,
+                   "max_abs_err_baseline": worst_base, "tol": 1e-9},
+    }
+    Path(out).write_text(json.dumps(report, indent=2) + "\n")
+    print(f"wrote {out}")
+    return report
+
+
+def run() -> list[str]:
+    """benchmarks.run entry — harness-sized trace, full JSON artifact."""
+    rep = bench(requests=HARNESS_REQUESTS)
+    us = rep["scheduler"]["seconds"] * 1e6 / rep["requests"]
+    return [
+        f"serve,{us:.0f},"
+        f"speedup={rep['speedup']:.2f}x;"
+        f"nocache={rep['speedup_nocache']:.2f}x;"
+        f"sched_cps={rep['scheduler']['contracts_per_sec']:.0f};"
+        f"base_cps={rep['baseline']['contracts_per_sec']:.0f}",
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--requests", type=int, default=DEFAULT_REQUESTS)
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--n-steps", default="16,24")
+    ap.add_argument("--tc-fraction", type=float, default=0.0)
+    ap.add_argument("--capacity", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    a = ap.parse_args()
+    bench(requests=a.requests, max_batch=a.max_batch,
+          n_steps=tuple(int(x) for x in a.n_steps.split(",")),
+          tc_fraction=a.tc_fraction, capacity=a.capacity, seed=a.seed,
+          out=a.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -14,9 +14,10 @@ import traceback
 
 
 def main() -> None:
-    from . import (bench_kernels, bench_rz_pallas, fig9_spreads,
-                   rz_convergence, scenario_grid, table1_node_counts,
-                   table2_tc_speedup, table3_notc_speedup)
+    from . import (bench_kernels, bench_rz_pallas, bench_serve,
+                   fig9_spreads, rz_convergence, scenario_grid,
+                   table1_node_counts, table2_tc_speedup,
+                   table3_notc_speedup)
     all_benches = {
         "table1": table1_node_counts.run,
         "table2": table2_tc_speedup.run,
@@ -26,6 +27,7 @@ def main() -> None:
         "kernels": bench_kernels.run,
         "grid": scenario_grid.run,
         "rz_pallas": bench_rz_pallas.run,
+        "serve": bench_serve.run,
     }
     wanted = sys.argv[1:] or list(all_benches)
     csv_rows = []

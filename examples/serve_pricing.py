@@ -1,10 +1,13 @@
-"""Pricing-desk service: batched ask/bid quoting over the distributed
-lattice engine (contracts on the data axis, tree nodes on the model axis).
+"""Pricing-desk service: continuous-batching ask/bid quoting over the
+compiled grid engines (see docs/SERVING.md for the operator's guide).
 
     PYTHONPATH=src python examples/serve_pricing.py
 
-On this container the mesh is 1x1; on a pod the same code runs on the
-16x16 production mesh (see repro/launch/price.py).
+A strike/spot/cost quote surface is submitted as a stream of
+single-contract requests; the scheduler coalesces them — frictionless
+requests onto the cheap no-TC lattice, transaction-cost requests onto
+the Roux–Zastawniak engine — pads each micro-batch to a power-of-two
+bucket, and reports batching/caching/latency metrics.
 """
 import sys
 import time
@@ -12,41 +15,49 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-import jax  # noqa: E402
+from repro.serve.engine import PriceRequest  # noqa: E402
+from repro.serve.scheduler import PricingService  # noqa: E402
 
-from repro.serve.engine import PriceRequest, PricingEngine  # noqa: E402
+SPOTS = (92.0, 96.0, 100.0, 104.0, 108.0)
+COSTS = (0.0, 0.005, 0.01)
 
 
 def main():
-    mesh = jax.make_mesh((1, 1), ("data", "model"))
-    eng = PricingEngine(mesh, n_steps=100, batch=8, capacity=32,
-                        round_depth=8)
+    desk = PricingService(max_batch=16, deadline_ms=5.0,
+                          default_n_steps=24, capacity=24)
 
-    # a strike/spot/cost grid, as a desk would quote it
+    # a strike/spot/cost grid, as a desk would quote it (N=24 keeps the
+    # RZ batch CPU-friendly; scale n_steps up freely on accelerators)
     reqs = [PriceRequest(s0=s0, sigma=0.2, rate=0.1, maturity=0.25,
                          cost_rate=k)
-            for s0 in (92.0, 96.0, 100.0, 104.0, 108.0)
-            for k in (0.0, 0.005, 0.01)]
-    ids = [eng.submit(r) for r in reqs]
+            for s0 in SPOTS for k in COSTS]
+    ids = [desk.submit(r) for r in reqs]
 
     t0 = time.perf_counter()
-    out = eng.flush()
+    desk.flush()
     dt = time.perf_counter() - t0
+    out = {rid: desk.result(rid) for rid in ids}
 
     print(f"priced {len(reqs)} contracts in {dt:.2f}s "
-          f"({len(reqs)/dt:.1f} contracts/s, N=100 lattice, incl. compile)")
+          f"({len(reqs)/dt:.1f} contracts/s, N=24 lattice, incl. compile)")
     print(f"{'S0':>6} {'k':>7} {'ask':>9} {'bid':>9} {'spread':>8}")
     for req, rid in zip(reqs, ids):
-        ask, bid = out[rid]
-        print(f"{req.s0:>6.1f} {req.cost_rate:>7.3%} {ask:>9.4f} "
-              f"{bid:>9.4f} {ask-bid:>8.4f}")
+        q = out[rid]
+        print(f"{req.s0:>6.1f} {req.cost_rate:>7.3%} {q.ask:>9.4f} "
+              f"{q.bid:>9.4f} {q.spread:>8.4f}")
 
     # invariant: spreads grow with the cost rate at fixed spot
-    for s0 in (92.0, 96.0, 100.0, 104.0, 108.0):
-        sp = [out[ids[i]][0] - out[ids[i]][1]
+    for s0 in SPOTS:
+        sp = [out[ids[i]].spread
               for i, r in enumerate(reqs) if r.s0 == s0]
         assert sp[0] <= sp[1] <= sp[2] + 1e-9
     print("spread monotonicity ✓")
+
+    m = desk.metrics()
+    print(f"batches: {m['batches']} (engines {m['engine_batches']}), "
+          f"pad waste {m['pad_waste']:.0%}, "
+          f"p50/p99 latency {m['p50_latency_ms']:.0f}/"
+          f"{m['p99_latency_ms']:.0f} ms")
 
 
 if __name__ == "__main__":

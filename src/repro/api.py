@@ -45,7 +45,7 @@ from .scenarios import (PAYOFF_FAMILIES, GridResult, ScenarioGrid,
                         price_grid_notc, price_grid_rz)
 
 __all__ = [
-    "price_american", "price_grid", "PriceQuote", "GridResult",
+    "price_american", "price_grid", "price_flat", "PriceQuote", "GridResult",
     "ScenarioGrid", "LatticeModel", "PayoffProcess", "PAYOFF_FAMILIES",
     "american_put", "american_call", "bull_spread", "cash_settled",
 ]
@@ -161,3 +161,36 @@ def price_grid(grid: Optional[ScenarioGrid] = None, *,
                                block=256 if block is None else block,
                                interpret=interpret)
     raise ValueError(f"unknown engine {engine!r}; use 'auto', 'rz' or 'notc'")
+
+
+def price_flat(*, s0, sigma, rate, maturity, cost_rate=0.0, payoff="put",
+               strike=100.0, strike2=None, n_steps: int = 100,
+               engine: str = "auto", capacity: int = 48,
+               greeks: bool = False, backend: str = "jnp",
+               pad_to: Optional[int] = None) -> GridResult:
+    """Price a *flat* batch of heterogeneous contracts in one compiled call.
+
+    The serving layer's entry point: element-wise scenario arrays (no
+    cartesian product — request ``i`` is row ``i``), mixed payoff families
+    batched as data (:func:`repro.core.payoff.param_payoff`).  ``pad_to``
+    pads the batch by repeating the last row so a request stream reuses a
+    small set of compiled batch shapes; results keep the padded length —
+    slice the first ``len(s0)`` rows (the scheduler does this for you).
+
+        >>> from repro.api import price_flat
+        >>> res = price_flat(s0=(95.0, 100.0), payoff=("put", "call"),
+        ...                  strike=(100.0, 90.0), sigma=0.2, rate=0.1,
+        ...                  maturity=0.25, n_steps=8, pad_to=4)
+        >>> res.ask.shape          # padded flat batch
+        (4,)
+        >>> bool(res.ask[0] > 0)
+        True
+    """
+    grid = ScenarioGrid.explicit(
+        s0=s0, sigma=sigma, rate=rate, maturity=maturity,
+        cost_rate=cost_rate, payoff=payoff, strike=strike, strike2=strike2,
+        n_steps=n_steps)
+    if pad_to is not None:
+        grid = grid.pad_to(pad_to)
+    return price_grid(grid, engine=engine, capacity=capacity, greeks=greeks,
+                      backend=backend)

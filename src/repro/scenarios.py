@@ -172,6 +172,30 @@ class ScenarioGrid:
                    strike2=np.asarray(k2, np.float64).copy(),
                    payoff=tuple(payoff), n_steps=int(n_steps), shape=(n,))
 
+    def pad_to(self, to: int) -> "ScenarioGrid":
+        """Flat copy padded to ``to`` scenarios by repeating the last row.
+
+        The serving layer pads micro-batches up to a small set of bucket
+        sizes so a stream of differently-sized batches hits a handful of
+        compiled programs; the padded grid is flat (``shape == (to,)``) and
+        callers slice results back to the first ``n_scenarios`` rows.
+        Repeating a real row keeps the pad lanes numerically benign (no
+        fresh PWL knot patterns, no overflow surprises).
+        """
+        n = self.n_scenarios
+        if to < n:
+            raise ValueError(f"pad_to({to}) below batch size {n}")
+        if to == n and self.shape == (n,):
+            return self
+        pad = to - n
+        rep = lambda a: np.concatenate([a, np.repeat(a[-1:], pad)])
+        return ScenarioGrid(
+            s0=rep(self.s0), sigma=rep(self.sigma), rate=rep(self.rate),
+            maturity=rep(self.maturity), cost_rate=rep(self.cost_rate),
+            strike=rep(self.strike), strike2=rep(self.strike2),
+            payoff=self.payoff + (self.payoff[-1],) * pad,
+            n_steps=self.n_steps, shape=(to,))
+
 
 @dataclasses.dataclass
 class GridResult:

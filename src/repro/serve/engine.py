@@ -4,47 +4,50 @@ Two first-class services:
 
 1. ``PricingEngine`` — the paper's workload as a production service: a
    batched option-pricing desk.  Single-contract requests (``submit`` /
-   ``flush``) are queued, padded to the compiled contract-batch size, and
-   priced with the distributed lattice engine (contracts over the data
-   axis, lattice nodes over the model axis).  Whole scenario grids
-   (``price_grid`` with a :class:`GridRequest`) go through the
-   ``repro.scenarios`` batch engine instead: the flat scenario batch is
-   padded to a small set of bucket sizes so repeat grid traffic reuses the
-   already-compiled program (one compile per (bucket, n_steps, greeks)).
+   ``flush``) and whole scenario grids (``price_grid`` with a
+   :class:`GridRequest`) are routed through the continuous-batching
+   scheduler (:class:`repro.serve.scheduler.PricingService`): requests
+   coalesce across payoff family and strike (payoff-as-data), batches pad
+   to power-of-two buckets so repeat traffic reuses compiled programs,
+   and ``engine="auto"`` sends frictionless batches down the cheap no-TC
+   lattice instead of the Roux–Zastawniak PWL engine.  This class is the
+   synchronous adapter (submit-then-flush); drive ``PricingService``
+   directly for deadline-triggered continuous batching
+   (``docs/SERVING.md``).
 
 2. ``LMEngine`` — LM prefill + decode loop with a batched KV cache
    (the serve path exercised by the decode_32k / long_500k dry-run cells).
-
-Both engines are deliberately synchronous-batched (continuous batching is
-an orchestration layer above the compiled steps and out of scope for the
-dry-run; the hooks — per-slot position/validity — are in place).
 """
 from __future__ import annotations
 
 import dataclasses
-import queue
-import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
-from ..core.payoff import american_call, american_put, bull_spread
+from .scheduler import PricingService
 
 __all__ = ["PriceRequest", "GridRequest", "PricingEngine", "LMEngine"]
 
 
 @dataclasses.dataclass
 class PriceRequest:
+    """One contract.  ``payoff``/``strike``/``n_steps`` left at ``None``
+    take the service defaults; set per request they are *honoured* — the
+    scheduler batches them as payoff-family data, so a heterogeneous
+    stream still coalesces into one compiled call per bucket."""
     s0: float
     sigma: float
     rate: float
     maturity: float
     cost_rate: float
-    payoff: str = "put"
-    strike: float = 100.0
+    payoff: Optional[str] = None
+    strike: Optional[float] = None
+    strike2: Optional[float] = None
+    n_steps: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -69,92 +72,70 @@ class GridRequest:
 
 
 class PricingEngine:
-    """Batched ask/bid pricing service on a (data, model) mesh."""
+    """Synchronous batched pricing desk (adapter over ``PricingService``).
 
-    def __init__(self, mesh, *, n_steps: int, batch: int, capacity: int = 48,
-                 round_depth: int = 8, payoff: str = "put",
-                 strike: float = 100.0, data_axes=("data",)):
-        from ..core.distributed import build_rz_sharded
+    Kept as the submit-then-flush surface the examples and tests use; all
+    batching, bucketing, caching and engine routing live in the
+    scheduler.  ``mesh``/``round_depth``/``data_axes`` are accepted for
+    signature compatibility with the pre-scheduler distributed engine
+    (drive ``core/distributed.py::build_rz_sharded`` directly for
+    multi-device lattice sharding — the scheduler is single-process, see
+    ``docs/KNOWN_ISSUES.md``).
+    """
+
+    def __init__(self, mesh=None, *, n_steps: int, batch: int,
+                 capacity: int = 48, round_depth: int = 8,
+                 payoff: str = "put", strike: float = 100.0,
+                 data_axes=("data",)):
+        del mesh, round_depth, data_axes    # scheduler path: single process
         self.batch = batch
         self.n_steps = n_steps
         self.capacity = capacity
-        pay = {"put": american_put(strike), "call": american_call(strike),
-               "bull_spread": bull_spread()}[payoff]
-        self._fn = jax.jit(build_rz_sharded(
-            mesh, n_steps=n_steps, payoff=pay, capacity=capacity,
-            round_depth=round_depth, data_axes=data_axes))
-        self._pending: List[Tuple[PriceRequest, int]] = []
-        self._results: Dict[int, Tuple[float, float]] = {}
-        self._next_id = 0
+        self.service = PricingService(
+            max_batch=batch, default_n_steps=n_steps, capacity=capacity,
+            default_payoff=payoff, default_strike=strike,
+            result_cache_size=0,    # engine semantics: always re-price
+            min_grid_bucket=batch)
         self.grid_stats: Dict[str, int] = {"grids": 0, "scenarios": 0}
+        self._open: set = set()
 
     def submit(self, req: PriceRequest) -> int:
-        rid = self._next_id
-        self._next_id += 1
-        self._pending.append((req, rid))
+        rid = self.service.submit(req)
+        self._open.add(rid)
         return rid
 
     def flush(self) -> Dict[int, Tuple[float, float]]:
-        """Price all pending requests (padding the final partial batch)."""
-        out: Dict[int, Tuple[float, float]] = {}
-        while self._pending:
-            chunk = self._pending[:self.batch]
-            self._pending = self._pending[self.batch:]
-            pad = self.batch - len(chunk)
-            reqs = [c[0] for c in chunk] + [chunk[-1][0]] * pad
-            arr = lambda f: jnp.asarray([getattr(r, f) for r in reqs],
-                                        jnp.float64)
-            ask, bid, stat = self._fn(arr("s0"), arr("sigma"), arr("rate"),
-                                      arr("maturity"), arr("cost_rate"))
-            ask, bid = np.asarray(ask), np.asarray(bid)
-            for i, (_, rid) in enumerate(chunk):
-                out[rid] = (float(ask[i]), float(bid[i]))
-        self._results.update(out)
-        return out
+        """Price all pending requests (padding each partial batch).
 
-    # ---- scenario-grid path (repro.scenarios batch engine) ------------ #
-    @staticmethod
-    def _pad_grid(grid, to: int):
-        """Pad the flat scenario batch to ``to`` rows (repeat the last)."""
-        from ..scenarios import ScenarioGrid
-        n = grid.n_scenarios
-        pad = to - n
-        rep = lambda a: np.concatenate([a, np.repeat(a[-1:], pad)])
-        return ScenarioGrid(
-            s0=rep(grid.s0), sigma=rep(grid.sigma), rate=rep(grid.rate),
-            maturity=rep(grid.maturity), cost_rate=rep(grid.cost_rate),
-            strike=rep(grid.strike), strike2=rep(grid.strike2),
-            payoff=grid.payoff + (grid.payoff[-1],) * pad,
-            n_steps=grid.n_steps, shape=(to,))
+        Per-request ``payoff``/``strike`` are honoured (batched as payoff
+        data); requests that leave them ``None`` take the engine defaults.
+        Returns ``{request id: (ask, bid)}`` for every request not yet
+        returned by a previous ``flush`` (full buckets may already have
+        been priced inline by ``submit``'s size trigger).
+        """
+        self.service.flush()
+        out: Dict[int, Tuple[float, float]] = {}
+        for rid in sorted(self._open):
+            q = self.service.result(rid)
+            if q is not None:
+                out[rid] = (q.ask, q.bid)
+        self._open.difference_update(out)
+        return out
 
     def price_grid(self, req: GridRequest):
         """Price a :class:`GridRequest` through the scenario batch engine.
 
+        Routes ``engine="auto"``: an all-frictionless grid takes the
+        cheap no-TC lattice, any positive ``cost_rate`` the RZ engine.
         The flat batch is padded up to the next power-of-two bucket so a
         stream of differently-sized grids hits a handful of compiled
         programs; results are unpadded and reshaped to the grid's logical
         (cartesian) shape before returning.
         """
-        from ..scenarios import GridResult, ScenarioGrid, price_grid_rz
-        grid = ScenarioGrid.cartesian(
-            s0=req.s0, sigma=req.sigma, rate=req.rate,
-            maturity=req.maturity, cost_rate=req.cost_rate,
-            payoff=req.payoff, strike=req.strike, strike2=req.strike2,
-            n_steps=req.n_steps)
-        n = grid.n_scenarios
-        bucket = max(self.batch, 1 << (n - 1).bit_length())
-        res = price_grid_rz(self._pad_grid(grid, bucket),
-                            capacity=self.capacity, greeks=req.greeks,
-                            backend=req.backend)
-        cut = lambda a: (None if a is None
-                         else a.ravel()[:n].reshape(grid.shape))
+        res = self.service.price_grid(req)
         self.grid_stats["grids"] += 1
-        self.grid_stats["scenarios"] += n
-        return GridResult(
-            grid=grid, ask=cut(res.ask), bid=cut(res.bid),
-            max_pieces=res.max_pieces,
-            delta_ask=cut(res.delta_ask), delta_bid=cut(res.delta_bid),
-            vega_ask=cut(res.vega_ask), vega_bid=cut(res.vega_bid))
+        self.grid_stats["scenarios"] += res.grid.n_scenarios
+        return res
 
 
 class LMEngine:

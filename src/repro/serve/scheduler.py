@@ -1,0 +1,371 @@
+"""Continuous-batching pricing service over the compiled grid engines.
+
+The orchestration layer the ``serve/engine.py`` docstring promised: a
+:class:`PricingService` accepts a *stream* of single-contract
+:class:`~repro.serve.engine.PriceRequest`\\ s (plus whole
+:class:`~repro.serve.engine.GridRequest`\\ s), coalesces them across payoff
+family and strike — payoff-as-data (``core/payoff.py::param_payoff``)
+makes a heterogeneous batch one compiled call — and flushes micro-batches
+through ``repro.api.price_flat`` on a **size-or-deadline** trigger:
+
+    submit() ──► bucket queues (n_steps, frictionless?) ──► pad to 2^k
+        ──► engine="auto" (no-TC lattice | Roux–Zastawniak) ──► unpad
+        ──► per-request PriceQuote + latency sample
+
+Design points (see ``docs/SERVING.md`` for the operator's guide):
+
+* **Buckets.**  Requests are queued by ``(n_steps, cost_rate > 0)`` —
+  the two things that force a different compiled program (tree depth is
+  shape-static; the frictionless and transaction-cost engines are
+  different programs).  Everything else (payoff family, strike, spot,
+  vol, rate, maturity, λ value) is *data* and batches freely.
+* **Padding.**  A flushed batch is padded up to the next power of two
+  (by repeating its last row) so arbitrary traffic sizes hit at most
+  ``log2(max_batch)+1`` compiled shapes per bucket.
+* **Triggers.**  A bucket flushes when it reaches ``max_batch``
+  (size trigger, inside :meth:`submit`) or when its oldest request has
+  waited ``deadline_ms`` (deadline trigger, inside :meth:`step` — the
+  driver loop calls ``step()`` each tick).  :meth:`flush` force-drains.
+* **Caches.**  A *compile cache* is keyed on
+  ``(padded_batch, n_steps, engine, backend, greeks)`` with hit/miss
+  counters (it mirrors — and lets you observe — jax's jit cache: a miss
+  is a new XLA compilation, seconds for the RZ engine).  A small LRU
+  *result cache* keyed on the full scenario tuple short-circuits repeat
+  scenarios without touching the engines at all.
+* **Metrics.**  ``requests``, ``batches``, ``p50/p99`` latency, pad
+  waste, contracts/sec, per-engine batch counts — :meth:`metrics`.
+
+The service is deliberately single-process and cooperative (no threads:
+``submit``/``step`` do the work inline) — see ``docs/KNOWN_ISSUES.md``
+for the resulting limits and the multi-process outlook.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from ..scenarios import PAYOFF_FAMILIES
+
+__all__ = ["PricingService", "ServiceMetrics"]
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class _Pending:
+    rid: int
+    key: tuple            # full scenario tuple (the result-cache key)
+    t_submit: float
+
+
+@dataclasses.dataclass
+class ServiceMetrics:
+    """Counters a :class:`PricingService` accumulates (all cumulative)."""
+    requests: int = 0            # single-contract requests submitted
+    completed: int = 0           # ... with a result available
+    batches: int = 0             # engine flushes (micro-batches priced)
+    contracts: int = 0           # real (un-padded) contracts priced
+    padded: int = 0              # lanes submitted to the engines
+    cache_hits: int = 0          # result-LRU short-circuits
+    compile_hits: int = 0        # batch shapes seen before
+    compile_misses: int = 0      # batch shapes compiled fresh
+    engine_seconds: float = 0.0  # time inside the compiled engines
+    engine_batches: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {"notc": 0, "rz": 0})
+    grids: int = 0               # GridRequests priced
+    grid_scenarios: int = 0
+    # p50/p99 are computed over a bounded window of recent samples so a
+    # long-running service doesn't grow without limit
+    latencies: List[float] = dataclasses.field(default_factory=list)
+    latency_window: int = 4096
+
+    def add_latency(self, seconds: float) -> None:
+        self.latencies.append(seconds)
+        if len(self.latencies) > 2 * self.latency_window:
+            del self.latencies[:-self.latency_window]
+
+    def snapshot(self) -> dict:
+        lat = np.asarray(self.latencies) if self.latencies else np.zeros(1)
+        waste = (1.0 - self.contracts / self.padded) if self.padded else 0.0
+        cps = (self.contracts / self.engine_seconds
+               if self.engine_seconds > 0 else float("inf"))
+        return {
+            "requests": self.requests, "completed": self.completed,
+            "batches": self.batches, "contracts": self.contracts,
+            "padded": self.padded, "pad_waste": waste,
+            "cache_hits": self.cache_hits,
+            "compile_hits": self.compile_hits,
+            "compile_misses": self.compile_misses,
+            "engine_seconds": self.engine_seconds,
+            "contracts_per_sec": cps,
+            "engine_batches": dict(self.engine_batches),
+            "grids": self.grids, "grid_scenarios": self.grid_scenarios,
+            "p50_latency_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_latency_ms": float(np.percentile(lat, 99) * 1e3),
+        }
+
+
+class PricingService:
+    """Continuous-batching front end for the compiled pricing engines."""
+
+    def __init__(self, *, max_batch: int = 64, deadline_ms: float = 5.0,
+                 capacity: int = 48, backend: str = "jnp",
+                 default_n_steps: int = 100, default_payoff: str = "put",
+                 default_strike: float = 100.0,
+                 result_cache_size: int = 1024, max_results: int = 65536,
+                 min_grid_bucket: Optional[int] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.max_batch = int(max_batch)
+        self.deadline_s = float(deadline_ms) * 1e-3
+        self.capacity = int(capacity)
+        self.backend = backend
+        self.default_n_steps = int(default_n_steps)
+        self.default_payoff = default_payoff
+        self.default_strike = float(default_strike)
+        self.min_grid_bucket = (self.max_batch if min_grid_bucket is None
+                                else int(min_grid_bucket))
+        self._clock = clock
+        self.max_results = int(max_results)
+        self._buckets: Dict[tuple, List[_Pending]] = {}
+        self._results: OrderedDict = OrderedDict()
+        self._result_cache: OrderedDict = OrderedDict()
+        self._result_cache_size = int(result_cache_size)
+        self._compiled: Dict[tuple, int] = {}
+        self._next_id = 0
+        self._deferred_error: Optional[BaseException] = None
+        self.metrics_ = ServiceMetrics()
+
+    # ------------------------------------------------------------------ #
+    # request intake
+    # ------------------------------------------------------------------ #
+    def _scenario_key(self, req) -> tuple:
+        """Normalise a PriceRequest to the full scenario tuple.
+
+        Unset (None) payoff/strike/n_steps fields take the service
+        defaults — per-request values are always honoured (they batch as
+        payoff *data*, so heterogeneous batches stay one compiled call).
+        """
+        payoff = req.payoff if req.payoff is not None else self.default_payoff
+        if payoff not in PAYOFF_FAMILIES:
+            raise ValueError(f"unknown payoff family {payoff!r}; "
+                             f"supported: {PAYOFF_FAMILIES}")
+        strike = (self.default_strike if req.strike is None
+                  else float(req.strike))
+        strike2 = (strike + 10.0 if getattr(req, "strike2", None) is None
+                   else float(req.strike2))
+        n_steps = (self.default_n_steps if req.n_steps is None
+                   else int(req.n_steps))
+        return (float(req.s0), float(req.sigma), float(req.rate),
+                float(req.maturity), float(req.cost_rate), payoff,
+                strike, strike2, n_steps)
+
+    def submit(self, req) -> int:
+        """Enqueue one contract; returns a request id.
+
+        Flushes the request's bucket inline if it reaches ``max_batch``
+        (size trigger).  A result-cache hit completes immediately.
+        """
+        key = self._scenario_key(req)
+        rid = self._next_id
+        self._next_id += 1
+        self.metrics_.requests += 1
+        now = self._clock()
+        if key in self._result_cache:
+            self._result_cache.move_to_end(key)
+            self._store_result(rid, self._result_cache[key])
+            self.metrics_.cache_hits += 1
+            self.metrics_.completed += 1
+            self.metrics_.add_latency(self._clock() - now)
+            return rid
+        bucket = (key[8], key[4] > 0.0)          # (n_steps, needs TC engine)
+        self._buckets.setdefault(bucket, []).append(
+            _Pending(rid=rid, key=key, t_submit=now))
+        if len(self._buckets[bucket]) >= self.max_batch:
+            # an engine error here must not swallow the request id the
+            # caller is owed: the chunk is already re-queued by
+            # _flush_bucket, so defer the exception to the next
+            # step()/flush() and hand the rid back
+            try:
+                self._flush_bucket(bucket)
+            except Exception as e:
+                self._deferred_error = e
+        return rid
+
+    # ------------------------------------------------------------------ #
+    # flush machinery
+    # ------------------------------------------------------------------ #
+    def _compile_key_seen(self, padded: int, n_steps: int, engine: str,
+                          greeks: bool, backend: Optional[str] = None) -> None:
+        """Count a *successful* engine call against its compiled-program
+        key.  Called only after the call returns: a failed call (e.g. a
+        capacity overflow) compiled nothing worth counting, and raising
+        ``capacity`` — a shape parameter, hence part of the key — then
+        retrying is a genuine fresh compile, not a hit."""
+        ck = (padded, n_steps, engine,
+              self.backend if backend is None else backend, greeks,
+              self.capacity)
+        if ck in self._compiled:
+            self._compiled[ck] += 1
+            self.metrics_.compile_hits += 1
+        else:
+            self._compiled[ck] = 1
+            self.metrics_.compile_misses += 1
+
+    def _flush_bucket(self, bucket: tuple) -> Dict[int, "PriceQuote"]:
+        from ..api import PriceQuote, price_flat
+        pending = self._buckets.pop(bucket, [])
+        n_steps, has_tc = bucket
+        done: Dict[int, "PriceQuote"] = {}
+        while pending:
+            chunk, pending = pending[:self.max_batch], pending[self.max_batch:]
+            n = len(chunk)
+            padded = _next_pow2(n)
+            cols = list(zip(*(p.key for p in chunk)))
+            engine = "rz" if has_tc else "notc"
+            t0 = self._clock()
+            try:
+                res = price_flat(
+                    s0=np.asarray(cols[0]), sigma=np.asarray(cols[1]),
+                    rate=np.asarray(cols[2]), maturity=np.asarray(cols[3]),
+                    cost_rate=np.asarray(cols[4]), payoff=tuple(cols[5]),
+                    strike=np.asarray(cols[6]), strike2=np.asarray(cols[7]),
+                    n_steps=n_steps, engine=engine, capacity=self.capacity,
+                    backend=self.backend, pad_to=padded)
+            except Exception:
+                # no request is ever silently lost: re-queue this chunk and
+                # everything behind it, then surface the error (e.g. a PWL
+                # OverflowError — raise `capacity` and flush again)
+                self._buckets[bucket] = (chunk + pending
+                                         + self._buckets.get(bucket, []))
+                raise
+            now = self._clock()
+            self._compile_key_seen(padded, n_steps, engine, False)
+            ask, bid = res.ask.ravel(), res.bid.ravel()
+            for i, p in enumerate(chunk):
+                # max_pieces is the *micro-batch* peak PWL knot count — a
+                # conservative per-contract upper bound (the engines reduce
+                # over the batch); 0 on the no-TC path as everywhere else
+                quote = PriceQuote(ask=float(ask[i]), bid=float(bid[i]),
+                                   max_pieces=res.max_pieces)
+                self._store_result(p.rid, quote)
+                done[p.rid] = quote
+                self._remember(p.key, quote)
+                self.metrics_.add_latency(now - p.t_submit)
+            m = self.metrics_
+            m.batches += 1
+            m.contracts += n
+            m.padded += padded
+            m.completed += n
+            m.engine_seconds += now - t0
+            m.engine_batches[engine] += 1
+        return done
+
+    def _store_result(self, rid: int, quote) -> None:
+        """Keep completed quotes retrievable via :meth:`result`, bounded to
+        the most recent ``max_results`` so a long-running service doesn't
+        grow without limit — collect results promptly (the driver loop
+        does; see docs/KNOWN_ISSUES.md)."""
+        self._results[rid] = quote
+        while len(self._results) > self.max_results:
+            self._results.popitem(last=False)
+
+    def _remember(self, key: tuple, quote) -> None:
+        if self._result_cache_size <= 0:
+            return
+        self._result_cache[key] = quote
+        self._result_cache.move_to_end(key)
+        while len(self._result_cache) > self._result_cache_size:
+            self._result_cache.popitem(last=False)
+
+    def _raise_deferred(self) -> None:
+        if self._deferred_error is not None:
+            e, self._deferred_error = self._deferred_error, None
+            raise e
+
+    def step(self, now: Optional[float] = None) -> Dict[int, "PriceQuote"]:
+        """Deadline tick: flush every bucket whose oldest request has
+        waited at least ``deadline_ms``.  Drivers call this each loop;
+        returns the quotes this tick completed.  An engine error deferred
+        from a ``submit`` size-trigger flush re-raises here."""
+        self._raise_deferred()
+        now = self._clock() if now is None else now
+        due = [b for b, pend in self._buckets.items()
+               if pend and now - pend[0].t_submit >= self.deadline_s]
+        done: Dict[int, "PriceQuote"] = {}
+        for bucket in due:
+            done.update(self._flush_bucket(bucket))
+        return done
+
+    def flush(self) -> Dict[int, "PriceQuote"]:
+        """Force-flush every pending bucket; returns the quotes this call
+        completed (look earlier ones up with :meth:`result`).  An engine
+        error deferred from a ``submit`` size-trigger flush re-raises
+        here."""
+        self._raise_deferred()
+        done: Dict[int, "PriceQuote"] = {}
+        for bucket in list(self._buckets):
+            done.update(self._flush_bucket(bucket))
+        return done
+
+    # ------------------------------------------------------------------ #
+    # results / introspection
+    # ------------------------------------------------------------------ #
+    def result(self, rid: int):
+        """The :class:`~repro.api.PriceQuote` for ``rid`` (None if still
+        pending — call :meth:`step` or :meth:`flush`)."""
+        return self._results.get(rid)
+
+    @property
+    def pending_count(self) -> int:
+        return sum(len(p) for p in self._buckets.values())
+
+    def metrics(self) -> dict:
+        return self.metrics_.snapshot()
+
+    # ------------------------------------------------------------------ #
+    # whole-grid requests (cartesian surfaces)
+    # ------------------------------------------------------------------ #
+    def price_grid(self, req):
+        """Price a :class:`~repro.serve.engine.GridRequest` now.
+
+        Grids are already batches, so they bypass the queues; they share
+        the pad-to-bucket compile reuse (padded to a power of two, at
+        least ``min_grid_bucket``) and ``engine="auto"`` routing —
+        all-frictionless grids take the cheap no-TC lattice, anything
+        with a positive ``cost_rate`` the Roux–Zastawniak engine.
+        """
+        from ..api import price_grid
+        from ..scenarios import GridResult, ScenarioGrid
+        grid = ScenarioGrid.cartesian(
+            s0=req.s0, sigma=req.sigma, rate=req.rate,
+            maturity=req.maturity, cost_rate=req.cost_rate,
+            payoff=req.payoff, strike=req.strike, strike2=req.strike2,
+            n_steps=req.n_steps)
+        n = grid.n_scenarios
+        bucket = max(self.min_grid_bucket, _next_pow2(n))
+        engine = "rz" if np.any(grid.cost_rate > 0.0) else "notc"
+        t0 = self._clock()
+        res = price_grid(grid.pad_to(bucket), engine=engine,
+                         capacity=self.capacity, greeks=req.greeks,
+                         backend=req.backend)
+        self.metrics_.engine_seconds += self._clock() - t0
+        self._compile_key_seen(bucket, grid.n_steps, engine, req.greeks,
+                               backend=req.backend)
+        self.metrics_.engine_batches[engine] += 1
+        self.metrics_.grids += 1
+        self.metrics_.grid_scenarios += n
+        cut = lambda a: (None if a is None
+                         else a.ravel()[:n].reshape(grid.shape))
+        return GridResult(
+            grid=grid, ask=cut(res.ask), bid=cut(res.bid),
+            max_pieces=res.max_pieces,
+            delta_ask=cut(res.delta_ask), delta_bid=cut(res.delta_bid),
+            vega_ask=cut(res.vega_ask), vega_bid=cut(res.vega_bid))

@@ -1,12 +1,16 @@
 """Execute the documentation's code snippets so they cannot rot.
 
-Covers: every ```python fenced block in README.md (the quickstart), the
-doctests embedded in the ``repro.api`` / ``repro.scenarios`` docstrings,
-and the runnable examples' import surface.  Snippets are executed in one
-shared namespace per document, in order, so later blocks may use earlier
-blocks' names (as a reader would).
+Covers: every ```python fenced block in README.md (the quickstart) and
+docs/SERVING.md (the operator's guide), the doctests embedded in the
+``repro.api`` / ``repro.scenarios`` docstrings, the runnable examples'
+import surface, and every relative markdown link in README.md +
+docs/*.md (``tools/check_links.py`` — the same check the CI docs lane
+runs).  Snippets are executed in one shared namespace per document, in
+order, so later blocks may use earlier blocks' names (as a reader
+would).
 """
 import doctest
+import importlib.util
 import re
 from pathlib import Path
 
@@ -30,6 +34,31 @@ def test_readme_python_snippets_execute():
     # the quickstart leaves its results in scope — sanity-check them
     assert ns["q"].ask > ns["q"].bid
     assert ns["res"].grid.n_scenarios == 18
+
+
+def test_serving_guide_snippets_execute():
+    """docs/SERVING.md is doctested end-to-end: the operator's guide
+    cannot drift from the scheduler API."""
+    blocks = _python_blocks(ROOT / "docs" / "SERVING.md")
+    assert blocks, "docs/SERVING.md has no ```python blocks"
+    ns: dict = {}
+    for block in blocks:
+        exec(compile(block, "docs/SERVING.md", "exec"), ns)
+    # the guide's running example leaves the service in scope
+    m = ns["service"].metrics()
+    assert m["completed"] == m["requests"] == 4
+    assert m["cache_hits"] == 1
+
+
+def test_markdown_links_resolve():
+    """Every relative link in README.md and docs/*.md points at a real
+    file (same checker the CI docs lane runs standalone)."""
+    spec = importlib.util.spec_from_file_location(
+        "check_links", ROOT / "tools" / "check_links.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    for path in [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]:
+        assert mod.broken_links(path) == [], path.name
 
 
 def test_architecture_doc_mentions_real_modules():

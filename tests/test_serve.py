@@ -1,14 +1,35 @@
-"""Serving engines: LM greedy generation consistency + pricing service."""
+"""Serving engines: LM greedy generation consistency + pricing service
+(the continuous-batching scheduler: deadline flush, bucket/compile reuse,
+pad-unpad correctness vs the ``price_american`` oracle, heterogeneous
+payoff batches, engine="auto" routing)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import price_american
 from repro.configs import get_config, reduced_config
 from repro.models.transformer import RunCfg, init_lm, lm_loss, prefill
-from repro.serve.engine import LMEngine, PriceRequest, PricingEngine
+from repro.serve.engine import (GridRequest, LMEngine, PriceRequest,
+                                PricingEngine)
+from repro.serve.scheduler import PricingService
 
 RUN = RunCfg(dtype=jnp.float32)
+
+TOL = 1e-9
+
+
+def _req(s0=100.0, sigma=0.2, rate=0.1, maturity=0.25, cost_rate=0.0, **kw):
+    return PriceRequest(s0=s0, sigma=sigma, rate=rate, maturity=maturity,
+                        cost_rate=cost_rate, **kw)
+
+
+def _oracle(req, *, n_steps, capacity=32):
+    return price_american(
+        s0=req.s0, sigma=req.sigma, rate=req.rate, maturity=req.maturity,
+        n_steps=n_steps, payoff=req.payoff or "put",
+        strike=req.strike if req.strike is not None else 100.0,
+        cost_rate=req.cost_rate, capacity=capacity)
 
 
 def test_lm_engine_matches_full_forward():
@@ -33,6 +54,195 @@ def test_lm_engine_matches_full_forward():
         toks = np.concatenate([toks, nxt[:, None]], axis=1)
     want = np.stack(want, axis=1)
     np.testing.assert_array_equal(got, want)
+
+
+def test_scheduler_deadline_flush():
+    """A partial bucket sits until its oldest request ages past the
+    deadline; step() before that is a no-op, after it a flush."""
+    t = [0.0]
+    svc = PricingService(max_batch=64, deadline_ms=10.0, default_n_steps=8,
+                         clock=lambda: t[0])
+    ids = [svc.submit(_req(s0=s)) for s in (95.0, 100.0, 105.0)]
+    assert svc.pending_count == 3 and svc.result(ids[0]) is None
+    t[0] = 0.005
+    svc.step()
+    assert svc.pending_count == 3          # 5 ms < 10 ms deadline
+    t[0] = 0.011
+    svc.step()
+    assert svc.pending_count == 0
+    for rid in ids:
+        assert svc.result(rid) is not None
+    m = svc.metrics()
+    assert m["batches"] == 1 and m["contracts"] == 3
+    assert m["padded"] == 4                # 3 requests pad to the 4-bucket
+
+
+def test_scheduler_size_trigger_and_compile_cache():
+    """Full buckets flush inside submit; a repeated (padded batch,
+    n_steps, engine) shape is a compile-cache hit, and a repeated
+    scenario is a result-cache hit that never reaches the engines."""
+    svc = PricingService(max_batch=4, deadline_ms=1e9, default_n_steps=8)
+    for s in (90.0, 95.0, 100.0, 105.0):
+        svc.submit(_req(s0=s))
+    m = svc.metrics()
+    assert m["batches"] == 1               # size trigger, no flush() needed
+    assert m["compile_misses"] == 1 and m["compile_hits"] == 0
+    for s in (91.0, 96.0, 101.0, 106.0):   # same bucket shape, new data
+        svc.submit(_req(s0=s))
+    m = svc.metrics()
+    assert m["batches"] == 2
+    assert m["compile_misses"] == 1 and m["compile_hits"] == 1
+    rid = svc.submit(_req(s0=95.0))        # seen scenario: LRU short-circuit
+    m = svc.metrics()
+    assert svc.result(rid) is not None and m["cache_hits"] == 1
+    assert m["batches"] == 2               # no engine work
+
+
+def test_scheduler_pad_unpad_heterogeneous_vs_oracle():
+    """A mixed put/call/bull_spread batch (padded 5 -> 8) is one compiled
+    no-TC call and every unpadded quote matches price_american at 1e-9."""
+    svc = PricingService(max_batch=8, default_n_steps=8)
+    reqs = [
+        _req(s0=95.0, payoff="put", strike=100.0),
+        _req(s0=100.0, payoff="call", strike=95.0),
+        _req(s0=105.0, payoff="bull_spread", strike=95.0),
+        _req(s0=98.0, sigma=0.3, payoff="put", strike=105.0),
+        _req(s0=102.0, maturity=0.5, payoff="call", strike=100.0),
+    ]
+    ids = [svc.submit(r) for r in reqs]
+    svc.flush()
+    m = svc.metrics()
+    assert m["batches"] == 1 and m["engine_batches"] == {"notc": 1, "rz": 0}
+    assert m["padded"] == 8 and m["contracts"] == 5
+    for req, rid in zip(reqs, ids):
+        q = svc.result(rid)
+        ref = _oracle(req, n_steps=8)
+        assert q.ask == pytest.approx(ref.ask, abs=TOL)
+        assert q.bid == pytest.approx(ref.bid, abs=TOL)
+        assert q.ask == q.bid              # frictionless: point quote
+
+
+def test_scheduler_tc_bucket_vs_oracle():
+    """TC requests bucket separately from frictionless ones (different
+    engine program); RZ quotes match the price_american interval."""
+    svc = PricingService(max_batch=8, default_n_steps=8, capacity=16)
+    tc = [_req(s0=s, cost_rate=0.005) for s in (95.0, 100.0, 105.0)]
+    free = [_req(s0=s) for s in (95.0, 100.0)]
+    ids = [svc.submit(r) for r in tc + free]
+    svc.flush()
+    m = svc.metrics()
+    assert m["engine_batches"] == {"notc": 1, "rz": 1}
+    for req, rid in zip(tc + free, ids):
+        q = svc.result(rid)
+        ref = _oracle(req, n_steps=8, capacity=16)
+        assert q.ask == pytest.approx(ref.ask, abs=TOL)
+        assert q.bid == pytest.approx(ref.bid, abs=TOL)
+    assert svc.result(ids[0]).ask > svc.result(ids[0]).bid   # real spread
+
+
+def test_scheduler_requeues_batch_on_engine_error(monkeypatch):
+    """An engine exception (e.g. PWL capacity OverflowError) must not
+    lose in-flight requests: the chunk is re-queued and a later flush
+    completes it."""
+    svc = PricingService(max_batch=8, default_n_steps=8)
+    ids = [svc.submit(_req(s0=s)) for s in (95.0, 100.0, 105.0)]
+
+    def _boom(**kw):
+        raise OverflowError("PWL capacity overflow")
+
+    monkeypatch.setattr("repro.api.price_flat", _boom)
+    with pytest.raises(OverflowError):
+        svc.flush()
+    assert svc.pending_count == 3          # nothing silently dropped
+    monkeypatch.undo()
+    svc.flush()
+    for rid in ids:
+        assert svc.result(rid) is not None
+    assert svc.metrics()["completed"] == 3
+    # a compile is only counted once the engine call succeeds: the failed
+    # flush must not have registered the batch shape as "compiled"
+    assert svc.metrics()["compile_misses"] == 1
+
+    # size-trigger path: submit() must still hand back the request id and
+    # defer the engine error to the next step()/flush()
+    monkeypatch.setattr("repro.api.price_flat", _boom)
+    svc2 = PricingService(max_batch=2, default_n_steps=8)
+    r1 = svc2.submit(_req(s0=90.0))
+    r2 = svc2.submit(_req(s0=91.0))        # fills the bucket -> boom inside
+    assert isinstance(r1, int) and isinstance(r2, int)
+    assert svc2.pending_count == 2         # re-queued, ids still claimable
+    with pytest.raises(OverflowError):
+        svc2.step()                        # deferred error surfaces here
+    monkeypatch.undo()
+    svc2.flush()
+    assert svc2.result(r1) is not None and svc2.result(r2) is not None
+
+
+def test_engine_per_request_payoff_and_strike():
+    """Regression (PR 3): flush used to drop per-request payoff/strike on
+    the floor (one fixed payoff compiled at __init__).  They are now
+    batched as payoff data; None fields take the engine defaults."""
+    eng = PricingEngine(None, n_steps=8, batch=4, capacity=16,
+                        payoff="call", strike=90.0)
+    explicit = _req(s0=100.0, payoff="put", strike=100.0)
+    defaulted = _req(s0=100.0)             # -> engine's call K=90
+    ids = [eng.submit(explicit), eng.submit(defaulted)]
+    out = eng.flush()
+    want_put = _oracle(explicit, n_steps=8)
+    want_call = price_american(s0=100.0, sigma=0.2, rate=0.1, maturity=0.25,
+                               n_steps=8, payoff="call", strike=90.0)
+    assert out[ids[0]][0] == pytest.approx(want_put.ask, abs=TOL)
+    assert out[ids[1]][0] == pytest.approx(want_call.ask, abs=TOL)
+    assert out[ids[0]][0] != pytest.approx(out[ids[1]][0], abs=1e-3)
+
+
+def test_grid_request_engine_auto_routing(monkeypatch):
+    """GridRequest routes engine="auto": all-frictionless grids take the
+    no-TC path (price_grid_rz must NOT be called), any positive
+    cost_rate the RZ path.  Stubs make the routing observable without
+    compiling the RZ engine."""
+    from repro.scenarios import GridResult
+
+    calls = []
+
+    def _stub(tag):
+        def f(grid, **kw):
+            calls.append(tag)
+            z = np.zeros(grid.n_scenarios)
+            return GridResult(grid=grid, ask=z, bid=z.copy())
+        return f
+
+    monkeypatch.setattr("repro.api.price_grid_rz", _stub("rz"))
+    monkeypatch.setattr("repro.api.price_grid_notc", _stub("notc"))
+    eng = PricingEngine(None, n_steps=8, batch=4, capacity=16)
+    eng.price_grid(GridRequest(s0=(95.0, 100.0), cost_rate=0.0, n_steps=8))
+    assert calls == ["notc"]
+    eng.price_grid(GridRequest(s0=(95.0, 100.0), cost_rate=(0.0, 0.01),
+                               n_steps=8))
+    assert calls == ["notc", "rz"]
+    assert eng.service.metrics()["engine_batches"] == {"notc": 1, "rz": 1}
+
+    monkeypatch.undo()
+    res = eng.price_grid(GridRequest(s0=(95.0, 100.0), cost_rate=0.0,
+                                     n_steps=8))
+    ref = price_american(s0=95.0, sigma=0.2, rate=0.1, maturity=0.25,
+                         n_steps=8, payoff="put", strike=100.0)
+    assert res.max_pieces == 0             # no-TC path: no PWL knots
+    np.testing.assert_allclose(res.ask, res.bid, atol=TOL)
+    assert res.ask.ravel()[0] == pytest.approx(ref.ask, abs=TOL)
+
+
+def test_serve_pricing_driver_roundtrip():
+    """The launch driver submits a synthetic trace and completes it."""
+    from repro.launch.serve_pricing import drive, synth_trace
+
+    svc = PricingService(max_batch=16, deadline_ms=1.0, default_n_steps=8)
+    trace = synth_trace(30, n_steps=(8,), tc_fraction=0.0, seed=1)
+    quotes = drive(svc, trace, qps=0.0)
+    assert len(quotes) == 30 and all(q is not None for q in quotes.values())
+    m = svc.metrics()
+    assert m["completed"] == 30
+    assert m["p99_latency_ms"] >= m["p50_latency_ms"] >= 0.0
 
 
 def test_pricing_engine_batches_and_pads():

@@ -1,0 +1,52 @@
+"""Markdown link checker for the docs lane (no network, no deps).
+
+    python tools/check_links.py README.md docs/*.md
+
+Verifies that every *relative* markdown link target — `[text](path)` and
+`[text](path#fragment)` — resolves to an existing file or directory,
+relative to the linking document. External (`http://`, `https://`,
+`mailto:`) links are skipped: CI must not flake on the internet.
+Exits non-zero listing every broken link.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) — excluding images' src handled identically via ![
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP = ("http://", "https://", "mailto:", "#")
+
+
+def broken_links(path: Path) -> list[str]:
+    """Relative link targets in ``path`` that do not exist on disk."""
+    bad = []
+    text = path.read_text()
+    # drop fenced code blocks — `[x](y)` inside code is not a link
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    for target in _LINK.findall(text):
+        if target.startswith(_SKIP):
+            continue
+        rel = target.split("#", 1)[0]
+        if rel and not (path.parent / rel).exists():
+            bad.append(target)
+    return bad
+
+
+def main(argv: list[str]) -> int:
+    files = [Path(a) for a in argv] or [Path("README.md")]
+    failures = 0
+    for f in files:
+        for target in broken_links(f):
+            print(f"{f}: broken link -> {target}")
+            failures += 1
+    if failures:
+        print(f"{failures} broken link(s)")
+        return 1
+    print(f"{len(files)} file(s) checked, all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
