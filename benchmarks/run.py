@@ -1,41 +1,68 @@
 """Benchmark harness — one module per paper table/figure.
 
-Usage:  PYTHONPATH=src python -m benchmarks.run [name ...]
+Usage:  PYTHONPATH=src python -m benchmarks.run [--list] [name ...]
 
 Prints a ``name,us_per_call,derived`` CSV summary after the per-table
 detail blocks.  Tables II/III cannot be wall-clock-reproduced on this
 1-core container; their modules reproduce the *schedule* with measured
 node costs (see each module's docstring and EXPERIMENTS.md).
+
+Benches are looked up by short name (``rz_pallas``) or module name
+(``bench_rz_pallas``); ``--list`` prints the registry without importing
+any bench module (importing pulls in jax), and unknown names fail fast
+with the available set instead of a mid-run KeyError.
 """
 from __future__ import annotations
 
 import sys
 import traceback
 
+# short name -> module under benchmarks/ holding a run() -> list[str]
+# entry.  Lazy: modules import only when their bench is actually run.
+_REGISTRY = {
+    "table1": "table1_node_counts",
+    "table2": "table2_tc_speedup",
+    "table3": "table3_notc_speedup",
+    "fig9": "fig9_spreads",
+    "convergence": "rz_convergence",
+    "kernels": "bench_kernels",
+    "grid": "scenario_grid",
+    "rz_pallas": "bench_rz_pallas",
+    "serve": "bench_serve",
+}
+# module-name aliases: `python -m benchmarks.run bench_serve` works too
+_ALIASES = {mod: short for short, mod in _REGISTRY.items()}
+
+
+def resolve(name: str) -> str:
+    """Canonical short name for ``name`` (short or module spelling)."""
+    if name in _REGISTRY:
+        return name
+    if name in _ALIASES:
+        return _ALIASES[name]
+    raise SystemExit(
+        f"unknown bench {name!r}; available: {', '.join(_REGISTRY)} "
+        f"(module names {', '.join(_ALIASES)} also accepted)")
+
+
+def _load(short: str):
+    import importlib
+    return importlib.import_module(f"benchmarks.{_REGISTRY[short]}").run
+
 
 def main() -> None:
-    from . import (bench_kernels, bench_rz_pallas, bench_serve,
-                   fig9_spreads, rz_convergence, scenario_grid,
-                   table1_node_counts, table2_tc_speedup,
-                   table3_notc_speedup)
-    all_benches = {
-        "table1": table1_node_counts.run,
-        "table2": table2_tc_speedup.run,
-        "table3": table3_notc_speedup.run,
-        "fig9": fig9_spreads.run,
-        "convergence": rz_convergence.run,
-        "kernels": bench_kernels.run,
-        "grid": scenario_grid.run,
-        "rz_pallas": bench_rz_pallas.run,
-        "serve": bench_serve.run,
-    }
-    wanted = sys.argv[1:] or list(all_benches)
+    argv = sys.argv[1:]
+    if "--list" in argv:
+        for short, mod in _REGISTRY.items():
+            print(f"{short}  (benchmarks/{mod}.py)")
+        return
+    wanted = [resolve(n) for n in argv] or list(_REGISTRY)
     csv_rows = []
     failures = []
     for name in wanted:
         print(f"\n==== {name} " + "=" * (60 - len(name)))
         try:
-            csv_rows.extend(all_benches[name]())
+            csv_rows.extend(_load(name)())
         except Exception as e:                      # keep the harness alive
             traceback.print_exc()
             failures.append(name)

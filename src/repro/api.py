@@ -117,7 +117,8 @@ def price_grid(grid: Optional[ScenarioGrid] = None, *,
                greeks: bool = False, backend: str = "jnp",
                n_steps: Union[int, Sequence[int], None] = None,
                levels: Optional[int] = None, block: Optional[int] = None,
-               interpret: bool = True,
+               interpret: bool = True, mesh=None,
+               devices: Optional[int] = None, shard_plan=None,
                **axes) -> Union[GridResult, list]:
     """Price a whole grid of scenarios in one compiled call.
 
@@ -138,13 +139,25 @@ def price_grid(grid: Optional[ScenarioGrid] = None, *,
     ``core/partition.py`` schedule).  The tree depth is compile-time
     static: passing a *sequence* of ``n_steps`` prices one grid per
     distinct depth and returns the list of results in order.
+
+    ``mesh``/``devices`` shard the flat scenario batch across a 1-D
+    device mesh under a cost-model shard plan
+    (``core/partition.py::plan_shards``; pass ``shard_plan`` to
+    override).  Results are identical to the single-device call — see
+    ``docs/ARCHITECTURE.md`` "Sharded grid engine".
     """
     if grid is None:
         if isinstance(n_steps, (list, tuple)):
+            if shard_plan is not None:
+                raise TypeError(
+                    "shard_plan cannot combine with a sequence of n_steps: "
+                    "one plan covers one flat batch (pass mesh=/devices= "
+                    "and let each depth plan itself)")
             return [price_grid(engine=engine, capacity=capacity,
                                greeks=greeks, backend=backend, n_steps=int(n),
                                levels=levels, block=block,
-                               interpret=interpret, **axes) for n in n_steps]
+                               interpret=interpret, mesh=mesh,
+                               devices=devices, **axes) for n in n_steps]
         grid = ScenarioGrid.cartesian(n_steps=int(n_steps or 100), **axes)
     elif axes or n_steps is not None:
         raise TypeError("pass either a ScenarioGrid or cartesian axes, "
@@ -154,12 +167,14 @@ def price_grid(grid: Optional[ScenarioGrid] = None, *,
     if engine == "rz":
         return price_grid_rz(grid, capacity=capacity, greeks=greeks,
                              backend=backend, levels=levels, block=block,
-                             interpret=interpret)
+                             interpret=interpret, mesh=mesh, devices=devices,
+                             shard_plan=shard_plan)
     if engine == "notc":
         return price_grid_notc(grid, backend=backend, greeks=greeks,
                                levels=64 if levels is None else levels,
                                block=256 if block is None else block,
-                               interpret=interpret)
+                               interpret=interpret, mesh=mesh,
+                               devices=devices, shard_plan=shard_plan)
     raise ValueError(f"unknown engine {engine!r}; use 'auto', 'rz' or 'notc'")
 
 
@@ -167,7 +182,8 @@ def price_flat(*, s0, sigma, rate, maturity, cost_rate=0.0, payoff="put",
                strike=100.0, strike2=None, n_steps: int = 100,
                engine: str = "auto", capacity: int = 48,
                greeks: bool = False, backend: str = "jnp",
-               pad_to: Optional[int] = None) -> GridResult:
+               pad_to: Optional[int] = None, mesh=None,
+               devices: Optional[int] = None, shard_plan=None) -> GridResult:
     """Price a *flat* batch of heterogeneous contracts in one compiled call.
 
     The serving layer's entry point: element-wise scenario arrays (no
@@ -176,6 +192,9 @@ def price_flat(*, s0, sigma, rate, maturity, cost_rate=0.0, payoff="put",
     pads the batch by repeating the last row so a request stream reuses a
     small set of compiled batch shapes; results keep the padded length —
     slice the first ``len(s0)`` rows (the scheduler does this for you).
+    ``mesh``/``devices``/``shard_plan`` shard the (padded) batch over a
+    1-D device mesh as in :func:`price_grid`; a ``shard_plan`` must
+    cover the padded batch.
 
         >>> from repro.api import price_flat
         >>> res = price_flat(s0=(95.0, 100.0), payoff=("put", "call"),
@@ -193,4 +212,5 @@ def price_flat(*, s0, sigma, rate, maturity, cost_rate=0.0, payoff="put",
     if pad_to is not None:
         grid = grid.pad_to(pad_to)
     return price_grid(grid, engine=engine, capacity=capacity, greeks=greeks,
-                      backend=backend)
+                      backend=backend, mesh=mesh, devices=devices,
+                      shard_plan=shard_plan)

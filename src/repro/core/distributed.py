@@ -40,7 +40,83 @@ from ..compat import shard_map
 from .payoff import PayoffProcess
 from .rz import rz_level_step
 
-__all__ = ["plan_rounds", "build_rz_sharded", "build_notc_sharded"]
+__all__ = ["plan_rounds", "build_rz_sharded", "build_notc_sharded",
+           "GRID_AXIS", "grid_mesh", "resolve_grid_mesh", "sharded_rows"]
+
+# --------------------------------------------------------------------- #
+# scenario-axis mesh: shard the *contract batch* of the grid engines
+# --------------------------------------------------------------------- #
+# The engines above shard the lattice *node* axis of one contract (the
+# paper's §4 scheme verbatim).  The grid engines go the other way: every
+# row of a flat scenario batch is independent, so the batch shards over a
+# 1-D device mesh with no collectives in the hot loop at all — the shard
+# assignment itself (``core/partition.py::plan_shards``) is where the
+# paper's §4.2 re-balancing reappears, at device granularity.
+
+GRID_AXIS = "scenarios"
+
+
+def grid_mesh(devices: int | None = None, *,
+              axis_name: str = GRID_AXIS) -> Mesh:
+    """1-D mesh over the first ``devices`` local devices (all if None)."""
+    import numpy as np
+    devs = jax.devices()
+    w = len(devs) if devices is None else int(devices)
+    if w < 1:
+        raise ValueError("need devices >= 1")
+    if w > len(devs):
+        raise ValueError(
+            f"asked for {w} devices but the process sees {len(devs)}; "
+            "on CPU, launch with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={w} "
+            "(or pass devices<=device_count / use the simulated path via "
+            "resolve_grid_mesh)")
+    return Mesh(np.array(devs[:w]), (axis_name,))
+
+
+def resolve_grid_mesh(devices: int | None = None, mesh: Mesh | None = None):
+    """Normalise the grid engines' ``devices=``/``mesh=`` knobs.
+
+    Returns ``(mesh_or_None, n_shards)``:
+
+      * an explicit 1-D ``mesh`` wins (``n_shards`` = its size);
+      * ``devices`` in (None, 0, 1) -> the single-device path;
+      * ``devices <= jax.device_count()`` -> a fresh :func:`grid_mesh`;
+      * ``devices >  jax.device_count()`` -> the **simulated** sharded
+        path: no mesh, but the same plan/permute/pad layout executed on
+        the local device.  Rows are independent, so the numbers are
+        bit-identical to a real mesh run — this is how single-device CI
+        exercises every shard plan (see docs/KNOWN_ISSUES.md).
+    """
+    if mesh is not None:
+        if len(mesh.shape) != 1:
+            raise ValueError(f"grid mesh must be 1-D, got {dict(mesh.shape)}")
+        if devices is not None and int(devices) != mesh.devices.size:
+            raise ValueError(f"devices={devices} conflicts with the given "
+                             f"{mesh.devices.size}-device mesh — pass one "
+                             "or the other")
+        return mesh, mesh.devices.size
+    if devices is None or int(devices) <= 1:
+        return None, 1
+    w = int(devices)
+    if w <= len(jax.devices()):
+        return grid_mesh(w), w
+    return None, w
+
+
+def sharded_rows(fn, mesh: Mesh):
+    """shard_map a flat-batch row function over a 1-D grid mesh.
+
+    ``fn`` maps equal-length 1-D row arrays to a pytree of equal-length
+    1-D row arrays; every input/output shards along the mesh's single
+    axis.  There are no collectives: per-shard reductions (``max_pieces``)
+    stay per-row and reduce on the host after the gather, so overflow
+    semantics cannot diverge from the single-device path.
+    """
+    axis = mesh.axis_names[0]
+    spec = PS(axis)
+    return shard_map(fn, mesh=mesh,
+                     in_specs=spec, out_specs=spec, check_vma=False)
 
 
 # --------------------------------------------------------------------- #

@@ -35,11 +35,15 @@ EXACTLY (9/9 cells, 0 node error); the literal pseudo-code overcounts by
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 __all__ = ["RoundInfo", "ScheduleResult", "simulate_schedule",
            "table1_reference", "pick_round_depth", "kernel_round_plan",
-           "KernelRound", "DEFAULT_KERNEL_L"]
+           "KernelRound", "DEFAULT_KERNEL_L",
+           "ShardPlan", "scenario_costs", "plan_shards", "shard_layout",
+           "replan_shards", "ShardRebalancer"]
 
 # Default per-round depth for the blocked Pallas kernels.  The paper's
 # measured optimum L = 5 reflects pthread signal/barrier costs; for a
@@ -206,6 +210,242 @@ def kernel_round_plan(n_steps: int, *, levels: int | None = None,
         plan.append(KernelRound(lvl0=B, depth=D, lanes=lanes, block=blk))
         B -= D
     return plan
+
+
+# ===================================================================== #
+# scenario-axis shard planner — §4.2 re-balancing lifted to a device mesh
+# ===================================================================== #
+#
+# The paper re-partitions the *node* axis across threads before every
+# round because the live tree shrinks.  The scenario-grid engine has the
+# orthogonal axis: a flat batch of contracts whose per-row cost is uneven
+# (transaction-cost rows run the PWL sweep, ~max_pieces x a frictionless
+# row; deeper trees cost ~N^2).  The planner below assigns whole scenario
+# rows to devices of a 1-D mesh so the *predicted* per-device work is
+# equal, and the rebalancer re-plans from the previous flush's measured
+# per-shard seconds — the device-level analogue of the paper's per-round
+# processor reassignment (p <- p-1 / bounds recomputed).
+#
+# Everything here is pure Python/numpy over static ints: a plan is made
+# on the host before the compiled call, exactly like ``kernel_round_plan``.
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """Static assignment of scenario rows to the shards of a 1-D mesh.
+
+    ``shards[d]`` holds the original row indices device ``d`` owns;
+    ``work[d]`` is the predicted cost of those rows under the cost model
+    the plan was made with.  ``lanes`` is the per-device row count after
+    padding — every device gets exactly ``lanes`` rows (shorter shards
+    repeat one of their own rows; an empty shard repeats row 0), so the
+    compiled program sees one static shape ``(n_shards * lanes,)``.
+    """
+    n_shards: int
+    shards: Tuple[Tuple[int, ...], ...]
+    work: Tuple[float, ...]
+    lanes: int
+    n_rows: int
+
+    @property
+    def sizes(self) -> Tuple[int, ...]:
+        return tuple(len(s) for s in self.shards)
+
+    @property
+    def padded_rows(self) -> int:
+        return self.n_shards * self.lanes
+
+    @property
+    def work_spread(self) -> float:
+        """(max - min) / mean of predicted per-shard work over non-empty
+        shards — the planner's balance figure (0 = perfectly equal)."""
+        w = [x for x, s in zip(self.work, self.shards) if s]
+        if not w:
+            return 0.0
+        mean = sum(w) / len(w)
+        return (max(w) - min(w)) / mean if mean > 0 else 0.0
+
+
+def scenario_costs(n_steps: int, cost_rate, *, capacity: int = 48,
+                   pieces=None) -> np.ndarray:
+    """Predicted relative cost of each scenario row of a flat grid.
+
+    Cost model (see docs/ARCHITECTURE.md "Sharded grid engine"):
+
+      * a frictionless row is one backward induction over the tree:
+        ~``(N+1)^2 / 2`` node updates -> cost ``N^2``;
+      * a transaction-cost row runs the Roux–Zastawniak PWL sweep at
+        every node: ~``pieces`` knots of work per node -> cost
+        ``N^2 * pieces``.  Before anything has run, ``pieces`` is the
+        worst-case ``capacity``; after a flush the *measured*
+        ``max_pieces`` is a much tighter estimate (feed it back here).
+
+    ``cost_rate`` is the per-row lambda array; ``pieces`` may be a scalar
+    or a per-row array.  Returns a float64 array of per-row costs.
+    """
+    cr = np.atleast_1d(np.asarray(cost_rate, np.float64))
+    base = float(n_steps) ** 2
+    if pieces is None:
+        pieces = capacity
+    mult = np.broadcast_to(np.asarray(pieces, np.float64), cr.shape)
+    return base * np.where(cr > 0.0, np.maximum(mult, 1.0), 1.0)
+
+
+def plan_shards(costs: Sequence[float], n_shards: int, *,
+                device_speed: Optional[Sequence[float]] = None,
+                lanes_pow2: bool = False) -> ShardPlan:
+    """Assign rows to ``n_shards`` devices, equalising predicted work.
+
+    Greedy LPT (longest-processing-time): rows sorted by descending cost
+    are placed on the device with the smallest predicted *finish time*
+    ``(load + cost) / speed``.  ``device_speed`` (relative, default all
+    1.0) is how the rebalancer steers work away from shards that ran
+    slow last flush.  With uneven costs the shard *sizes* come out
+    uneven while the per-device work stays near-equal — the device-level
+    mirror of the paper's ``floor((n+1)/p)`` bounds recomputation.
+
+    ``lanes_pow2`` rounds the per-device lane count up to a power of two
+    so a stream of slightly different batches reuses compiled shapes
+    (the serving layer's pad-to-bucket discipline, per device).
+    """
+    costs = np.asarray(costs, np.float64)
+    n = costs.shape[0]
+    W = int(n_shards)
+    if W < 1:
+        raise ValueError("need n_shards >= 1")
+    if np.any(costs < 0):
+        raise ValueError("row costs must be >= 0")
+    speed = (np.ones(W) if device_speed is None
+             else np.asarray(device_speed, np.float64))
+    if speed.shape != (W,) or np.any(speed <= 0):
+        raise ValueError(f"device_speed must be {W} positive factors")
+
+    members: List[List[int]] = [[] for _ in range(W)]
+    load = np.zeros(W)
+    # stable sort: equal-cost rows keep index order -> deterministic plans
+    for i in np.argsort(-costs, kind="stable"):
+        d = int(np.argmin((load + costs[i]) / speed))
+        members[d].append(int(i))
+        load[d] += costs[i]
+    for m in members:
+        m.sort()                     # contiguous-looking, deterministic
+    lanes = max(1, max(len(m) for m in members))
+    if lanes_pow2:
+        lanes = _next_pow2(lanes)
+    return ShardPlan(n_shards=W,
+                     shards=tuple(tuple(m) for m in members),
+                     work=tuple(float(x) for x in load),
+                     lanes=lanes, n_rows=n)
+
+
+def shard_layout(plan: ShardPlan):
+    """Materialise a plan as gather/scatter index maps.
+
+    Returns ``(gather_idx, positions)``:
+
+      * ``gather_idx`` — int array of length ``plan.padded_rows``; row
+        ``j`` of the device-laid-out batch is original row
+        ``gather_idx[j]``.  Each device's window of ``lanes`` rows holds
+        its assigned rows followed by pad repeats of its last row (row 0
+        for an empty shard) — pads are duplicates of *real* rows, so
+        max-reductions (``max_pieces``!) and OverflowError behaviour are
+        untouched by construction.
+      * ``positions`` — int array of length ``plan.n_rows``;
+        ``positions[i]`` is where original row ``i`` landed, so results
+        come back as ``out[i] = y[positions[i]]``.
+    """
+    gather = np.zeros(plan.padded_rows, np.int64)
+    positions = np.full(plan.n_rows, -1, np.int64)
+    for d, rows in enumerate(plan.shards):
+        base = d * plan.lanes
+        fill = rows[-1] if rows else 0
+        for slot in range(plan.lanes):
+            src = rows[slot] if slot < len(rows) else fill
+            gather[base + slot] = src
+            if slot < len(rows):
+                positions[rows[slot]] = base + slot
+    if np.any(positions < 0):
+        raise ValueError("plan does not cover every row exactly once")
+    return gather, positions
+
+
+def _speed_from_seconds(work, per_shard_seconds) -> np.ndarray:
+    """Relative device speeds implied by measured per-shard seconds.
+
+    A shard that did ``work`` units in ``seconds`` ran at ``work/seconds``
+    units/s; normalising by the mean gives dimensionless speed factors
+    for the next LPT pass.  Shards with no work (or no measured time)
+    get speed 1.0 — no evidence, no steering.
+    """
+    w = np.asarray(work, np.float64)
+    s = np.asarray(per_shard_seconds, np.float64)
+    if w.shape != s.shape:
+        raise ValueError(f"work {w.shape} vs seconds {s.shape}")
+    ok = (w > 0) & (s > 0)
+    speed = np.ones_like(w)
+    if np.any(ok):
+        raw = np.where(ok, w / np.where(ok, s, 1.0), np.nan)
+        speed = np.where(ok, raw / np.nanmean(raw), 1.0)
+    return speed
+
+
+def replan_shards(costs: Sequence[float], prev: ShardPlan,
+                  per_shard_seconds: Sequence[float], *,
+                  n_shards: Optional[int] = None,
+                  lanes_pow2: bool = False) -> ShardPlan:
+    """Re-plan ``costs`` using the previous flush's measured seconds.
+
+    The rebalance hook: measured per-shard wall seconds against the
+    previous plan's predicted work yield per-device speed factors, and
+    the next plan's LPT pass equalises *finish time* instead of raw
+    work.  ``costs`` may describe a different batch than ``prev`` — the
+    calibration is per-device, not per-row, exactly like the paper
+    re-deriving thread bounds each round from the current live width.
+    """
+    speed = _speed_from_seconds(prev.work, per_shard_seconds)
+    return plan_shards(costs, n_shards or prev.n_shards,
+                       device_speed=speed, lanes_pow2=lanes_pow2)
+
+
+class ShardRebalancer:
+    """Keeps per-stream device-speed estimates and plans each flush.
+
+    One instance serves many independent streams (the serving layer keys
+    by bucket): :meth:`plan` makes the next plan with the stream's
+    current speed estimates, :meth:`observe` folds a flush's measured
+    per-shard seconds in with an EMA so one noisy measurement cannot
+    flip the assignment (``ema=1.0`` trusts only the last flush).
+    """
+
+    def __init__(self, *, ema: float = 0.5):
+        if not 0.0 < ema <= 1.0:
+            raise ValueError("ema must be in (0, 1]")
+        self.ema = float(ema)
+        self._speed: Dict[object, np.ndarray] = {}
+
+    def speed(self, key, n_shards: int) -> np.ndarray:
+        got = self._speed.get(key)
+        if got is None or got.shape[0] != n_shards:
+            return np.ones(n_shards)
+        return got.copy()            # callers cannot corrupt the estimate
+
+    def plan(self, key, costs, n_shards: int, *,
+             lanes_pow2: bool = False) -> ShardPlan:
+        return plan_shards(costs, n_shards,
+                           device_speed=self.speed(key, n_shards),
+                           lanes_pow2=lanes_pow2)
+
+    def observe(self, key, plan: ShardPlan, per_shard_seconds) -> np.ndarray:
+        """Fold one flush's measurement in; returns the updated speeds."""
+        obs = _speed_from_seconds(plan.work, per_shard_seconds)
+        cur = self.speed(key, plan.n_shards)
+        new = (1.0 - self.ema) * cur + self.ema * obs
+        new = np.maximum(new, 1e-6)
+        self._speed[key] = new / np.mean(new)
+        return self._speed[key].copy()
 
 
 def table1_reference() -> dict:

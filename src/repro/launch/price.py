@@ -12,11 +12,17 @@ given axes, via ``repro.scenarios``):
     PYTHONPATH=src python -m repro.launch.price --grid \
         --n-steps 100 --s0 90,100,110 --sigmas 0.15,0.25 \
         --lambdas 0,0.005,0.01 --payoffs put,call,bull_spread [--greeks] \
-        [--backend pallas [--levels L] [--block B]]
+        [--backend pallas [--levels L] [--block B]] [--devices W]
 
 ``--backend pallas`` routes the transaction-cost engine through the
 blocked Pallas kernel rounds (kernels/rz_step.py); the friction-free
 engine (all lambdas 0) likewise uses its Pallas lattice kernel.
+``--devices W`` shards the scenario batch over a 1-D mesh of W devices
+under the cost-model shard plan (core/partition.py::plan_shards); on
+CPU, expose fake devices first with
+``XLA_FLAGS=--xla_force_host_platform_device_count=W`` (asking for more
+devices than the process has runs the identical plan single-device —
+the simulated mesh, see docs/KNOWN_ISSUES.md).
 """
 from __future__ import annotations
 
@@ -47,9 +53,16 @@ def run_grid(args) -> None:
     t0 = time.perf_counter()
     res = price_grid(n_steps=args.n_steps, capacity=args.capacity,
                      greeks=args.greeks, backend=args.backend,
-                     levels=args.levels, block=args.block, **grid_kwargs)
+                     levels=args.levels, block=args.block,
+                     devices=args.devices, **grid_kwargs)
     n = res.grid.n_scenarios
     dt = time.perf_counter() - t0
+    if res.shard_info is not None:
+        si = res.shard_info
+        kind = "simulated" if si.simulated else "device"
+        print(f"[{kind} mesh: {si.plan.n_shards} shards, "
+              f"{si.plan.lanes} lanes/shard, rows {si.plan.sizes}, "
+              f"predicted work spread {si.plan.work_spread:.1%}]")
     ask, bid = res.ask.ravel(), res.bid.ravel()
     g = res.grid
     for i in range(n):
@@ -95,6 +108,9 @@ def main():
     ap.add_argument("--block", type=int, default=None,
                     help="Pallas node-block size (default: one re-balanced "
                          "block per round)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard the scenario batch over a 1-D mesh of this "
+                         "many devices (grid mode; cost-model shard plan)")
     args = ap.parse_args()
 
     if args.grid:

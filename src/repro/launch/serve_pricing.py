@@ -2,7 +2,8 @@
 
     PYTHONPATH=src python -m repro.launch.serve_pricing \
         --qps 500 --requests 1000 --deadline-ms 5 --max-batch 64 \
-        [--n-steps 16,24] [--tc-fraction 0.0] [--backend jnp] [--seed 0]
+        [--n-steps 16,24] [--tc-fraction 0.0] [--backend jnp] [--seed 0] \
+        [--devices W]
 
 Synthesises a request stream (mixed payoff families, strikes, spots and
 tree depths; an optional transaction-cost slice) arriving at ``--qps``,
@@ -88,13 +89,17 @@ def main() -> None:
     ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
     ap.add_argument("--capacity", type=int, default=24)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--devices", type=int, default=None,
+                    help="route micro-batches onto a 1-D mesh of this many "
+                         "devices, with measured-seconds shard rebalancing "
+                         "(see docs/SERVING.md)")
     args = ap.parse_args()
 
     depths = tuple(int(x) for x in args.n_steps.split(","))
     service = PricingService(
         max_batch=args.max_batch, deadline_ms=args.deadline_ms,
         capacity=args.capacity, backend=args.backend,
-        default_n_steps=depths[0])
+        default_n_steps=depths[0], devices=args.devices)
     trace = synth_trace(args.requests, n_steps=depths,
                         tc_fraction=args.tc_fraction, seed=args.seed)
 
@@ -115,6 +120,9 @@ def main() -> None:
     print(f"  result cache    : {m['cache_hits']:8d} hits")
     print(f"  compile cache   : {m['compile_hits']:8d} hits "
           f"/ {m['compile_misses']} misses")
+    if args.devices:
+        print(f"  shard batches   : {m['shard_batches']:8d} "
+              f"(rebalances {m['rebalances']})")
     print(f"  engine time     : {m['engine_seconds']:8.2f} s "
           f"({m['contracts_per_sec']:9.1f} contracts/s in-engine)")
     print(f"  latency p50/p99 : {m['p50_latency_ms']:8.2f} / "

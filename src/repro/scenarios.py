@@ -55,10 +55,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .core.partition import (ShardPlan, plan_shards, scenario_costs,
+                             shard_layout)
 from .core.payoff import param_payoff
 from .core.rz import RZ_BACKENDS, rz_backward, rz_backward_pallas
 
-__all__ = ["ScenarioGrid", "GridResult", "price_grid_rz", "price_grid_notc",
+__all__ = ["ScenarioGrid", "GridResult", "ShardExecInfo",
+           "price_grid_rz", "price_grid_notc",
            "PAYOFF_FAMILIES", "payoff_params"]
 
 PAYOFF_FAMILIES = ("put", "call", "bull_spread")
@@ -197,6 +200,27 @@ class ScenarioGrid:
             n_steps=self.n_steps, shape=(to,))
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardExecInfo:
+    """How a grid call was laid out over (and measured on) a device mesh.
+
+    ``plan`` is the :class:`~repro.core.partition.ShardPlan` the call
+    ran under; ``simulated`` is True when no real mesh was available and
+    the identical layout executed on the local device (bit-equal
+    results; see ``resolve_grid_mesh``).  ``per_shard_pieces`` is the
+    *measured* peak PWL knot count of each shard's rows (all zero on the
+    friction-free path) and ``measured_work`` the cost model re-evaluated
+    with those measured pieces — the signal the serving layer's
+    rebalance hook feeds back into the next plan.
+    """
+    plan: ShardPlan
+    mesh_shape: tuple
+    simulated: bool
+    per_shard_pieces: tuple
+    per_shard_rows: tuple
+    measured_work: tuple
+
+
 @dataclasses.dataclass
 class GridResult:
     """Ask/bid surfaces (and optional Greeks) over a scenario grid.
@@ -204,7 +228,9 @@ class GridResult:
     All arrays have ``grid.shape``.  For the friction-free engine
     ask == bid == the binomial price (``price`` is an alias for ``ask``).
     Greeks are central finite differences fused into the same compiled
-    call: ``delta_* = dP/ds0``, ``vega_* = dP/dsigma``.
+    call: ``delta_* = dP/ds0``, ``vega_* = dP/dsigma``.  ``shard_info``
+    is set when the call ran over a device mesh (or its single-device
+    simulation).
     """
     grid: ScenarioGrid
     ask: np.ndarray
@@ -214,6 +240,7 @@ class GridResult:
     delta_bid: Optional[np.ndarray] = None
     vega_ask: Optional[np.ndarray] = None
     vega_bid: Optional[np.ndarray] = None
+    shard_info: Optional[ShardExecInfo] = None
 
     @property
     def price(self) -> np.ndarray:
@@ -232,9 +259,14 @@ _param_payoff = param_payoff
 # --------------------------------------------------------------------- #
 # Roux–Zastawniak grid engine (transaction costs; exact at lambda = 0)
 # --------------------------------------------------------------------- #
-@partial(jax.jit, static_argnames=("n_steps", "capacity"))
-def _rz_grid_jit(s0, sigma, rate, maturity, k, alpha, zeta, w1, w2, k1, k2,
-                 *, n_steps: int, capacity: int):
+def _rz_rows(s0, sigma, rate, maturity, k, alpha, zeta, w1, w2, k1, k2,
+             *, n_steps: int, capacity: int):
+    """Flat-batch RZ kernel: equal-length row arrays in, rows out.
+
+    The shardable unit — the sharded path wraps exactly this function in
+    ``shard_map`` (each device prices its slice of rows), the single
+    path jits it directly.
+    """
     def one(s0_, sig_, r_, t_, k_, al_, ze_, w1_, w2_, k1_, k2_):
         pay = _param_payoff(al_, ze_, w1_, w2_, k1_, k2_)
         return rz_backward(s0_, sig_, r_, t_, k_, n_steps=n_steps,
@@ -243,9 +275,11 @@ def _rz_grid_jit(s0, sigma, rate, maturity, k, alpha, zeta, w1, w2, k1, k2,
                          alpha, zeta, w1, w2, k1, k2)
 
 
-@partial(jax.jit, static_argnames=("n_steps", "capacity", "levels", "block",
-                                   "interpret"))
-def _rz_grid_pallas(s0, sigma, rate, maturity, k, alpha, zeta, w1, w2, k1, k2,
+_rz_grid_jit = partial(jax.jit, static_argnames=("n_steps", "capacity"))(
+    _rz_rows)
+
+
+def _rz_rows_pallas(s0, sigma, rate, maturity, k, alpha, zeta, w1, w2, k1, k2,
                     *, n_steps: int, capacity: int, levels, block,
                     interpret: bool):
     def one(s0_, sig_, r_, t_, k_, al_, ze_, w1_, w2_, k1_, k2_):
@@ -256,6 +290,10 @@ def _rz_grid_pallas(s0, sigma, rate, maturity, k, alpha, zeta, w1, w2, k1, k2,
                                   interpret=interpret)
     return jax.vmap(one)(s0, sigma, rate, maturity, k,
                          alpha, zeta, w1, w2, k1, k2)
+
+
+_rz_grid_pallas = partial(jax.jit, static_argnames=(
+    "n_steps", "capacity", "levels", "block", "interpret"))(_rz_rows_pallas)
 
 
 def _grid_inputs(grid: ScenarioGrid):
@@ -299,10 +337,109 @@ def _split_bumps(vals, n: int, copies: int, s0, shape):
     return base, delta, vega
 
 
+# --------------------------------------------------------------------- #
+# device-mesh sharded dispatch (1-D scenario mesh, core/distributed.py)
+# --------------------------------------------------------------------- #
+# Rows of a flat grid are independent, so sharding is pure layout: a
+# host-side plan (core/partition.py::plan_shards) permutes rows so each
+# device's slice has near-equal *predicted* work, pads every slice to the
+# plan's static lane count with duplicates of in-shard rows, and runs the
+# same row kernel under shard_map.  Results gather back through the
+# inverse permutation; pad lanes are duplicates, so max-reductions
+# (``max_pieces``) and the OverflowError check see exactly the
+# single-device values.
+
+_SHARD_JIT_CACHE: dict = {}
+
+
+def _sharded_jit(rows_fn, mesh, **static):
+    """jit of ``rows_fn`` shard_mapped over ``mesh`` — cached per
+    (kernel, mesh, static config) like jax's own jit cache."""
+    from .core.distributed import sharded_rows
+    key = (rows_fn, mesh, tuple(sorted(static.items())))
+    f = _SHARD_JIT_CACHE.get(key)
+    if f is None:
+        f = jax.jit(sharded_rows(partial(rows_fn, **static), mesh))
+        _SHARD_JIT_CACHE[key] = f
+    return f
+
+
+def _resolve_shard(grid: ScenarioGrid, n_rows: int, copies: int, *,
+                   capacity: int, mesh, devices,
+                   shard_plan: Optional[ShardPlan]):
+    """Normalise sharding knobs to ``(mesh_or_None, plan_or_None)``.
+
+    A caller-supplied ``shard_plan`` (the serving layer's rebalanced
+    plan) must cover the *bumped* flat batch; otherwise a fresh
+    cost-model plan is made here.  ``(None, None)`` means take the
+    single-device path.
+    """
+    from .core.distributed import resolve_grid_mesh
+    mesh, n_shards = resolve_grid_mesh(devices, mesh)
+    if shard_plan is None and n_shards <= 1:
+        return None, None
+    if shard_plan is None:
+        costs = np.tile(scenario_costs(grid.n_steps, grid.cost_rate,
+                                       capacity=capacity), copies)
+        shard_plan = plan_shards(costs, n_shards)
+    elif n_shards > 1 and shard_plan.n_shards != n_shards:
+        # also on the simulated path: a mismatch must fail identically
+        # on 1-device CI and on a real mesh
+        raise ValueError(f"shard_plan has {shard_plan.n_shards} shards but "
+                         f"devices/mesh asked for {n_shards}")
+    if shard_plan.n_rows != n_rows:
+        raise ValueError(f"shard_plan covers {shard_plan.n_rows} rows, "
+                         f"batch has {n_rows} (greeks bumps included)")
+    return mesh, shard_plan
+
+
+def _run_rows(rows_fn, jit_fn, static: dict, inputs, mesh,
+              plan: Optional[ShardPlan]):
+    """Run the flat-batch row kernel; sharded when ``plan`` is present.
+
+    Returns ``(outputs, positions)`` — ``positions`` (None on the single
+    path) maps original row ``i`` to its slot in the laid-out outputs.
+    With a plan but no mesh the identical layout runs on the local
+    device (the *simulated* mesh of ``resolve_grid_mesh``).
+    """
+    if plan is None:
+        return jit_fn(*inputs, **static), None
+    gather, positions = shard_layout(plan)
+    laid_out = tuple(a[gather] for a in inputs)
+    if mesh is None:
+        out = jit_fn(*laid_out, **static)
+    else:
+        out = _sharded_jit(rows_fn, mesh, **static)(*laid_out)
+    return out, positions
+
+
+def _shard_exec_info(plan: ShardPlan, mesh, grid: ScenarioGrid, copies: int,
+                     pieces_rows: Optional[np.ndarray]) -> ShardExecInfo:
+    """Measured per-shard stats for the rebalance hook (see
+    :class:`ShardExecInfo`)."""
+    cr = np.tile(np.atleast_1d(np.asarray(grid.cost_rate)), copies)
+    if pieces_rows is None:
+        pieces_rows = np.zeros(plan.n_rows)
+    costs = scenario_costs(grid.n_steps, cr,
+                           pieces=np.maximum(pieces_rows, 1.0))
+    per_pieces, measured = [], []
+    for rows in plan.shards:
+        idx = list(rows)
+        per_pieces.append(int(np.max(pieces_rows[idx])) if idx else 0)
+        measured.append(float(np.sum(costs[idx])) if idx else 0.0)
+    return ShardExecInfo(plan=plan, mesh_shape=(plan.n_shards,),
+                         simulated=mesh is None,
+                         per_shard_pieces=tuple(per_pieces),
+                         per_shard_rows=plan.sizes,
+                         measured_work=tuple(measured))
+
+
 def price_grid_rz(grid: ScenarioGrid, *, capacity: int = 48,
                   greeks: bool = False, backend: str = "jnp",
                   levels: Optional[int] = None, block: Optional[int] = None,
-                  interpret: bool = True) -> GridResult:
+                  interpret: bool = True, mesh=None,
+                  devices: Optional[int] = None,
+                  shard_plan: Optional[ShardPlan] = None) -> GridResult:
     """Price every scenario of ``grid`` under transaction costs.
 
     One jitted, vmapped call over the whole (bumped, if ``greeks``) batch;
@@ -315,20 +452,36 @@ def price_grid_rz(grid: ScenarioGrid, *, capacity: int = 48,
     ``kernels/rz_step.py`` under the ``core/partition.py`` round schedule
     (``levels``/``block`` tune it; ``interpret`` as in the no-TC kernel).
     Both report ``max_pieces`` identically.
+
+    ``mesh``/``devices`` shard the flat scenario batch over a 1-D device
+    mesh under a cost-model :class:`~repro.core.partition.ShardPlan`
+    (pass ``shard_plan`` to override, e.g. the serving layer's
+    rebalanced plan); results, ``max_pieces`` and the OverflowError
+    check are identical to the single-device call.
     """
     inputs, copies = _with_bumps(_grid_inputs(grid), greeks)
     if backend == "jnp":
-        ask, bid, pieces = _rz_grid_jit(*inputs, n_steps=grid.n_steps,
-                                        capacity=capacity)
+        rows_fn, jit_fn = _rz_rows, _rz_grid_jit
+        static = dict(n_steps=grid.n_steps, capacity=capacity)
     elif backend == "pallas":
-        ask, bid, pieces = _rz_grid_pallas(*inputs, n_steps=grid.n_steps,
-                                           capacity=capacity, levels=levels,
-                                           block=block, interpret=interpret)
+        rows_fn, jit_fn = _rz_rows_pallas, _rz_grid_pallas
+        static = dict(n_steps=grid.n_steps, capacity=capacity, levels=levels,
+                      block=block, interpret=interpret)
     else:
         raise ValueError(f"unknown backend {backend!r}; use one of "
                          f"{RZ_BACKENDS}")
+    mesh, plan = _resolve_shard(grid, inputs[0].shape[0], copies,
+                                capacity=capacity, mesh=mesh,
+                                devices=devices, shard_plan=shard_plan)
+    (ask, bid, pieces), positions = _run_rows(rows_fn, jit_fn, static,
+                                              inputs, mesh, plan)
+    shard_info = None
+    if plan is not None:
+        ask, bid = np.asarray(ask)[positions], np.asarray(bid)[positions]
+        pieces = np.asarray(pieces)[positions]
+        shard_info = _shard_exec_info(plan, mesh, grid, copies, pieces)
     n = grid.n_scenarios
-    max_pieces = int(jnp.max(pieces))
+    max_pieces = int(jnp.max(jnp.asarray(pieces)))
     if max_pieces > capacity:
         raise OverflowError(
             f"PWL capacity overflow: needed {max_pieces} > K={capacity}; "
@@ -336,7 +489,8 @@ def price_grid_rz(grid: ScenarioGrid, *, capacity: int = 48,
     a, da, va = _split_bumps(ask, n, copies, grid.s0, grid.shape)
     b, db, vb = _split_bumps(bid, n, copies, grid.s0, grid.shape)
     return GridResult(grid=grid, ask=a, bid=b, max_pieces=max_pieces,
-                      delta_ask=da, delta_bid=db, vega_ask=va, vega_bid=vb)
+                      delta_ask=da, delta_bid=db, vega_ask=va, vega_bid=vb,
+                      shard_info=shard_info)
 
 
 # --------------------------------------------------------------------- #
@@ -369,15 +523,17 @@ def _notc_one_jnp(s0, sigma, rate, maturity, alpha, zeta, w1, w2, k1, k2,
     return jax.lax.fori_loop(0, n_steps, body, v0)[0]
 
 
-@partial(jax.jit, static_argnames=("n_steps",))
-def _notc_grid_jnp(s0, sigma, rate, maturity, alpha, zeta, w1, w2, k1, k2,
+def _notc_rows_jnp(s0, sigma, rate, maturity, alpha, zeta, w1, w2, k1, k2,
                    *, n_steps: int):
     return jax.vmap(partial(_notc_one_jnp, n_steps=n_steps))(
         s0, sigma, rate, maturity, alpha, zeta, w1, w2, k1, k2)
 
 
-@partial(jax.jit, static_argnames=("n_steps", "levels", "block", "interpret"))
-def _notc_grid_pallas(s0, sigma, rate, maturity, alpha, zeta, w1, w2, k1, k2,
+_notc_grid_jnp = partial(jax.jit, static_argnames=("n_steps",))(
+    _notc_rows_jnp)
+
+
+def _notc_rows_pallas(s0, sigma, rate, maturity, alpha, zeta, w1, w2, k1, k2,
                       *, n_steps: int, levels: int, block: int,
                       interpret: bool):
     from .kernels.binomial_step import lattice_round_param
@@ -410,30 +566,49 @@ def _notc_grid_pallas(s0, sigma, rate, maturity, alpha, zeta, w1, w2, k1, k2,
                          alpha, zeta, w1, w2, k1, k2)
 
 
+_notc_grid_pallas = partial(jax.jit, static_argnames=(
+    "n_steps", "levels", "block", "interpret"))(_notc_rows_pallas)
+
+
 def price_grid_notc(grid: ScenarioGrid, *, backend: str = "jnp",
                     greeks: bool = False, levels: int = 64,
-                    block: int = 256, interpret: bool = True) -> GridResult:
+                    block: int = 256, interpret: bool = True, mesh=None,
+                    devices: Optional[int] = None,
+                    shard_plan: Optional[ShardPlan] = None) -> GridResult:
     """Friction-free binomial prices for every scenario of ``grid``.
 
     ``backend="jnp"`` runs the vectorised ``core/notc.py`` recursion;
     ``backend="pallas"`` vmaps the blocked lattice kernel
     (``kernels/binomial_step.py``), exercising the paper's §4 block scheme
     per scenario.  ``grid.cost_rate`` is ignored (must be 0 for the result
-    to be meaningful as a two-sided quote).
+    to be meaningful as a two-sided quote).  ``mesh``/``devices``/
+    ``shard_plan`` shard the batch over a 1-D device mesh exactly as in
+    :func:`price_grid_rz` (friction-free rows all cost the same, so the
+    default plan is the even split).
     """
     inputs, copies = _with_bumps(_grid_inputs(grid), greeks)
     # drop the cost-rate column (index 4) — this engine is friction-free
     args = inputs[:4] + inputs[5:]
     if backend == "jnp":
-        vals = _notc_grid_jnp(*args, n_steps=grid.n_steps)
+        rows_fn, jit_fn = _notc_rows_jnp, _notc_grid_jnp
+        static = dict(n_steps=grid.n_steps)
     elif backend == "pallas":
-        vals = _notc_grid_pallas(*args, n_steps=grid.n_steps, levels=levels,
-                                 block=block, interpret=interpret)
+        rows_fn, jit_fn = _notc_rows_pallas, _notc_grid_pallas
+        static = dict(n_steps=grid.n_steps, levels=levels, block=block,
+                      interpret=interpret)
     else:
         raise ValueError(f"unknown backend {backend!r}; use 'jnp' or 'pallas'")
+    mesh, plan = _resolve_shard(grid, args[0].shape[0], copies,
+                                capacity=1, mesh=mesh, devices=devices,
+                                shard_plan=shard_plan)
+    vals, positions = _run_rows(rows_fn, jit_fn, static, args, mesh, plan)
+    shard_info = None
+    if plan is not None:
+        vals = np.asarray(vals)[positions]
+        shard_info = _shard_exec_info(plan, mesh, grid, copies, None)
     n = grid.n_scenarios
     p, dp, vp = _split_bumps(vals, n, copies, grid.s0, grid.shape)
     cp = lambda a: None if a is None else a.copy()
     return GridResult(grid=grid, ask=p, bid=p.copy(), max_pieces=0,
                       delta_ask=dp, delta_bid=cp(dp),
-                      vega_ask=vp, vega_bid=cp(vp))
+                      vega_ask=vp, vega_bid=cp(vp), shard_info=shard_info)

@@ -34,6 +34,16 @@ Design points (see ``docs/SERVING.md`` for the operator's guide):
   scenarios without touching the engines at all.
 * **Metrics.**  ``requests``, ``batches``, ``p50/p99`` latency, pad
   waste, contracts/sec, per-engine batch counts — :meth:`metrics`.
+* **Device mesh.**  ``devices=``/``mesh=`` route every flushed
+  micro-batch (and every :meth:`price_grid` call) onto a 1-D device
+  mesh: each flush is planned by the cost model
+  (``core/partition.py::plan_shards`` — TC rows ~``max_pieces`` x a
+  frictionless row), and after the flush the **rebalance hook** feeds
+  the measured seconds back (:class:`~repro.core.partition.ShardRebalancer`)
+  so the next plan steers work away from shards that ran slow — the
+  paper's §4.2 per-round reassignment at device granularity.  The
+  compile cache is additionally keyed on the mesh shape and the plan's
+  per-device lane count (both change the compiled program).
 
 The service is deliberately single-process and cooperative (no threads:
 ``submit``/``step`` do the work inline) — see ``docs/KNOWN_ISSUES.md``
@@ -48,13 +58,10 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from ..core.partition import _next_pow2
 from ..scenarios import PAYOFF_FAMILIES
 
 __all__ = ["PricingService", "ServiceMetrics"]
-
-
-def _next_pow2(n: int) -> int:
-    return 1 << max(0, int(n) - 1).bit_length()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,6 +87,8 @@ class ServiceMetrics:
         default_factory=lambda: {"notc": 0, "rz": 0})
     grids: int = 0               # GridRequests priced
     grid_scenarios: int = 0
+    shard_batches: int = 0       # flushes routed onto the device mesh
+    rebalances: int = 0          # measured-seconds feedbacks folded in
     # p50/p99 are computed over a bounded window of recent samples so a
     # long-running service doesn't grow without limit
     latencies: List[float] = dataclasses.field(default_factory=list)
@@ -106,6 +115,8 @@ class ServiceMetrics:
             "contracts_per_sec": cps,
             "engine_batches": dict(self.engine_batches),
             "grids": self.grids, "grid_scenarios": self.grid_scenarios,
+            "shard_batches": self.shard_batches,
+            "rebalances": self.rebalances,
             "p50_latency_ms": float(np.percentile(lat, 50) * 1e3),
             "p99_latency_ms": float(np.percentile(lat, 99) * 1e3),
         }
@@ -120,10 +131,23 @@ class PricingService:
                  default_strike: float = 100.0,
                  result_cache_size: int = 1024, max_results: int = 65536,
                  min_grid_bucket: Optional[int] = None,
+                 devices: Optional[int] = None, mesh=None,
+                 rebalance_ema: float = 0.5,
                  clock: Callable[[], float] = time.monotonic):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.max_batch = int(max_batch)
+        # device-mesh routing (lazy imports: the jax-touching modules load
+        # only when sharding is actually requested)
+        if devices is not None or mesh is not None:
+            from ..core.distributed import resolve_grid_mesh
+            from ..core.partition import ShardRebalancer
+            self._mesh, self._n_shards = resolve_grid_mesh(devices, mesh)
+            self._rebalancer = (ShardRebalancer(ema=rebalance_ema)
+                                if self._n_shards > 1 else None)
+        else:
+            self._mesh, self._n_shards = None, 1
+            self._rebalancer = None
         self.deadline_s = float(deadline_ms) * 1e-3
         self.capacity = int(capacity)
         self.backend = backend
@@ -203,21 +227,89 @@ class PricingService:
     # flush machinery
     # ------------------------------------------------------------------ #
     def _compile_key_seen(self, padded: int, n_steps: int, engine: str,
-                          greeks: bool, backend: Optional[str] = None) -> None:
+                          greeks: bool, backend: Optional[str] = None,
+                          shard: Optional[tuple] = None) -> None:
         """Count a *successful* engine call against its compiled-program
         key.  Called only after the call returns: a failed call (e.g. a
         capacity overflow) compiled nothing worth counting, and raising
         ``capacity`` — a shape parameter, hence part of the key — then
-        retrying is a genuine fresh compile, not a hit."""
+        retrying is a genuine fresh compile, not a hit.  ``shard`` is
+        ``(n_shards, lanes)`` when the call ran on the device mesh —
+        both change the compiled program's shape, so they are part of
+        the key."""
         ck = (padded, n_steps, engine,
               self.backend if backend is None else backend, greeks,
-              self.capacity)
+              self.capacity, shard)
         if ck in self._compiled:
             self._compiled[ck] += 1
             self.metrics_.compile_hits += 1
         else:
             self._compiled[ck] = 1
             self.metrics_.compile_misses += 1
+
+    # ------------------------------------------------------------------ #
+    # device-mesh shard planning / rebalance hook
+    # ------------------------------------------------------------------ #
+    def _shard_plan(self, bucket: tuple, cost_rates, n_steps: int,
+                    padded: int):
+        """Cost-model shard plan for one padded micro-batch (None when
+        the service runs single-device).  Lanes round up to a power of
+        two so each bucket's flushes reuse a handful of per-device
+        compiled shapes — the pad-to-bucket discipline, per device."""
+        if self._rebalancer is None:
+            return None
+        cr = np.asarray(cost_rates, np.float64)
+        cr = np.concatenate([cr, np.repeat(cr[-1:], padded - cr.shape[0])])
+        return self._shard_plan_from_costs(bucket, n_steps, cr)
+
+    def _shard_plan_from_costs(self, key, n_steps: int, cost_rates_padded,
+                               *, copies: int = 1):
+        """Rebalancer-steered plan over a padded batch's cost-model costs
+        (``copies`` > 1 tiles for the greeks bump blocks)."""
+        from ..core.partition import scenario_costs
+        costs = scenario_costs(n_steps, cost_rates_padded,
+                               capacity=self.capacity)
+        if copies > 1:
+            costs = np.tile(costs, copies)
+        return self._rebalancer.plan(key, costs, self._n_shards,
+                                     lanes_pow2=True)
+
+    def _observe_flush(self, bucket: tuple, res, seconds: float) -> None:
+        """Fold one sharded flush's measurement into the rebalancer.
+
+        SPMD shards run in lockstep, so true per-shard wall seconds are
+        not observable from the host; the flush's total seconds are
+        attributed by each shard's *measured* work (the cost model
+        re-evaluated with the measured ``max_pieces`` — see
+        ``ShardExecInfo.measured_work``).  Operators with per-device
+        profiles can feed real timings via :meth:`observe_shard_seconds`.
+        """
+        info = getattr(res, "shard_info", None)
+        if self._rebalancer is None or info is None:
+            return
+        self.metrics_.shard_batches += 1
+        work = np.asarray(info.measured_work, np.float64)
+        if work.sum() <= 0 or seconds <= 0:
+            return                   # nothing measurable to fold in
+        per_shard = seconds * work / work.sum()
+        self._rebalancer.observe(bucket, info.plan, per_shard)
+        self.metrics_.rebalances += 1
+
+    def observe_shard_seconds(self, bucket: tuple, plan,
+                              per_shard_seconds) -> None:
+        """Feed externally measured per-shard seconds (e.g. from a device
+        profiler) into the rebalance loop for ``bucket``."""
+        if self._rebalancer is None:
+            raise ValueError("service is not sharded (pass devices=/mesh=)")
+        self._rebalancer.observe(bucket, plan, per_shard_seconds)
+        self.metrics_.rebalances += 1
+
+    def shard_speed(self, bucket: tuple):
+        """Current per-device speed estimates for ``bucket`` (None when
+        single-device) — what the next flush's plan will steer by."""
+        if self._rebalancer is None:
+            return None
+        return self._rebalancer.speed(bucket, self._n_shards)
 
     def _flush_bucket(self, bucket: tuple) -> Dict[int, "PriceQuote"]:
         from ..api import PriceQuote, price_flat
@@ -230,6 +322,7 @@ class PricingService:
             padded = _next_pow2(n)
             cols = list(zip(*(p.key for p in chunk)))
             engine = "rz" if has_tc else "notc"
+            plan = self._shard_plan(bucket, cols[4], n_steps, padded)
             t0 = self._clock()
             try:
                 res = price_flat(
@@ -238,7 +331,8 @@ class PricingService:
                     cost_rate=np.asarray(cols[4]), payoff=tuple(cols[5]),
                     strike=np.asarray(cols[6]), strike2=np.asarray(cols[7]),
                     n_steps=n_steps, engine=engine, capacity=self.capacity,
-                    backend=self.backend, pad_to=padded)
+                    backend=self.backend, pad_to=padded,
+                    mesh=self._mesh, shard_plan=plan)
             except Exception:
                 # no request is ever silently lost: re-queue this chunk and
                 # everything behind it, then surface the error (e.g. a PWL
@@ -247,7 +341,10 @@ class PricingService:
                                          + self._buckets.get(bucket, []))
                 raise
             now = self._clock()
-            self._compile_key_seen(padded, n_steps, engine, False)
+            self._observe_flush(bucket, res, now - t0)
+            self._compile_key_seen(
+                padded, n_steps, engine, False,
+                shard=(plan.n_shards, plan.lanes) if plan else None)
             ask, bid = res.ask.ravel(), res.bid.ravel()
             for i, p in enumerate(chunk):
                 # max_pieces is the *micro-batch* peak PWL knot count — a
@@ -352,13 +449,31 @@ class PricingService:
         n = grid.n_scenarios
         bucket = max(self.min_grid_bucket, _next_pow2(n))
         engine = "rz" if np.any(grid.cost_rate > 0.0) else "notc"
+        # grids rebalance under their own stream key: plan through the
+        # rebalancer (greeks bump the batch 5x — the plan must cover the
+        # bumped rows) so measured-seconds feedback actually steers the
+        # next grid of the same depth/engine
+        gkey = ("grid", grid.n_steps, engine)
+        plan = None
+        if self._rebalancer is not None:
+            cr = np.concatenate([grid.cost_rate,
+                                 np.repeat(grid.cost_rate[-1:],
+                                           bucket - n)])
+            plan = self._shard_plan_from_costs(
+                gkey, grid.n_steps, cr, copies=5 if req.greeks else 1)
         t0 = self._clock()
         res = price_grid(grid.pad_to(bucket), engine=engine,
                          capacity=self.capacity, greeks=req.greeks,
-                         backend=req.backend)
-        self.metrics_.engine_seconds += self._clock() - t0
+                         backend=req.backend, mesh=self._mesh,
+                         shard_plan=plan)
+        elapsed = self._clock() - t0
+        self.metrics_.engine_seconds += elapsed
+        self._observe_flush(gkey, res, elapsed)
+        info = res.shard_info
         self._compile_key_seen(bucket, grid.n_steps, engine, req.greeks,
-                               backend=req.backend)
+                               backend=req.backend,
+                               shard=(info.plan.n_shards, info.plan.lanes)
+                               if info else None)
         self.metrics_.engine_batches[engine] += 1
         self.metrics_.grids += 1
         self.metrics_.grid_scenarios += n
@@ -368,4 +483,5 @@ class PricingService:
             grid=grid, ask=cut(res.ask), bid=cut(res.bid),
             max_pieces=res.max_pieces,
             delta_ask=cut(res.delta_ask), delta_bid=cut(res.delta_bid),
-            vega_ask=cut(res.vega_ask), vega_bid=cut(res.vega_bid))
+            vega_ask=cut(res.vega_ask), vega_bid=cut(res.vega_bid),
+            shard_info=res.shard_info)

@@ -1,0 +1,146 @@
+"""CI tooling: the bench-regression gate and the benchmark registry.
+
+``tools/check_bench.py`` is the PR lane's perf ratchet: these tests pin
+its gating semantics (tolerance band, ratio-only fallback on config
+mismatch, fail-on-missing) with synthetic reports, plus the
+``benchmarks.run`` registry surface (``--list``, module-name aliases,
+unknown-name fail-fast) that the satellite bugfix added.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT))
+
+from tools.check_bench import check  # noqa: E402
+
+
+def _rz_report(cps_jnp=1.0, cps_pallas=1.8, ratio=1.8, n_steps=96):
+    return {
+        "bench": "rz_grid_backends", "n_steps": n_steps, "contracts": 2,
+        "capacity": 24, "repeats": 1, "levels": None, "block": None,
+        "interpret": True, "device": "cpu",
+        "jnp": {"seconds": 1.0, "contracts_per_sec": cps_jnp},
+        "pallas": {"seconds": 1.0, "contracts_per_sec": cps_pallas},
+        "pallas_over_jnp": ratio,
+    }
+
+
+def _serve_report(cps=20000.0, speedup=40.0):
+    return {
+        "bench": "serve_scheduler_vs_per_request", "requests": 1000,
+        "max_batch": 64, "n_steps": [16, 24], "tc_fraction": 0.0,
+        "capacity": 16, "seed": 0, "device": "cpu",
+        "scheduler": {"seconds": 0.05, "contracts_per_sec": cps},
+        "baseline": {"seconds": 1.8, "contracts_per_sec": 550.0},
+        "speedup": speedup, "speedup_nocache": 6.0,
+    }
+
+
+def test_gate_passes_within_tolerance():
+    assert check(_rz_report(cps_pallas=1.5), _rz_report(), tol=0.25) == []
+    # improvements never fail
+    assert check(_rz_report(cps_pallas=9.9, ratio=9.0), _rz_report(),
+                 tol=0.25) == []
+
+
+def test_gate_fails_beyond_25_percent():
+    fails = check(_rz_report(cps_jnp=0.5, cps_pallas=1.2, ratio=2.4),
+                  _rz_report(), tol=0.25)
+    assert len(fails) == 2          # both backends regressed > 25%
+    assert any("jnp.contracts_per_sec" in f for f in fails)
+    assert any("pallas.contracts_per_sec" in f for f in fails)
+    # boundary: exactly at the floor passes
+    assert check(_rz_report(cps_jnp=0.75), _rz_report(), tol=0.25) == []
+
+
+def test_config_mismatch_gates_ratios_only():
+    """The nightly lane (N=512) against the PR-lane baseline (N=96):
+    machine-dependent contracts/sec must NOT gate, the dimensionless
+    pallas/jnp ratio must."""
+    nightly = _rz_report(cps_jnp=0.01, cps_pallas=0.02, ratio=1.7,
+                         n_steps=512)
+    assert check(nightly, _rz_report(), tol=0.25) == []
+    nightly_bad = _rz_report(cps_jnp=0.01, cps_pallas=0.012, ratio=1.2,
+                             n_steps=512)
+    fails = check(nightly_bad, _rz_report(ratio=1.8), tol=0.25)
+    assert len(fails) == 1 and "pallas_over_jnp" in fails[0]
+
+
+def test_serve_gate_and_wrong_baseline():
+    assert check(_serve_report(), _serve_report(), tol=0.25) == []
+    fails = check(_serve_report(cps=1000.0, speedup=2.0), _serve_report(),
+                  tol=0.25)
+    assert any("scheduler.contracts_per_sec" in f for f in fails)
+    assert any("speedup" in f for f in fails)
+    # rz fresh vs serve baseline: one clear failure, not a KeyError
+    fails = check(_rz_report(), _serve_report(), tol=0.25)
+    assert len(fails) == 1 and "wrong baseline" in fails[0]
+
+
+def test_cli_exit_codes(tmp_path):
+    fresh, base = tmp_path / "fresh.json", tmp_path / "base.json"
+    fresh.write_text(json.dumps(_rz_report()))
+    base.write_text(json.dumps(_rz_report()))
+    cmd = [sys.executable, str(ROOT / "tools" / "check_bench.py")]
+    ok = subprocess.run(cmd + ["--fresh", str(fresh), "--baseline",
+                               str(base)], capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    fresh.write_text(json.dumps(_rz_report(cps_pallas=0.5, ratio=0.5)))
+    bad = subprocess.run(cmd + ["--fresh", str(fresh), "--baseline",
+                                str(base)], capture_output=True, text=True)
+    assert bad.returncode == 1
+    assert "BENCH REGRESSION" in bad.stdout
+    missing = subprocess.run(cmd + ["--fresh", str(tmp_path / "no.json"),
+                                    "--baseline", str(base)],
+                             capture_output=True, text=True)
+    assert missing.returncode == 1
+    # --write-baseline seeds/refreshes instead of gating
+    seed = subprocess.run(cmd + ["--fresh", str(fresh), "--baseline",
+                                 str(tmp_path / "new" / "b.json"),
+                                 "--write-baseline"],
+                          capture_output=True, text=True)
+    assert seed.returncode == 0
+    assert json.loads((tmp_path / "new" / "b.json").read_text())["bench"] \
+        == "rz_grid_backends"
+
+
+def test_committed_baselines_match_ci_lane_configs():
+    """The repo must ship baselines for exactly what the CI bench jobs
+    produce (bench kind + PR-lane config), else the gate dry-rots."""
+    base_dir = ROOT / "benchmarks" / "baselines"
+    rz = json.loads((base_dir / "BENCH_rz.json").read_text())
+    assert rz["bench"] == "rz_grid_backends"
+    assert rz["n_steps"] == 96          # the PR-lane canary depth
+    assert rz["pallas_over_jnp"] > 1.0  # the banked Pallas win
+    serve = json.loads((base_dir / "BENCH_serve.json").read_text())
+    assert serve["bench"] == "serve_scheduler_vs_per_request"
+    assert serve["requests"] == 1000
+    assert serve["speedup"] > 2.0
+
+
+# --------------------------------------------------------------------- #
+# benchmarks.run registry (the silently-skipped-bench bugfix)
+# --------------------------------------------------------------------- #
+def test_benchmarks_run_list_registers_newest_benches():
+    """--list must name every bench, including rz_pallas and serve (the
+    two the umbrella runner used to skip), without importing jax."""
+    r = subprocess.run([sys.executable, "-m", "benchmarks.run", "--list"],
+                       capture_output=True, text=True, cwd=ROOT, timeout=60)
+    assert r.returncode == 0, r.stdout + r.stderr
+    for name in ("table1", "grid", "rz_pallas", "serve"):
+        assert name in r.stdout, f"{name} missing from --list"
+    assert "bench_rz_pallas" in r.stdout and "bench_serve" in r.stdout
+
+
+def test_benchmarks_run_aliases_and_unknown():
+    from benchmarks.run import resolve
+    assert resolve("serve") == "serve"
+    assert resolve("bench_serve") == "serve"
+    assert resolve("bench_rz_pallas") == "rz_pallas"
+    with pytest.raises(SystemExit, match="unknown bench"):
+        resolve("nope")

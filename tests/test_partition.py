@@ -103,3 +103,123 @@ def test_makespan_speedup_scales():
     assert 3.2 < s4 <= 4.000001
     assert 6.0 < s8 <= 8.000001
     assert s8 > s4
+
+
+# ===================================================================== #
+# scenario-axis shard planner (the §4.2 re-balancing on a device mesh)
+# ===================================================================== #
+import numpy as np
+
+from repro.core.partition import (ShardRebalancer, plan_shards,
+                                  replan_shards, scenario_costs,
+                                  shard_layout)
+
+
+def test_scenario_costs_model():
+    """TC rows cost ~pieces x a frictionless row; trees cost ~N^2;
+    measured pieces tighten the worst-case capacity estimate."""
+    c = scenario_costs(100, [0.0, 0.01], capacity=48)
+    assert c[1] == pytest.approx(48.0 * c[0])
+    assert scenario_costs(200, [0.0])[0] == pytest.approx(4.0 * c[0])
+    m = scenario_costs(100, [0.0, 0.01], capacity=48, pieces=6)
+    assert m[1] == pytest.approx(6.0 * m[0])
+    per_row = scenario_costs(100, [0.01, 0.01], capacity=48,
+                             pieces=np.array([4.0, 8.0]))
+    assert per_row[1] == pytest.approx(2.0 * per_row[0])
+    # lambda = 0 rows never get the PWL multiplier
+    assert scenario_costs(100, [0.0], capacity=48, pieces=40)[0] == c[0]
+
+
+def test_plan_shards_uneven_sizes_even_work():
+    """The acceptance-gate property: on the 108-row mixed grid (72 TC +
+    36 frictionless rows) the planner's shard *sizes* come out uneven
+    while predicted per-device work stays within 10%."""
+    # the tests' canonical mixed grid: cost_rate axis (0, 0.005, 0.01)
+    cr = np.tile([0.0, 0.005, 0.01], 36)
+    costs = scenario_costs(10, cr, capacity=16)
+    plan = plan_shards(costs, 8)
+    assert plan.n_rows == 108 and sum(plan.sizes) == 108
+    assert len(set(plan.sizes)) > 1          # uneven row counts ...
+    assert plan.work_spread < 0.10           # ... near-equal work
+    # every row appears exactly once
+    assert sorted(i for s in plan.shards for i in s) == list(range(108))
+
+
+def test_plan_shards_uniform_and_edges():
+    plan = plan_shards(np.ones(12), 4)
+    assert plan.sizes == (3, 3, 3, 3) and plan.work_spread == 0.0
+    assert plan.lanes == 3 and plan.padded_rows == 12
+    # more shards than rows: empty shards allowed, lanes >= 1
+    plan = plan_shards(np.ones(3), 8)
+    assert sum(plan.sizes) == 3 and plan.lanes == 1
+    assert plan.work_spread == 0.0           # spread over non-empty shards
+    # pow2 lane rounding (the serving layer's compile-shape discipline)
+    plan = plan_shards(np.ones(10), 2, lanes_pow2=True)
+    assert plan.lanes == 8 and plan.padded_rows == 16
+    with pytest.raises(ValueError):
+        plan_shards(np.ones(4), 0)
+    with pytest.raises(ValueError):
+        plan_shards(np.array([1.0, -1.0]), 2)
+    with pytest.raises(ValueError):
+        plan_shards(np.ones(4), 2, device_speed=[1.0, 0.0])
+
+
+def test_plan_shards_determinism():
+    cr = np.tile([0.0, 0.01], 20)
+    costs = scenario_costs(50, cr, capacity=32)
+    assert plan_shards(costs, 4) == plan_shards(costs, 4)
+
+
+def test_plan_shards_speed_steering():
+    """A device reported 2x faster should end with ~2x the work."""
+    plan = plan_shards(np.ones(300), 2, device_speed=[2.0, 1.0])
+    w0, w1 = plan.work
+    assert w0 / w1 == pytest.approx(2.0, rel=0.05)
+
+
+def test_shard_layout_roundtrip_and_pad_locality():
+    cr = np.tile([0.0, 0.01, 0.01], 11)      # 33 rows, uneven costs
+    plan = plan_shards(scenario_costs(8, cr, capacity=8), 4)
+    gather, positions = shard_layout(plan)
+    assert gather.shape == (plan.padded_rows,)
+    assert positions.shape == (33,)
+    # inverse property: laying out then reading back restores every row
+    assert (gather[positions] == np.arange(33)).all()
+    # pads duplicate rows of the SAME shard (so per-shard stats and
+    # max-reductions cannot leak across shards)
+    for d, rows in enumerate(plan.shards):
+        window = gather[d * plan.lanes:(d + 1) * plan.lanes]
+        assert set(window) <= (set(rows) or {0})
+
+
+def test_replan_moves_work_off_slow_shard():
+    """The rebalance hook: a shard measured 3x slower sheds work."""
+    costs = np.ones(120)
+    plan = plan_shards(costs, 4)
+    even = plan.work[0]
+    plan2 = replan_shards(costs, plan, [3.0, 1.0, 1.0, 1.0])
+    assert plan2.work[0] < 0.5 * even        # slow device sheds most work
+    assert sum(plan2.sizes) == 120
+    # measured seconds matching predictions keep the plan balanced
+    plan3 = replan_shards(costs, plan, [1.0, 1.0, 1.0, 1.0])
+    assert plan3.work_spread < 1e-9
+
+
+def test_rebalancer_ema_and_reset():
+    rb = ShardRebalancer(ema=0.5)
+    costs = np.ones(64)
+    plan = rb.plan("bucket", costs, 4)
+    assert plan.work_spread < 1e-9           # no evidence -> even split
+    sp = rb.observe("bucket", plan, [2.0, 1.0, 1.0, 1.0])
+    assert sp[0] < sp[1]                     # slow shard -> lower speed
+    # EMA: a second identical observation moves the estimate further
+    sp2 = rb.observe("bucket", rb.plan("bucket", costs, 4),
+                     [2.0, 1.0, 1.0, 1.0])
+    assert sp2[0] < sp[0]
+    plan2 = rb.plan("bucket", costs, 4)
+    assert plan2.work[0] < plan.work[0]
+    # unknown keys and shard-count changes fall back to neutral speeds
+    assert (rb.speed("other", 4) == 1.0).all()
+    assert (rb.speed("bucket", 8) == 1.0).all()
+    with pytest.raises(ValueError):
+        ShardRebalancer(ema=0.0)

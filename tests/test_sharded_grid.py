@@ -1,0 +1,288 @@
+"""Device-mesh sharded scenario-grid engine vs the single-device engines.
+
+The acceptance gate of the sharded subsystem (ISSUE 4): sharding the
+flat scenario batch of ``price_grid`` / ``price_grid_rz`` / ``price_flat``
+over a 1-D mesh must be *invisible* in the numbers — ask/bid surfaces,
+``max_pieces`` and the OverflowError behaviour all match the
+single-device call at 1e-9 for device counts {1, 2, 8}.
+
+Two execution modes cover two CI lanes:
+
+  * **simulated mesh** — ``devices=W`` with W beyond the process's
+    device count runs the identical plan/permute/pad layout on the local
+    device (``resolve_grid_mesh``); rows are independent, so this is
+    bit-equal to a real mesh and runs on every push with no XLA flags;
+  * **real mesh** — under ``XLA_FLAGS=--xla_force_host_platform_
+    device_count=8`` (the CI ``shard`` lane) the same tests execute
+    through ``shard_map`` on 8 fake devices; a ``slow``-marked
+    subprocess test does the same from a clean process for the nightly
+    lane.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.distributed import grid_mesh, resolve_grid_mesh
+from repro.core.partition import plan_shards, scenario_costs
+from repro.scenarios import ScenarioGrid, price_grid_notc, price_grid_rz
+
+TOL = 1e-9
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+@pytest.fixture(scope="module")
+def mixed_grid():
+    """The canonical 108-scenario mixed grid of test_scenarios.py."""
+    return ScenarioGrid.cartesian(
+        s0=(95.0, 105.0), sigma=(0.15, 0.25),
+        cost_rate=(0.0, 0.005, 0.01),
+        payoff=("put", "call", "bull_spread"),
+        strike=(95.0, 100.0, 105.0),
+        n_steps=10)
+
+
+@pytest.fixture(scope="module")
+def single_rz(mixed_grid):
+    return price_grid_rz(mixed_grid, capacity=16)
+
+
+# --------------------------------------------------------------------- #
+# parity on the acceptance grid, device counts {1, 2, 8}
+# --------------------------------------------------------------------- #
+@pytest.mark.shard
+@pytest.mark.parametrize("devices", [1, 2, 8])
+def test_sharded_rz_parity_on_mixed_grid(mixed_grid, single_rz, devices):
+    """Sharded == single-device on the 108-scenario grid at 1e-9 (ask,
+    bid AND the max_pieces overflow report), for 1/2/8 shards.  Runs the
+    real shard_map path when the process has enough (fake) devices, the
+    bit-identical simulated layout otherwise."""
+    res = price_grid_rz(mixed_grid, capacity=16, devices=devices)
+    np.testing.assert_allclose(res.ask, single_rz.ask, atol=TOL)
+    np.testing.assert_allclose(res.bid, single_rz.bid, atol=TOL)
+    assert res.max_pieces == single_rz.max_pieces
+    if devices == 1:
+        assert res.shard_info is None
+    else:
+        info = res.shard_info
+        assert info.plan.n_shards == devices
+        assert sum(info.per_shard_rows) == mixed_grid.n_scenarios
+        assert info.simulated == (jax.device_count() < devices)
+        assert max(info.per_shard_pieces) == res.max_pieces
+        # cost-model plan: uneven sizes, near-equal predicted work
+        if devices == 8:
+            assert len(set(info.plan.sizes)) > 1
+            assert info.plan.work_spread < 0.10
+
+
+@pytest.mark.shard
+@pytest.mark.parametrize("devices", [2, 8])
+def test_sharded_notc_parity(devices):
+    grid = ScenarioGrid.cartesian(
+        s0=(90.0, 100.0, 110.0), sigma=(0.2, 0.3),
+        payoff=("put", "call"), strike=100.0, n_steps=12)
+    want = price_grid_notc(grid)
+    got = price_grid_notc(grid, devices=devices)
+    np.testing.assert_allclose(got.ask, want.ask, atol=TOL)
+    assert got.shard_info.plan.n_shards == devices
+    # friction-free rows cost the same -> row counts split as evenly as
+    # 12 rows over `devices` shards allows
+    sizes = got.shard_info.plan.sizes
+    assert max(sizes) - min(sizes) <= 1
+
+
+@pytest.mark.shard
+def test_sharded_price_flat_and_price_grid_api():
+    """The api-layer entry points thread devices= through, padding
+    included, with quotes matching the unsharded call."""
+    from repro.api import price_flat, price_grid
+    kw = dict(s0=(95.0, 100.0, 105.0, 98.0, 101.0),
+              payoff=("put", "call", "put", "bull_spread", "put"),
+              cost_rate=(0.0, 0.01, 0.005, 0.0, 0.01),
+              strike=100.0, sigma=0.2, rate=0.1, maturity=0.25,
+              n_steps=8, capacity=16, pad_to=8)
+    want = price_flat(**kw)
+    got = price_flat(**kw, devices=4)
+    np.testing.assert_allclose(got.ask, want.ask, atol=TOL)
+    np.testing.assert_allclose(got.bid, want.bid, atol=TOL)
+    assert got.max_pieces == want.max_pieces
+    assert got.shard_info is not None
+
+    w2 = price_grid(s0=(95.0, 100.0), cost_rate=(0.0, 0.01), n_steps=8,
+                    capacity=16)
+    g2 = price_grid(s0=(95.0, 100.0), cost_rate=(0.0, 0.01), n_steps=8,
+                    capacity=16, devices=2)
+    np.testing.assert_allclose(g2.ask, w2.ask, atol=TOL)
+
+
+@pytest.mark.shard
+def test_sharded_greeks_parity():
+    """FD Greeks bump the batch 5x; the shard plan must cover the bumped
+    rows and the restored ordering must keep the bump blocks aligned."""
+    grid = ScenarioGrid.cartesian(s0=(95.0, 105.0), cost_rate=(0.0, 0.01),
+                                  payoff=("put",), strike=100.0, n_steps=8)
+    want = price_grid_rz(grid, capacity=16, greeks=True)
+    got = price_grid_rz(grid, capacity=16, greeks=True, devices=4)
+    for f in ("ask", "bid", "delta_ask", "delta_bid", "vega_ask", "vega_bid"):
+        np.testing.assert_allclose(getattr(got, f), getattr(want, f),
+                                   atol=TOL, err_msg=f)
+    assert got.shard_info.plan.n_rows == 5 * grid.n_scenarios
+
+
+@pytest.mark.shard
+def test_sharded_overflow_parity():
+    """OverflowError semantics survive the gather identically: the same
+    capacity that overflows single-device overflows sharded, with the
+    same message shape, and nothing is silently clipped."""
+    grid = ScenarioGrid.cartesian(s0=(95.0, 100.0, 105.0),
+                                  cost_rate=(0.0, 0.01),
+                                  payoff=("put", "call"), strike=100.0,
+                                  n_steps=8)
+    with pytest.raises(OverflowError, match="PWL capacity overflow"):
+        price_grid_rz(grid, capacity=3)
+    for devices in (2, 8):
+        with pytest.raises(OverflowError, match="PWL capacity overflow"):
+            price_grid_rz(grid, capacity=3, devices=devices)
+
+
+@pytest.mark.shard
+def test_shard_plan_validation():
+    grid = ScenarioGrid.cartesian(s0=(95.0, 100.0), n_steps=8)
+    bad = plan_shards(np.ones(5), 2)         # wrong row count
+    with pytest.raises(ValueError, match="covers 5 rows"):
+        price_grid_notc(grid, shard_plan=bad)
+    with pytest.raises(ValueError, match="must be 1-D"):
+        resolve_grid_mesh(mesh=_fake_2d_mesh())
+    with pytest.raises(ValueError, match="devices"):
+        grid_mesh(jax.device_count() + 1)
+
+
+def _fake_2d_mesh():
+    from jax.sharding import Mesh
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("a", "b"))
+
+
+# --------------------------------------------------------------------- #
+# real mesh only (the CI `shard` lane: 8 fake host devices)
+# --------------------------------------------------------------------- #
+@pytest.mark.shard
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 (fake) devices; run under "
+                           "XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=8")
+def test_real_mesh_equals_simulated_layout(mixed_grid, single_rz):
+    """On a real 8-device mesh the shard_map path must agree with both
+    the single-device engine and the simulated layout bit-for-bit."""
+    mesh = grid_mesh(8)
+    res = price_grid_rz(mixed_grid, capacity=16, mesh=mesh)
+    assert not res.shard_info.simulated
+    np.testing.assert_allclose(res.ask, single_rz.ask, atol=TOL)
+    np.testing.assert_allclose(res.bid, single_rz.bid, atol=TOL)
+    assert res.max_pieces == single_rz.max_pieces
+    # identical plan executed without a mesh (simulated) is bit-equal
+    sim = price_grid_rz(mixed_grid, capacity=16,
+                        shard_plan=res.shard_info.plan)
+    assert (np.asarray(sim.ask) == np.asarray(res.ask)).all()
+    assert (np.asarray(sim.bid) == np.asarray(res.bid)).all()
+
+
+# --------------------------------------------------------------------- #
+# serving layer: mesh routing + measured-seconds rebalance loop
+# --------------------------------------------------------------------- #
+@pytest.mark.shard
+def test_service_sharded_quotes_match_unsharded():
+    from repro.serve.engine import PriceRequest
+    from repro.serve.scheduler import PricingService
+
+    def mk():
+        return PricingService(max_batch=8, deadline_ms=0.0, capacity=16,
+                              default_n_steps=8, result_cache_size=0)
+
+    reqs = [PriceRequest(s0=90.0 + 3 * i, sigma=0.2, rate=0.1, maturity=0.25,
+                         cost_rate=0.01 if i % 3 == 0 else 0.0,
+                         payoff=("put", "call")[i % 2], strike=100.0,
+                         n_steps=8)
+            for i in range(10)]
+    plain, sharded = mk(), PricingService(
+        max_batch=8, deadline_ms=0.0, capacity=16, default_n_steps=8,
+        result_cache_size=0, devices=4)
+    ids_p = [plain.submit(r) for r in reqs]
+    ids_s = [sharded.submit(r) for r in reqs]
+    plain.flush(), sharded.flush()
+    for rp, rs in zip(ids_p, ids_s):
+        qp, qs = plain.result(rp), sharded.result(rs)
+        assert qs.ask == pytest.approx(qp.ask, abs=TOL)
+        assert qs.bid == pytest.approx(qp.bid, abs=TOL)
+        assert qs.max_pieces == qp.max_pieces
+    m = sharded.metrics()
+    assert m["shard_batches"] >= 1 and m["rebalances"] >= 1
+    assert plain.metrics()["shard_batches"] == 0
+    # the rebalance loop produced per-device speed estimates ...
+    bucket = (8, True)
+    assert sharded.shard_speed(bucket) is not None
+    # ... and the compile cache is keyed on the mesh shape (shard tuple)
+    assert any(k[-1] is not None for k in sharded._compiled)
+    assert all(k[-1] is None for k in plain._compiled)
+
+
+@pytest.mark.shard
+def test_service_rebalance_feedback_steers_next_plan():
+    """Feeding skewed per-shard seconds moves work off the slow shard on
+    the next flush of the same bucket (the §4.2 reassignment loop)."""
+    from repro.serve.scheduler import PricingService
+    svc = PricingService(max_batch=8, deadline_ms=0.0, capacity=16,
+                         default_n_steps=8, result_cache_size=0, devices=2,
+                         rebalance_ema=1.0)
+    bucket = (8, False)
+    costs = scenario_costs(8, np.zeros(8), capacity=16)
+    plan = svc._shard_plan(bucket, np.zeros(8), 8, 8)
+    assert plan.work_spread < 1e-9
+    svc.observe_shard_seconds(bucket, plan, [3.0, 1.0])
+    plan2 = svc._shard_plan(bucket, np.zeros(8), 8, 8)
+    assert plan2.work[0] < plan.work[0]      # slow shard shed rows
+    assert svc.metrics()["rebalances"] == 1
+    assert costs.shape == (8,)
+
+
+# --------------------------------------------------------------------- #
+# nightly: real 8-device mesh from a clean subprocess (no env leakage)
+# --------------------------------------------------------------------- #
+@pytest.mark.slow
+@pytest.mark.shard
+def test_subprocess_real_mesh_acceptance_grid():
+    """The acceptance criterion end-to-end on real fake-device meshes:
+    108-scenario mixed grid, device counts {1, 2, 8}, 1e-9."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    code = textwrap.dedent("""
+        import numpy as np, jax
+        import repro.core
+        assert jax.device_count() == 8
+        from repro.scenarios import ScenarioGrid, price_grid_rz
+        grid = ScenarioGrid.cartesian(
+            s0=(95.0, 105.0), sigma=(0.15, 0.25),
+            cost_rate=(0.0, 0.005, 0.01),
+            payoff=("put", "call", "bull_spread"),
+            strike=(95.0, 100.0, 105.0), n_steps=10)
+        want = price_grid_rz(grid, capacity=16)
+        for w in (1, 2, 8):
+            got = price_grid_rz(grid, capacity=16, devices=w)
+            np.testing.assert_allclose(got.ask, want.ask, atol=1e-9)
+            np.testing.assert_allclose(got.bid, want.bid, atol=1e-9)
+            assert got.max_pieces == want.max_pieces
+            if w > 1:
+                assert not got.shard_info.simulated
+        print("SHARD_MESH_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=900, env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "SHARD_MESH_OK" in r.stdout

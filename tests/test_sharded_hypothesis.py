@@ -1,0 +1,55 @@
+"""Property-based parity of the sharded scenario-grid engine (hypothesis).
+
+Random mesh sizes {1, 2, 4, 8} x random mixed TC/no-TC batches x the
+cost-model shard planner (whose plans are uneven whenever the row costs
+are): the sharded engine must be numerically invisible — ask, bid and
+``max_pieces`` equal the single-device engine at 1e-9, and a batch that
+overflows the PWL capacity raises OverflowError on BOTH paths, never
+just one.  Complements the fixed-grid tests in test_sharded_grid.py.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this environment")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.scenarios import ScenarioGrid, price_grid_rz  # noqa: E402
+
+TOL = 1e-9
+_settings = settings(max_examples=10, deadline=None)
+
+# one tree depth and a handful of batch sizes: every distinct shape is a
+# fresh XLA compile, so the strategy reuses a small, bounded shape set
+_N_STEPS = 6
+
+grids = st.integers(4, 8).flatmap(lambda n: st.fixed_dictionaries({
+    "s0": st.lists(st.floats(80.0, 120.0), min_size=n, max_size=n),
+    "sigma": st.lists(st.floats(0.1, 0.4), min_size=n, max_size=n),
+    "cost_rate": st.lists(st.sampled_from([0.0, 0.005, 0.01]),
+                          min_size=n, max_size=n),
+    "payoff": st.lists(st.sampled_from(["put", "call", "bull_spread"]),
+                       min_size=n, max_size=n),
+}))
+
+
+@pytest.mark.shard
+# capacity 2 overflows whenever the batch has a TC row (pieces >= 3 at
+# N=6), so the OverflowError-on-both-paths branch is really drawn
+@given(grids, st.sampled_from([1, 2, 4, 8]), st.sampled_from([16, 2]))
+@_settings
+def test_sharded_matches_single_device_property(g, devices, capacity):
+    grid = ScenarioGrid.explicit(
+        s0=np.asarray(g["s0"]), sigma=np.asarray(g["sigma"]), rate=0.1,
+        maturity=0.25, cost_rate=np.asarray(g["cost_rate"]),
+        payoff=tuple(g["payoff"]), strike=100.0, n_steps=_N_STEPS)
+    try:
+        want = price_grid_rz(grid, capacity=capacity)
+    except OverflowError:
+        with pytest.raises(OverflowError):
+            price_grid_rz(grid, capacity=capacity, devices=devices)
+        return
+    got = price_grid_rz(grid, capacity=capacity, devices=devices)
+    np.testing.assert_allclose(got.ask, want.ask, atol=TOL)
+    np.testing.assert_allclose(got.bid, want.bid, atol=TOL)
+    assert got.max_pieces == want.max_pieces

@@ -1,0 +1,168 @@
+"""Benchmark regression gate for the CI bench lanes (no deps, no jax).
+
+    python tools/check_bench.py --fresh BENCH_rz.json \
+        --baseline benchmarks/baselines/BENCH_rz.json [--tol 0.25]
+
+Compares a freshly produced benchmark JSON (``benchmarks/bench_rz_pallas``
+or ``benchmarks/bench_serve`` artifact) against the committed baseline
+and **fails (exit 1) on a throughput regression beyond the tolerance
+band** — by default a fresh ``contracts/sec`` more than 25% below the
+baseline.  Improvements never fail; they print a hint to refresh the
+baseline (``--write-baseline`` copies fresh over baseline).
+
+Two metric classes per bench:
+
+  * **throughput** (contracts/sec) — machine-dependent, gated only when
+    the identifying config (tree depth, request count, ...) matches the
+    baseline's; CI runners are assumed comparable run-to-run, and the
+    tolerance band absorbs their jitter.
+  * **ratios** (pallas-vs-jnp, scheduler-vs-per-request speedup) —
+    dimensionless, gated even when the config differs (the nightly lane
+    runs deeper trees than the PR lane against the same baseline file).
+
+Unknown bench kinds fall back to gating every ``*contracts_per_sec``
+path found in both files.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+from pathlib import Path
+
+# per-bench metric registry: dotted paths into the report JSON
+_BENCHES = {
+    "rz_grid_backends": {
+        "config": ("n_steps", "contracts", "capacity", "repeats",
+                   "levels", "block", "interpret", "device"),
+        "throughput": ("jnp.contracts_per_sec", "pallas.contracts_per_sec"),
+        "ratios": ("pallas_over_jnp",),
+    },
+    "serve_scheduler_vs_per_request": {
+        "config": ("requests", "max_batch", "n_steps", "tc_fraction",
+                   "capacity", "seed", "device"),
+        "throughput": ("scheduler.contracts_per_sec",
+                       "baseline.contracts_per_sec"),
+        "ratios": ("speedup", "speedup_nocache"),
+    },
+}
+
+
+def _get(report: dict, dotted: str):
+    cur = report
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def _scan_throughput(report: dict, prefix: str = "") -> list[str]:
+    """Every dotted path ending in contracts_per_sec (fallback gating)."""
+    found = []
+    for k, v in report.items():
+        path = f"{prefix}{k}"
+        if isinstance(v, dict):
+            found.extend(_scan_throughput(v, path + "."))
+        elif k == "contracts_per_sec" and isinstance(v, (int, float)):
+            found.append(path)
+    return found
+
+
+def check(fresh: dict, baseline: dict, tol: float) -> list[str]:
+    """Return a list of human-readable regression failures (empty = pass).
+
+    Prints a PASS/GATE line per metric as it goes.
+    """
+    kind = fresh.get("bench")
+    spec = _BENCHES.get(kind)
+    failures: list[str] = []
+    if baseline.get("bench") != kind:
+        return [f"baseline is for bench {baseline.get('bench')!r}, "
+                f"fresh is {kind!r} — wrong baseline file"]
+    if spec is None:
+        metrics = sorted(set(_scan_throughput(fresh))
+                         & set(_scan_throughput(baseline)))
+        ratios, config_ok = (), True
+        print(f"unknown bench {kind!r}: generic gate over {metrics}")
+    else:
+        config_ok = all(_get(fresh, k) == _get(baseline, k)
+                        for k in spec["config"])
+        metrics, ratios = spec["throughput"], spec["ratios"]
+        if not config_ok:
+            diffs = {k: (_get(fresh, k), _get(baseline, k))
+                     for k in spec["config"]
+                     if _get(fresh, k) != _get(baseline, k)}
+            print(f"config differs from baseline {diffs}: "
+                  "gating dimensionless ratios only")
+
+    def gate(path: str, klass: str) -> None:
+        f, b = _get(fresh, path), _get(baseline, path)
+        if f is None or b is None:
+            print(f"  SKIP {path}: missing "
+                  f"({'fresh' if f is None else 'baseline'})")
+            return
+        floor = b * (1.0 - tol)
+        status = "PASS" if f >= floor else "FAIL"
+        print(f"  {status} {path} ({klass}): fresh {f:.4g} vs baseline "
+              f"{b:.4g} (floor {floor:.4g}, tol {tol:.0%})")
+        if f < floor:
+            failures.append(
+                f"{path}: {f:.4g} is {(1 - f / b):.1%} below baseline "
+                f"{b:.4g} (tolerance {tol:.0%})")
+        elif f > b * (1.0 + tol):
+            print(f"       {path} improved {(f / b - 1):.1%} — consider "
+                  "refreshing the baseline (--write-baseline)")
+
+    if config_ok:
+        for m in metrics:
+            gate(m, "throughput")
+    for m in ratios:
+        gate(m, "ratio")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh", required=True,
+                    help="freshly produced BENCH_*.json")
+    ap.add_argument("--baseline", required=True,
+                    help="committed benchmarks/baselines/BENCH_*.json")
+    ap.add_argument("--tol", type=float, default=0.25,
+                    help="allowed fractional regression (default 0.25 = "
+                         "fail on >25%% contracts/sec drop)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="copy fresh over baseline instead of gating "
+                         "(after a verified perf improvement)")
+    args = ap.parse_args()
+
+    fresh_p, base_p = Path(args.fresh), Path(args.baseline)
+    if not fresh_p.exists():
+        print(f"fresh benchmark {fresh_p} not found — did the bench run?")
+        return 1
+    if args.write_baseline:
+        base_p.parent.mkdir(parents=True, exist_ok=True)
+        shutil.copyfile(fresh_p, base_p)
+        print(f"baseline refreshed: {fresh_p} -> {base_p}")
+        return 0
+    if not base_p.exists():
+        print(f"no committed baseline {base_p}; seed it with "
+              f"--write-baseline")
+        return 1
+    fresh = json.loads(fresh_p.read_text())
+    baseline = json.loads(base_p.read_text())
+    print(f"check_bench: {fresh_p} vs {base_p} "
+          f"(bench={fresh.get('bench')!r})")
+    failures = check(fresh, baseline, args.tol)
+    if failures:
+        print("\nBENCH REGRESSION:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("bench within tolerance of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
