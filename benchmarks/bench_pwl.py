@@ -1,0 +1,137 @@
+"""PWL envelope-algebra micro-benchmark: ops/sec of the sort-free hot path.
+
+The Roux–Zastawniak engines spend essentially all their time in three
+``core/pwl.py`` operations, batched over the lattice node axis:
+``envelope2`` (pointwise max/min), ``cone_infconv`` (transaction-cost
+slope restriction) and their composition in one full level step
+(``core/rz.py::rz_level_step_lanes``).  This bench times exactly those
+three, jit-warm, on a fixed synthetic lane batch — the unit the
+merge-path rewrite (no ``sort``/``argsort`` primitives; binary-search
+rank computation + gathers) is meant to speed up — and writes a
+machine-readable ``BENCH_pwl.json`` gated by ``tools/check_bench.py``:
+
+    PYTHONPATH=src python -m benchmarks.bench_pwl \
+        [--lanes 514] [--capacity 24] [--repeats 30] [--out BENCH_pwl.json]
+
+"ops/sec" is lane-operations per second: one op = one PWL record through
+one envelope (or cone, or full level step).  The default 514 lanes is the
+node-axis width of the N=512 acceptance tree; reference numbers live in
+``docs/ARCHITECTURE.md`` §3.2.  ``BENCH_*.json`` files are git-ignored
+(CI uploads the artifact; the committed baseline lives under
+``benchmarks/baselines/``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+DEFAULT_LANES = 514
+DEFAULT_CAPACITY = 24
+DEFAULT_REPEATS = 30
+
+
+def _lane_batch(lanes: int, capacity: int, seed: int = 0):
+    """A reproducible batch of small random PWL records (SoA layout)."""
+    import jax.numpy as jnp
+    from repro.core import pwl as P
+
+    rng = np.random.default_rng(seed)
+    m = rng.integers(1, 7, size=lanes)
+    xs = np.full((lanes, capacity), P.BIG)
+    ys = np.zeros((lanes, capacity))
+    for i in range(lanes):
+        xs[i, : m[i]] = np.sort(rng.normal(0.0, 2.0, m[i])) \
+            + np.arange(m[i]) * 0.05
+        ys[i, : m[i]] = rng.normal(0.0, 50.0, m[i])
+    # end slopes inside the cost cone so cone_infconv is bounded below
+    sl = rng.uniform(-150.0, -130.0, lanes)
+    sr = rng.uniform(-20.0, -10.0, lanes)
+    return P.PWL(jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(sl),
+                 jnp.asarray(sr), jnp.asarray(m, jnp.int32))
+
+
+def _time(fn, *args, repeats: int) -> float:
+    import jax
+    out = fn(*args)                                   # compile
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats
+
+
+def bench(lanes: int = DEFAULT_LANES, capacity: int = DEFAULT_CAPACITY,
+          repeats: int = DEFAULT_REPEATS, out: str = "BENCH_pwl.json") -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.core import pwl as P
+    from repro.core.payoff import american_put
+    from repro.core.rz import rz_level_step_lanes
+
+    f = _lane_batch(lanes, capacity, seed=0)
+    g = _lane_batch(lanes, capacity, seed=1)
+    print(f"{lanes} lanes, capacity={capacity}, repeats={repeats}")
+
+    env = jax.jit(lambda a, b: P.envelope2(a, b, capacity, take_max=True))
+    t_env = _time(env, f, g, repeats=repeats)
+    print(f"envelope2   : {t_env * 1e3:8.2f} ms  "
+          f"({lanes / t_env:12.0f} ops/s)")
+
+    cone = jax.jit(lambda a: P.cone_infconv(a, 120.0, 80.0, capacity))
+    t_cone = _time(cone, f, repeats=repeats)
+    print(f"cone_infconv: {t_cone * 1e3:8.2f} ms  "
+          f"({lanes / t_cone:12.0f} ops/s)")
+
+    params = dict(s0=jnp.float64(100.0), k=jnp.float64(0.005),
+                  sig_sqrt_dt=jnp.float64(0.01), r=jnp.float64(1.0001))
+    payoff = american_put(100.0)
+    step = jax.jit(lambda z: rz_level_step_lanes(
+        z, jnp.float64(lanes - 2.0), params, capacity=capacity, seller=True,
+        payoff=payoff, dtype=jnp.float64))
+    t_step = _time(step, f, repeats=max(1, repeats // 3))
+    print(f"level step  : {t_step * 1e3:8.2f} ms  "
+          f"({lanes / t_step:12.0f} ops/s)")
+
+    report = {
+        "bench": "pwl_envelope_ops",
+        "lanes": lanes, "capacity": capacity, "repeats": repeats,
+        "device": jax.devices()[0].platform,
+        "envelope": {"seconds": t_env, "ops_per_sec": lanes / t_env},
+        "cone": {"seconds": t_cone, "ops_per_sec": lanes / t_cone},
+        "level_step": {"seconds": t_step, "ops_per_sec": lanes / t_step},
+    }
+    Path(out).write_text(json.dumps(report, indent=2) + "\n")
+    print(f"wrote {out}")
+    return report
+
+
+def run() -> list[str]:
+    """benchmarks.run entry — default sizing, full JSON artifact."""
+    rep = bench()
+    us = rep["level_step"]["seconds"] * 1e6 / rep["lanes"]
+    return [
+        f"pwl,{us:.2f},"
+        f"env_ops={rep['envelope']['ops_per_sec']:.0f};"
+        f"cone_ops={rep['cone']['ops_per_sec']:.0f};"
+        f"step_ops={rep['level_step']['ops_per_sec']:.0f};"
+        f"lanes={rep['lanes']}",
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--lanes", type=int, default=DEFAULT_LANES)
+    ap.add_argument("--capacity", type=int, default=DEFAULT_CAPACITY)
+    ap.add_argument("--repeats", type=int, default=DEFAULT_REPEATS)
+    ap.add_argument("--out", default="BENCH_pwl.json")
+    a = ap.parse_args()
+    bench(lanes=a.lanes, capacity=a.capacity, repeats=a.repeats, out=a.out)
+
+
+if __name__ == "__main__":
+    main()

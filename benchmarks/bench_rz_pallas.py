@@ -9,13 +9,13 @@ the paper's headline workload is tracked, not anecdotal:
         [--n-steps 512] [--contracts 2] [--capacity 24] [--repeats 1] \
         [--lambda 0.005] [--levels L] [--block B] [--out BENCH_rz.json]
 
-Why the Pallas backend wins on CPU even in interpret mode: the jnp path
-is one ``fori_loop`` over N+1 levels at the *fixed leaf-level width*, so
-it computes ~N^2 lane-levels; the Pallas engine walks the
-``core/partition.py::kernel_round_plan`` schedule, whose per-round
-**re-balancing** (the paper's §4.2 thread shedding) shrinks the lane
-extent with the live tree — ~N^2/2 lane-levels.  On TPU the same rounds
-are the VMEM-resident block scheme.  ``BENCH_*.json`` files are
+Both backends walk the ``core/partition.py::kernel_round_plan`` schedule
+(the paper's §4.2 thread shedding, ~N^2/2 lane-levels) with the seller
+and buyer sides fused into one ``(2, P)`` state, on top of the sort-free
+merge-path PWL algebra (docs/ARCHITECTURE.md §3.2) — so on CPU the two
+are ~at parity and ``pallas_over_jnp`` is a drift canary around 1, not a
+banked win.  The Pallas backend's remaining value is the VMEM-resident
+block scheme a TPU lowering keeps.  ``BENCH_*.json`` files are
 deliberately git-ignored (machine-local measurements; CI uploads them as
 artifacts, reference numbers live in docs/ARCHITECTURE.md).
 """

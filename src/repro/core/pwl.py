@@ -22,6 +22,17 @@ Operations (all shape-static, jit/vmap-safe):
                         v(y) = min_{y'} [ f(y') + max(a(y'-y), b(y'-y)) ]
   * ``expense``       — the 2-piece expense function of §3 eq. (1)/(6)
 
+The algebra is **sort-free**: every knot vector that reaches an envelope
+or cone is already sorted (a maintained invariant of this module — see
+``merge_sorted``), so instead of ``jnp.sort(jnp.concatenate(...))`` the
+hot path uses merge-path rank computation (binary searches + gathers)
+and compaction is a prefix-sum (cumsum-of-keep) map, applied as the
+gather of its inverse.  No ``sort``/``argsort`` primitive appears in a
+traced level step (jaxpr-asserted by ``tests/test_pwl_merge.py``), which
+both speeds up the CPU hot path (measured numbers in
+docs/ARCHITECTURE.md §3.2) and removes the sorts that kept the Pallas TC
+kernel from ever lowering past interpret mode.
+
 Capacity overflow is *detected*, never silent: every envelope returns the
 raw knot count before truncation; engines carry the running max and the
 caller asserts it fits K.  The exact oracle for everything here is
@@ -40,7 +51,7 @@ import jax.numpy as jnp
 
 __all__ = [
     "PWL", "BIG", "make_affine", "expense", "eval_at", "scale",
-    "envelope2", "cone_infconv", "from_ref", "to_ref",
+    "envelope2", "cone_infconv", "merge_sorted", "from_ref", "to_ref",
 ]
 
 BIG = 1e30
@@ -92,16 +103,106 @@ def expense(xi, zeta, s_ask, s_bid, capacity: int, dtype=jnp.float64) -> PWL:
 
 
 # --------------------------------------------------------------------- #
+# sort-free merge of already-sorted knot vectors (merge-path ranks)
+# --------------------------------------------------------------------- #
+def _searchsorted(a: jax.Array, v: jax.Array, side: str) -> jax.Array:
+    """Ranks of ``v`` in the ascending 1-D vector ``a`` — binary search.
+
+    ``side="right"`` is exactly the ``sum(a <= v)`` counting the module
+    used to compute with O(len(a)) comparison rows per query;
+    ``side="left"`` is ``sum(a < v)``.  The unrolled binary search is
+    log2(len(a)) gathers per query — ~4x cheaper at K=24..97 on CPU (the
+    counting matrices were the memory-traffic hot spot, not the sorts
+    alone) and free of ``sort``/``scan`` primitives.
+    """
+    return jnp.searchsorted(a, v, side=side, method="scan_unrolled")
+
+
+def _merge_take(a: jax.Array, b: jax.Array, *payloads):
+    """Merge ascending ``a`` and ``b``; route per-element payloads along.
+
+    Merge-path rank computation instead of ``jnp.sort(concatenate(...))``:
+    element ``a[i]`` lands at output rank ``ra[i] = i + |{j : b[j] <
+    a[i]}|`` (a stable merge — ties keep every copy from ``a`` first), so
+    the output position ``k`` is fed by ``a`` exactly when ``cnt_a(k) =
+    |{i : ra[i] <= k}|`` steps up.  Both rank vectors come from binary
+    searches (no ``sort`` primitive) and outputs are materialised by
+    gathers — gathers, not the textbook rank *scatter*, because XLA:CPU
+    serialises scatters while these batched gathers vectorise (and
+    gathers are the smaller ask of a future Mosaic lowering).  BIG
+    padding tails compare like any other value and merge to the back, so
+    fixed-capacity PWL knot vectors merge without masking.
+
+    Each payload is a ``(pa, pb)`` pair (values riding with ``a``'s /
+    ``b``'s elements); returns ``(merged, *merged_payloads)``.  Both key
+    vectors MUST already be ascending — the maintained invariant of every
+    knot vector in this module; out-of-order inputs produce garbage
+    (guarded by the oracle-differential tests in
+    ``tests/test_pwl_merge.py``, not at runtime).
+    """
+    na, nb = a.shape[-1], b.shape[-1]
+    ra = jnp.arange(na) + _searchsorted(b, a, "left")
+    k = jnp.arange(na + nb)
+    cnt_a = _searchsorted(ra, k, "right")    # ra is ascending by construction
+    ia = jnp.clip(cnt_a - 1, 0, na - 1)
+    ib = jnp.clip(k - cnt_a, 0, nb - 1)
+    prev = jnp.concatenate([jnp.zeros((1,), cnt_a.dtype), cnt_a[:-1]])
+    from_a = cnt_a > prev
+    pick = lambda pa, pb: jnp.where(from_a, pa[ia], pb[ib])
+    return (pick(a, b), *(pick(pa, pb) for pa, pb in payloads))
+
+
+def _merge_take_bysort(a: jax.Array, b: jax.Array, *payloads):
+    """Pre-merge-path implementation (stable argsort of the concat).
+
+    Retained ONLY as the differential-testing reference: monkeypatching
+    ``_merge_take``/``_compact`` to the ``*_bysort`` pair reconstructs
+    the sort-based engine bit-for-bit (``tests/test_pwl_merge.py``) —
+    stable argsort keeps ``a``'s copies first on ties, the same rule as
+    the merge-path ranks.  Not used by the hot path.
+    """
+    order = jnp.argsort(jnp.concatenate([a, b]))
+    out = (jnp.concatenate([a, b])[order],)
+    for pa, pb in payloads:
+        out += (jnp.concatenate([pa, pb])[order],)
+    return out
+
+
+def merge_sorted(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Sort-free merge of two ascending knot vectors (see _merge_take)."""
+    return _merge_take(a, b)[0]
+
+
+# --------------------------------------------------------------------- #
 # evaluation  (single function: xs (K,); use jax.vmap for batches)
 # --------------------------------------------------------------------- #
-def _eval1(f: PWL, c: jax.Array) -> jax.Array:
-    """Evaluate one function at query points c: (C,) -> (C,)."""
+def _interval_slope(f: PWL, c: jax.Array):
+    """Shared interior-interval machinery of ``_eval1``/``_slope1``.
+
+    Returns (cnt, il, slope_in).  Coincident consecutive knots make the
+    interval width w == 0; the former ``dy / max(w, 1e-300)`` blew up to
+    ±huge/inf there and could turn into NaN (0 * inf) in downstream
+    products *before* the selecting ``jnp.where`` masked the lane — which
+    is unsafe under NaN propagation (and poisons jvp/vjp through the
+    untaken branch).  Guard the width on both sides of the divide instead:
+    degenerate intervals get slope 0, and they are never the selected
+    branch (selection implies xs[il] <= c < xs[ir], hence w > 0).
+    """
     K = f.xs.shape[-1]
-    cnt = jnp.sum(f.xs[None, :] <= c[:, None], axis=-1)          # (C,)
+    cnt = _searchsorted(f.xs, c, "right")                        # (C,)
     il = jnp.clip(cnt - 1, 0, K - 1)
     ir = jnp.clip(cnt, 0, K - 1)
     w = f.xs[ir] - f.xs[il]
-    slope_in = (f.ys[ir] - f.ys[il]) / jnp.maximum(w, _TINY)
+    ok_w = w > _TINY
+    slope_in = jnp.where(ok_w, f.ys[ir] - f.ys[il], 0.0) \
+        / jnp.where(ok_w, w, 1.0)
+    return cnt, il, slope_in
+
+
+def _eval1(f: PWL, c: jax.Array) -> jax.Array:
+    """Evaluate one function at query points c: (C,) -> (C,)."""
+    K = f.xs.shape[-1]
+    cnt, il, slope_in = _interval_slope(f, c)
     v_in = f.ys[il] + slope_in * (c - f.xs[il])
     ilast = jnp.clip(f.m - 1, 0, K - 1)
     v_l = f.ys[0] + f.sl * (c - f.xs[0])
@@ -111,12 +212,7 @@ def _eval1(f: PWL, c: jax.Array) -> jax.Array:
 
 def _slope1(f: PWL, c: jax.Array) -> jax.Array:
     """Slope at (non-knot) query points c: (C,) -> (C,)."""
-    K = f.xs.shape[-1]
-    cnt = jnp.sum(f.xs[None, :] <= c[:, None], axis=-1)
-    il = jnp.clip(cnt - 1, 0, K - 1)
-    ir = jnp.clip(cnt, 0, K - 1)
-    w = f.xs[ir] - f.xs[il]
-    slope_in = (f.ys[ir] - f.ys[il]) / jnp.maximum(w, _TINY)
+    cnt, _, slope_in = _interval_slope(f, c)
     return jnp.where(cnt == 0, f.sl, jnp.where(cnt >= f.m, f.sr, slope_in))
 
 
@@ -146,7 +242,30 @@ def scale(f: PWL, alpha) -> PWL:
 # compression: dedupe + drop collinear knots + compact to capacity
 # --------------------------------------------------------------------- #
 def _compact(xs, ys, keep):
-    """Stable-compact kept knots to the front; returns padded xs, ys, m."""
+    """Stable-compact kept knots to the front; returns padded xs, ys, m.
+
+    Sort-free: kept knots are a subsequence of an already-ascending ``xs``
+    (the module invariant), so their stable order is their input order —
+    the prefix sum of the keep mask IS the compaction map, replacing the
+    former stable-``argsort`` compaction bit-for-bit (kept knots to the
+    front, exact-BIG / 0.0 padding behind).  The map is applied as a
+    gather of its inverse (source of output slot ``t`` = rank of ``t+1``
+    in the cumsum) rather than a position scatter: XLA:CPU serialises
+    scatters, while the batched gather vectorises.
+    """
+    n = xs.shape[0]
+    m2 = jnp.sum(keep).astype(jnp.int32)
+    ps = jnp.cumsum(keep)                            # kept-so-far, 1-based
+    t = jnp.arange(n)
+    src = jnp.clip(_searchsorted(ps, t + 1, "left"), 0, n - 1)
+    live = t < m2
+    xs2 = jnp.where(live, xs[src], BIG)
+    ys2 = jnp.where(live, ys[src], 0.0)
+    return xs2, ys2, m2
+
+
+def _compact_bysort(xs, ys, keep):
+    """Pre-merge-path stable-argsort compaction (differential tests only)."""
     key = jnp.where(keep, xs, BIG)
     order = jnp.argsort(key)          # stable; BIG (dropped) sorts to the end
     xs2 = key[order]
@@ -158,30 +277,45 @@ def _compact(xs, ys, keep):
 
 
 def _compress1(xs, ys, sl, sr, valid, out_cap: int):
-    """xs sorted with invalid -> BIG; returns (PWL of capacity out_cap, m_raw)."""
+    """xs sorted with invalid -> BIG; returns (PWL of capacity out_cap, m_raw).
+
+    Both passes (duplicate merge, kink-only retention) are decided on the
+    RAW candidate array — the kink test's "previous/next surviving knot"
+    neighbours come from prefix/suffix index scans (cummax/cummin), not
+    from materialising the intermediate compaction — so only ONE compact
+    runs per compress, at the very end.  Values match the historical
+    compact-twice pipeline exactly: neighbours are the same elements.
+    """
     n = xs.shape[0]
+    idx = jnp.arange(n)
     # pass 1: merge (near-)duplicate knots, keep the first of each run
     prev_x = jnp.concatenate([jnp.full((1,), -BIG, xs.dtype), xs[:-1]])
     prev_valid = jnp.concatenate([jnp.zeros((1,), bool), valid[:-1]])
     dup = valid & prev_valid & (xs - prev_x <= _REL * (1.0 + jnp.abs(prev_x)))
     keep1 = valid & ~dup
-    xs1, ys1, m1 = _compact(xs, ys, keep1)
-    # pass 2: drop knots where the slope does not genuinely change
-    nxt_x = jnp.concatenate([xs1[1:], jnp.full((1,), BIG, xs.dtype)])
-    nxt_y = jnp.concatenate([ys1[1:], jnp.zeros((1,), ys.dtype)])
-    prv_x = jnp.concatenate([jnp.full((1,), BIG, xs.dtype), xs1[:-1]])
-    prv_y = jnp.concatenate([jnp.zeros((1,), ys.dtype), ys1[:-1]])
-    idx = jnp.arange(n)
-    s_right = jnp.where(idx < m1 - 1,
-                        (nxt_y - ys1) / jnp.maximum(nxt_x - xs1, _TINY), sr)
-    s_left = jnp.where(idx > 0,
-                       (ys1 - prv_y) / jnp.maximum(xs1 - prv_x, _TINY), sl)
+    m1 = jnp.sum(keep1).astype(jnp.int32)
+    rank = jnp.cumsum(keep1) - 1                 # rank among pass-1 survivors
+    # pass 2: drop knots where the slope does not genuinely change.
+    # neighbour indices among survivors: next = suffix-min of kept indices
+    # (exclusive), prev = prefix-max (exclusive)
+    ni = jnp.concatenate([
+        jax.lax.cummin(jnp.where(keep1, idx, n), reverse=True)[1:],
+        jnp.full((1,), n, idx.dtype)])
+    pi = jnp.concatenate([
+        jnp.full((1,), -1, idx.dtype),
+        jax.lax.cummax(jnp.where(keep1, idx, -1))[:-1]])
+    nig = jnp.clip(ni, 0, n - 1)
+    pig = jnp.clip(pi, 0, n - 1)
+    s_right = jnp.where(keep1 & (rank < m1 - 1),
+                        (ys[nig] - ys) / jnp.maximum(xs[nig] - xs, _TINY), sr)
+    s_left = jnp.where(keep1 & (rank > 0),
+                       (ys - ys[pig]) / jnp.maximum(xs - xs[pig], _TINY), sl)
     tol = _REL * (1.0 + jnp.maximum(jnp.abs(s_left), jnp.abs(s_right)))
     kink = jnp.abs(s_right - s_left) > tol
-    keep2 = (idx < m1) & kink
-    # always retain at least one (anchor) knot
-    keep2 = jnp.where(jnp.any(keep2), keep2, idx == 0)
-    xs2, ys2, m2 = _compact(xs1, ys1, keep2)
+    keep2 = keep1 & kink
+    # always retain at least one (anchor) knot: the first survivor
+    keep2 = jnp.where(jnp.any(keep2), keep2, keep1 & (rank == 0))
+    xs2, ys2, m2 = _compact(xs, ys, keep2)
     out = PWL(xs2[:out_cap], ys2[:out_cap], sl, sr,
               jnp.minimum(m2, out_cap))
     return out, m2
@@ -190,60 +324,151 @@ def _compress1(xs, ys, sl, sr, valid, out_cap: int):
 # --------------------------------------------------------------------- #
 # pointwise max / min of two functions (exact, incl. crossing knots)
 # --------------------------------------------------------------------- #
-def _envelope1(f: PWL, g: PWL, out_cap: int, take_max: bool):
-    dtype = f.xs.dtype
-    merged = jnp.sort(jnp.concatenate([f.xs, g.xs]))            # (M,)
+def _envelope1(f: PWL, g: PWL, out_cap: int, take_max):
+    """Pointwise max/min — one payload merge, no per-candidate re-evals.
+
+    Every knot of ``f`` is in the merged knot vector, so ``f`` is linear
+    between consecutive merged knots; merging *with the functions' values
+    as payload* therefore hands us everything per interval: the exact
+    slopes (finite differences of the merged values), the crossing
+    positions (anchored at the interval's left knot) and the envelope
+    values at every candidate — without ever evaluating f or g at the
+    ~4K candidate points like the pre-merge-path engine did.  The only
+    evaluations left are each function at the *other's* knots (the
+    payload seeds) and the two end-slope probes.
+    """
+    vfg = _eval1(f, g.xs)                  # f at g's knots (payload seed)
+    vgf = _eval1(g, f.xs)                  # g at f's knots (payload seed)
+    merged, vf, vg = _merge_take(f.xs, g.xs, (f.ys, vfg), (vgf, g.ys))
+    return _envelope_core(f, g, merged, vf, vg, f.m + g.m, out_cap,
+                          take_max)
+
+
+def _interleave(a: jax.Array, b: jax.Array) -> jax.Array:
+    """[a0, b0, a1, b1, ..., a_{n-1}] for a: (n,), b: (n-1,) — pure reshape.
+
+    (b is padded with one dummy slot that the final slice drops.)
+    """
+    n = a.shape[0]
+    pad = jnp.concatenate([b, jnp.zeros((1,), b.dtype)])
+    return jnp.stack([a, pad], axis=1).reshape(2 * n)[:2 * n - 1]
+
+
+def _envelope_core(f: PWL, g: PWL, merged, vf, vg, mv, out_cap: int,
+                   take_max):
+    """Envelope given the merged knot grid and both values on it.
+
+    ``merged`` must contain every valid knot of BOTH functions (so each is
+    linear between consecutive grid points); ``vf``/``vg`` are their
+    values on the grid and ``mv`` its valid-knot count.  The crossing in
+    interval i lies strictly between grid points i-1 and i, so crossings
+    and grid knots interleave by construction — assembling the candidate
+    vector is ONE compact of the interleaved array, not a merge.
+    """
     M = merged.shape[0]
-    mv = f.m + g.m
-    last = merged[jnp.clip(mv - 1, 0, M - 1)]
-    # interval representatives: i = 0..M  (interval i is (merged[i-1], merged[i]))
+    # interval i = 0..M is (merged[i-1], merged[i]), unbounded at both ends
     i_idx = jnp.arange(M + 1)
     lo = jnp.where(i_idx == 0, -BIG, merged[jnp.clip(i_idx - 1, 0, M - 1)])
     hi = jnp.where(i_idx >= mv, BIG, merged[jnp.clip(i_idx, 0, M - 1)])
-    rep = jnp.where(
-        i_idx == 0, merged[0] - 1.0,
-        jnp.where(i_idx >= mv, last + 1.0, 0.5 * (lo + hi)))
-    vf, vg = _eval1(f, rep), _eval1(g, rep)
-    sf, sg = _slope1(f, rep), _slope1(g, rep)
+    # exact per-interval slopes from the merged values (guarded widths:
+    # coincident knots across f/g give zero-width intervals whose slope
+    # is never used — their crossing window (lo+margin, hi-margin) is
+    # empty — but must not divide by ~0)
+    dx = jnp.diff(merged)
+    ok_dx = dx > _TINY
+    inv_dx = 1.0 / jnp.where(ok_dx, dx, 1.0)
+    sf_mid = jnp.where(ok_dx, jnp.diff(vf), 0.0) * inv_dx
+    sg_mid = jnp.where(ok_dx, jnp.diff(vg), 0.0) * inv_dx
+    sf = jnp.concatenate([f.sl[None], sf_mid, f.sr[None]])
+    sg = jnp.concatenate([g.sl[None], sg_mid, g.sr[None]])
+    sf = jnp.where(i_idx >= mv, f.sr, sf)    # beyond the last live knot
+    sg = jnp.where(i_idx >= mv, g.sr, sg)
     denom = sf - sg
     parallel = jnp.abs(denom) <= _REL * (1.0 + jnp.maximum(jnp.abs(sf), jnp.abs(sg)))
-    x_cross = rep + (vg - vf) / jnp.where(parallel, 1.0, denom)
+    # crossing anchored at the interval's left knot (right knot for the
+    # unbounded-left interval 0): x* solves vf + sf (x-ax) = vg + sg (x-ax)
+    ai = jnp.clip(i_idx - 1, 0, M - 1)
+    ax, avf, avg = merged[ai], vf[ai], vg[ai]
+    x_cross = ax + (avg - avf) / jnp.where(parallel, 1.0, denom)
     margin = _REL * (1.0 + jnp.abs(x_cross))
     inside = (x_cross > lo + margin) & (x_cross < hi - margin)
     ok = (~parallel) & inside & (i_idx <= mv)
+    # the crossing of interval i sits strictly between grid knots i-1 and
+    # i: candidates = [cross_0, knot_0, cross_1, knot_1, ...] are already
+    # in order once the dropped entries go — ONE compact, no sort, no
+    # merge.  Payloads: grid knots carry max/min of the two values, a
+    # crossing carries the common value of f and g there.
     cross = jnp.where(ok, x_cross, BIG)
-    cands = jnp.sort(jnp.concatenate([merged, cross]))          # (2M+1,)
+    cross_v = jnp.where(ok, avf + sf * (x_cross - ax), 0.0)
+    if isinstance(take_max, bool):               # static: fused max OR min
+        hk = jnp.maximum(vf, vg) if take_max else jnp.minimum(vf, vg)
+    else:                                        # traced: per-lane select
+        hk = jnp.where(take_max, jnp.maximum(vf, vg), jnp.minimum(vf, vg))
+    raw = _interleave(cross, merged)                            # (2M+1,)
+    raw_v = _interleave(cross_v, hk)
+    raw_keep = _interleave(ok, i_idx[:-1] < mv)
+    cands, hv, _ = _compact(raw, raw_v, raw_keep)
     valid = cands < BIG / 2
-    hf, hg = _eval1(f, cands), _eval1(g, cands)
-    hv = jnp.maximum(hf, hg) if take_max else jnp.minimum(hf, hg)
-    # end slopes from probes beyond the outermost *candidates* (crossings can
-    # lie outside the span of the input knots)
+    # end slopes from probes beyond the outermost *candidates* (crossings
+    # can lie outside the span of the input knots)
     nvc = jnp.sum(valid)
     pl = cands[0] - 1.0
     pr = cands[jnp.clip(nvc - 1, 0, cands.shape[0] - 1)] + 1.0
-    fl, gl = _eval1(f, pl[None])[0], _eval1(g, pl[None])[0]
-    fr, gr = _eval1(f, pr[None])[0], _eval1(g, pr[None])[0]
+    probes = jnp.stack([pl, pr])
+    fl, fr = _eval1(f, probes)
+    gl, gr = _eval1(g, probes)
     tie_l = jnp.abs(fl - gl) <= _REL * (1.0 + jnp.maximum(jnp.abs(fl), jnp.abs(gl)))
     tie_r = jnp.abs(fr - gr) <= _REL * (1.0 + jnp.maximum(jnp.abs(fr), jnp.abs(gr)))
-    if take_max:
-        sl = jnp.where(tie_l, jnp.minimum(f.sl, g.sl), jnp.where(fl > gl, f.sl, g.sl))
-        sr = jnp.where(tie_r, jnp.maximum(f.sr, g.sr), jnp.where(fr > gr, f.sr, g.sr))
+    if isinstance(take_max, bool):
+        if take_max:
+            sl = jnp.where(tie_l, jnp.minimum(f.sl, g.sl),
+                           jnp.where(fl > gl, f.sl, g.sl))
+            sr = jnp.where(tie_r, jnp.maximum(f.sr, g.sr),
+                           jnp.where(fr > gr, f.sr, g.sr))
+        else:
+            sl = jnp.where(tie_l, jnp.maximum(f.sl, g.sl),
+                           jnp.where(fl < gl, f.sl, g.sl))
+            sr = jnp.where(tie_r, jnp.minimum(f.sr, g.sr),
+                           jnp.where(fr < gr, f.sr, g.sr))
     else:
-        sl = jnp.where(tie_l, jnp.maximum(f.sl, g.sl), jnp.where(fl < gl, f.sl, g.sl))
-        sr = jnp.where(tie_r, jnp.minimum(f.sr, g.sr), jnp.where(fr < gr, f.sr, g.sr))
+        sl = jnp.where(
+            tie_l,
+            jnp.where(take_max, jnp.minimum(f.sl, g.sl),
+                      jnp.maximum(f.sl, g.sl)),
+            jnp.where(jnp.where(take_max, fl > gl, fl < gl), f.sl, g.sl))
+        sr = jnp.where(
+            tie_r,
+            jnp.where(take_max, jnp.maximum(f.sr, g.sr),
+                      jnp.minimum(f.sr, g.sr)),
+            jnp.where(jnp.where(take_max, fr > gr, fr < gr), f.sr, g.sr))
     hv = jnp.where(valid, hv, 0.0)
     return _compress1(cands, hv, sl, sr, valid, out_cap)
 
 
-def envelope2(f: PWL, g: PWL, out_cap: int, take_max: bool):
-    """Pointwise max/min.  Batched over leading dims; returns (PWL, m_raw)."""
+def envelope2(f: PWL, g: PWL, out_cap: int, take_max):
+    """Pointwise max/min.  Batched over leading dims; returns (PWL, m_raw).
+
+    ``take_max`` is a python bool (static — the usual case) or a traced
+    boolean array broadcastable over the batch dims: per-lane max/min
+    selection, which is what lets one fused level step carry the seller
+    (max) and buyer (min) sides of the recursion in a single batch
+    (``core/rz.py::rz_level_step_lanes`` with a ``seller`` array).
+    """
     batch = f.sl.shape
+    if isinstance(take_max, bool):
+        if batch == ():
+            return _envelope1(f, g, out_cap, take_max)
+        fn = lambda ff, gg: _envelope1(ff, gg, out_cap, take_max)
+        for _ in batch:
+            fn = jax.vmap(fn)
+        return fn(f, g)
+    tm = jnp.broadcast_to(jnp.asarray(take_max, bool), batch)
     if batch == ():
-        return _envelope1(f, g, out_cap, take_max)
-    fn = lambda ff, gg: _envelope1(ff, gg, out_cap, take_max)
+        return _envelope1(f, g, out_cap, tm)
+    fn = lambda ff, gg, t: _envelope1(ff, gg, out_cap, t)
     for _ in batch:
         fn = jax.vmap(fn)
-    return fn(f, g)
+    return fn(f, g, tm)
 
 
 # --------------------------------------------------------------------- #
@@ -268,20 +493,31 @@ def _cone1(f: PWL, a, b, out_cap: int):
     margin = _REL * (1.0 + jnp.abs(ystar))
     ok = ((~par) & (idx + 1 < f.m) & (nxt_SA < BIG / 2) & (PB < BIG / 2)
           & (ystar > f.xs + margin) & (ystar < nxt_x - margin))
+    # candidates: the crossing of interval j sits strictly between knots
+    # j and j+1, so [x_0, ystar_0, x_1, ystar_1, ...] is already ordered
+    # once dropped entries go — one compact builds the env grid, no merge
     cross = jnp.where(ok, ystar, BIG)
-    cands = jnp.sort(jnp.concatenate([f.xs, cross]))            # (2K,)
+    cands, _, menv = _compact(_interleave(f.xs, cross[:-1]),
+                              jnp.zeros((2 * K - 1,), dtype),
+                              _interleave(valid, ok[:-1]))
     cvalid = cands < BIG / 2
     # env(c) = min(-a c + SA(c), -b c + PB(c))
-    ge = jnp.sum(f.xs[None, :] < cands[:, None], axis=-1)       # knots < c
-    le = jnp.sum(f.xs[None, :] <= cands[:, None], axis=-1)      # knots <= c
+    ge = _searchsorted(f.xs, cands, "left")                     # knots < c
+    le = _searchsorted(f.xs, cands, "right")                    # knots <= c
     SA_at = jnp.where(ge < f.m, SA[jnp.clip(ge, 0, K - 1)], BIG)
     PB_at = jnp.where(le > 0, PB[jnp.clip(le - 1, 0, K - 1)], BIG)
     env_v = jnp.minimum(jnp.where(SA_at < BIG / 2, -a * cands + SA_at, BIG),
                         jnp.where(PB_at < BIG / 2, -b * cands + PB_at, BIG))
     env_v = jnp.where(cvalid, env_v, 0.0)
-    menv = jnp.sum(cvalid).astype(jnp.int32)
-    env = PWL(cands, env_v, -a * jnp.ones((), dtype), -b * jnp.ones((), dtype), menv)
-    return _envelope1(f, env, out_cap, take_max=False)
+    env = PWL(cands, env_v, -a * jnp.ones((), dtype), -b * jnp.ones((), dtype),
+              menv)
+    # env's grid contains every valid knot of f (it was built from them),
+    # so min(f, env) needs NO knot merge: evaluate f on env's grid and run
+    # the envelope core directly — 2K-wide instead of the 3K-wide merge
+    # the generic path would do.
+    vf = _eval1(f, cands)
+    return _envelope_core(f, env, cands, vf, env_v, menv, out_cap,
+                          take_max=False)
 
 
 def cone_infconv(f: PWL, a, b, out_cap: int):

@@ -1,16 +1,21 @@
 """Vectorised Roux–Zastawniak pricing engine (single device).
 
 Carries the whole live tree level as fixed-capacity PWL SoA tensors
-(:mod:`repro.core.pwl`) and walks levels N+1 -> 0 with ``lax.fori_loop``.
-Every level update is the paper's per-node recursion, data-parallel over
-nodes:
+(:mod:`repro.core.pwl`) and walks levels N+1 -> 0 in ``lax.fori_loop``
+rounds.  Every level update is the paper's per-node recursion,
+data-parallel over nodes:
 
     w = max(z[i+1], z[i]);  v = cone(w / r);  z = max/min(u, v)
 
-The node axis has static size N+2; nodes beyond the current level are
+The node axis is static per round; nodes beyond the current level are
 masked (their lanes hold a benign affine function so no NaNs are ever
 produced, and they are never read by valid parents since node i's children
-are i and i+1).
+are i and i+1).  Both backends walk the statically re-balanced round
+schedule of ``core/partition.py::kernel_round_plan`` (§4.2 lane
+shedding — ~N^2/2 lane-levels) and carry the seller and buyer sides
+FUSED as one (2, P) state (``rz_level_step_lanes`` with a traced
+``seller`` flag array): per-side max/min is a select, so each level
+costs one pass, not two.
 
 ``price_rz`` is the public single-contract entry point;
 ``price_rz_batch`` vmaps it over a batch of contracts (strike / cost-rate /
@@ -48,33 +53,55 @@ def _benign(capacity: int, dtype) -> P.PWL:
 
 
 def _select(mask, f_new: P.PWL, f_old: P.PWL) -> P.PWL:
-    """Per-lane select between two PWL batches (mask over batch dims)."""
-    pick = lambda a, b: jnp.where(mask[..., None] if a.ndim > mask.ndim else mask, a, b)
+    """Per-lane select between two PWL batches.
+
+    ``mask`` broadcasts right-aligned against the batch dims (so a plain
+    ``(P,)`` lane mask also serves a fused ``(2, P)`` seller+buyer
+    state); the knot leaves carry one extra capacity axis, where the mask
+    gains a trailing axis instead.
+    """
+    batch_ndim = f_new.sl.ndim
+    pick = lambda a, b: jnp.where(
+        mask[..., None] if a.ndim == batch_ndim + 1 else mask, a, b)
     return P.PWL(pick(f_new.xs, f_old.xs), pick(f_new.ys, f_old.ys),
-                 jnp.where(mask, f_new.sl, f_old.sl),
-                 jnp.where(mask, f_new.sr, f_old.sr),
-                 jnp.where(mask, f_new.m, f_old.m))
+                 pick(f_new.sl, f_old.sl), pick(f_new.sr, f_old.sr),
+                 pick(f_new.m, f_old.m))
 
 
 def _shift_up(f: P.PWL) -> P.PWL:
-    """Lane i <- lane i+1 (the up-move child) along the node axis (axis 0)."""
-    sh = lambda a: jnp.roll(a, -1, axis=0)
+    """Lane i <- lane i+1 (the up-move child) along the node axis.
+
+    The node axis is the LAST batch axis (``sl.ndim - 1``): a plain level
+    state is ``(P,)``, the fused seller+buyer walk carries ``(2, P)``,
+    and each side's lanes roll independently.
+    """
+    axis = f.sl.ndim - 1
+    sh = lambda a: jnp.roll(a, -1, axis=axis)
     return P.PWL(sh(f.xs), sh(f.ys), sh(f.sl), sh(f.sr), sh(f.m))
 
 
-def rz_level_step_lanes(z: P.PWL, lvl, params, *, capacity: int, seller: bool,
+def rz_level_step_lanes(z: P.PWL, lvl, params, *, capacity: int, seller,
                         payoff: PayoffProcess, dtype, idx_offset=0):
     """One backward level update, returning *per-lane* piece counts.
 
-    z: PWL batch over node axis (P lanes);  lvl: scalar level index (traced);
-    params: dict with s0, sig_sqrt_dt, r, k.  ``idx_offset`` maps local lane
-    j to global tree column idx_offset + j (used by the sharded engine and
-    the blocked Pallas kernel).  Returns (z_new, pieces) with ``pieces`` an
-    int32 vector over lanes (0 on non-live lanes) so callers that only own
-    a sub-range of the lanes (kernel halos) can mask before reducing.
+    z: PWL batch whose LAST batch axis is the node axis (P lanes);  lvl:
+    scalar level index (traced); params: dict with s0, sig_sqrt_dt, r, k.
+    ``idx_offset`` maps local lane j to global tree column idx_offset + j
+    (used by the sharded engine and the blocked Pallas kernel).
+
+    ``seller`` is a python bool (single-side batch, the historical form)
+    or a traced boolean array broadcastable over the batch dims — e.g.
+    ``jnp.array([True, False])[:, None]`` with a ``(2, P)`` state walks
+    the seller (max/expense) and buyer (min/-expense) recursions in ONE
+    fused pass: on this CPU the PWL ops are op-overhead-bound, so halving
+    the op count per level is nearly a 2x on the whole backward walk.
+
+    Returns (z_new, pieces) with ``pieces`` an int32 array over the batch
+    (0 on non-live lanes) so callers that only own a sub-range of the
+    lanes (kernel halos) can mask before reducing.
     """
-    P_nodes = z.sl.shape[0]
-    idx = idx_offset + jnp.arange(P_nodes, dtype=dtype)
+    P_nodes = z.sl.shape[-1]
+    idx = idx_offset + jnp.arange(P_nodes, dtype=dtype)  # (P,), broadcasts
     live = idx <= lvl                                  # lvl+1 valid nodes
     s = params["s0"] * jnp.exp((2.0 * idx - lvl) * params["sig_sqrt_dt"])
     no_tc = lvl == 0                                   # no costs at t = 0
@@ -84,12 +111,17 @@ def rz_level_step_lanes(z: P.PWL, lvl, params, *, capacity: int, seller: bool,
     w, m1 = P.envelope2(_shift_up(z), z, capacity, take_max=True)
     w = P.scale(w, 1.0 / params["r"])
     v, m2 = P.cone_infconv(w, a, b, capacity)
-    if seller:
-        u = P.expense(payoff.xi(s), payoff.zeta(s), a, b, capacity, dtype)
-        z_new, m3 = P.envelope2(u, v, capacity, take_max=True)
+    if isinstance(seller, bool):
+        sign = 1.0 if seller else -1.0
     else:
-        u = P.expense(-payoff.xi(s), -payoff.zeta(s), a, b, capacity, dtype)
-        z_new, m3 = P.envelope2(u, v, capacity, take_max=False)
+        sign = jnp.where(seller, 1.0, -1.0)            # e.g. (2, 1) -> (2, P)
+    # the expense function's batch must match z's (v's) batch even when a
+    # static `seller` leaves xi/zeta at the bare (P,) lane shape
+    xi = jnp.broadcast_to(sign * payoff.xi(s), z.sl.shape)
+    zeta = jnp.broadcast_to(sign * payoff.zeta(s), z.sl.shape)
+    u = P.expense(xi, zeta, jnp.broadcast_to(a, z.sl.shape),
+                  jnp.broadcast_to(b, z.sl.shape), capacity, dtype)
+    z_new, m3 = P.envelope2(u, v, capacity, take_max=seller)
 
     z_out = _select(live, z_new, z)
     pieces = jnp.where(live, jnp.maximum(jnp.maximum(m1, m2), m3), 0)
@@ -130,31 +162,46 @@ def rz_backward(s0, sigma, rate, maturity, k, *, n_steps: int, capacity: int,
     is what the scenario-grid engine (:mod:`repro.scenarios`) relies on to
     batch heterogeneous contracts through one compiled call.
     """
+    from .partition import kernel_round_plan
     dt = maturity / n_steps
     params = dict(
         s0=s0, k=k,
         sig_sqrt_dt=sigma * jnp.sqrt(dt),
         r=jnp.exp(rate * dt),
     )
-    z_s = _leaf_level(n_steps, params, capacity, dtype)
-    z_b = _leaf_level(n_steps, params, capacity, dtype)
+    # two structural speedups over the historical reference walk:
+    #   * fused seller+buyer: one (2, P) state, per-side max/min selected
+    #     by traced `seller` flags — half the ops per level of the old
+    #     two-call body;
+    #   * §4.2 lane shedding: the walk follows the same statically
+    #     re-balanced round plan as the Pallas kernel (single-block
+    #     rounds), so the lane extent shrinks with the live tree —
+    #     ~N^2/2 lane-levels instead of dragging the full leaf width
+    #     through every level (~N^2).
+    plan = kernel_round_plan(n_steps)
+    leaf = _leaf_level(n_steps, params, capacity, dtype, lanes=plan[0].lanes)
+    z = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (2,) + a.shape),
+                     leaf)
+    sides = jnp.asarray([True, False])[:, None]        # seller, buyer
+    pieces = jnp.zeros((), jnp.int32)
 
-    def body(step, carry):
-        z_s, z_b, pieces = carry
-        lvl = jnp.asarray(n_steps - step, dtype)
-        z_s, p1 = rz_level_step(z_s, lvl, params, capacity=capacity,
-                                seller=True, payoff=payoff, dtype=dtype)
-        z_b, p2 = rz_level_step(z_b, lvl, params, capacity=capacity,
-                                seller=False, payoff=payoff, dtype=dtype)
-        pieces = jnp.maximum(pieces, jnp.maximum(p1, p2))
-        return z_s, z_b, pieces
+    for rnd in plan:
+        z = jax.tree.map(lambda a: a[:, :rnd.lanes], z)
+        lvl0 = jnp.asarray(float(rnd.lvl0), dtype)
 
-    z_s, z_b, pieces = jax.lax.fori_loop(
-        0, n_steps + 1, body, (z_s, z_b, jnp.zeros((), jnp.int32)))
+        def body(j, carry, lvl0=lvl0):
+            z, pieces = carry
+            lvl = lvl0 - (j + 1).astype(dtype)
+            z, pc = rz_level_step_lanes(z, lvl, params, capacity=capacity,
+                                        seller=sides, payoff=payoff,
+                                        dtype=dtype)
+            return z, jnp.maximum(pieces, jnp.max(pc))
 
-    root = lambda z: jax.tree.map(lambda a: a[0], z)
-    ask = P.eval_at(root(z_s), jnp.zeros((), dtype))
-    bid = -P.eval_at(root(z_b), jnp.zeros((), dtype))
+        z, pieces = jax.lax.fori_loop(0, rnd.depth, body, (z, pieces))
+
+    root = lambda side: jax.tree.map(lambda a: a[side, 0], z)
+    ask = P.eval_at(root(0), jnp.zeros((), dtype))
+    bid = -P.eval_at(root(1), jnp.zeros((), dtype))
     return ask, bid, pieces
 
 
@@ -192,27 +239,28 @@ def rz_backward_pallas(s0, sigma, rate, maturity, k, *, n_steps: int,
         r=jnp.exp(rate * dt),
     )
     plan = kernel_round_plan(n_steps, levels=levels, block=block)
-    z_s = _leaf_level(n_steps, params, capacity, dtype, lanes=plan[0].lanes)
-    z_b = _leaf_level(n_steps, params, capacity, dtype, lanes=plan[0].lanes)
+    # fused sides: one (2, lanes) state, one pallas_call per round — the
+    # kernel walks seller (max) and buyer (min) together, halving the op
+    # and dispatch count exactly like the jnp backward
+    leaf = _leaf_level(n_steps, params, capacity, dtype, lanes=plan[0].lanes)
+    z = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (2,) + a.shape),
+                     leaf)
     pieces = jnp.zeros((), jnp.int32)
 
     sc = [params["s0"], params["sig_sqrt_dt"], params["r"], params["k"],
           *payoff.params]
     for rnd in plan:
         # re-balance: shrink the lane extent to this round's live tree
-        cut = lambda f: jax.tree.map(lambda a: a[:rnd.lanes], f)
-        z_s, z_b = cut(z_s), cut(z_b)
+        z = jax.tree.map(lambda a: a[:, :rnd.lanes], z)
         scalars = jnp.stack([jnp.asarray(v, dtype)
                              for v in (float(rnd.lvl0), *sc)])
-        z_s, p1 = rz_round(z_s, scalars, levels=rnd.depth, block=rnd.block,
-                           seller=True, interpret=interpret)
-        z_b, p2 = rz_round(z_b, scalars, levels=rnd.depth, block=rnd.block,
-                           seller=False, interpret=interpret)
-        pieces = jnp.maximum(pieces, jnp.maximum(p1, p2))
+        z, p = rz_round(z, scalars, levels=rnd.depth, block=rnd.block,
+                        interpret=interpret)
+        pieces = jnp.maximum(pieces, p)
 
-    root = lambda z: jax.tree.map(lambda a: a[0], z)
-    ask = P.eval_at(root(z_s), jnp.zeros((), dtype))
-    bid = -P.eval_at(root(z_b), jnp.zeros((), dtype))
+    root = lambda side: jax.tree.map(lambda a: a[side, 0], z)
+    ask = P.eval_at(root(0), jnp.zeros((), dtype))
+    bid = -P.eval_at(root(1), jnp.zeros((), dtype))
     return ask, bid, pieces
 
 

@@ -30,11 +30,19 @@ the caller raises ``OverflowError`` if it exceeded K.  Halo lanes are
 excluded — their values go stale within a round, and their owning block
 reports the authoritative count.
 
-The PWL level step is built from sorts/scatters the Mosaic TPU compiler
-does not take today, so this kernel family targets **interpret mode**
-(CPU-exact, float64, used by the parity tests and benchmarks); the no-TC
-``binomial_step.py`` remains the compiled-TPU showcase.  The BlockSpec /
-grid structure is the one a future Mosaic lowering would keep.
+The PWL level step is now **sort-free** (``core/pwl.py``'s merge-path
+envelope algebra: binary-search rank computation + gathers — no
+``sort``/``argsort`` primitives, jaxpr-asserted by
+``tests/test_pwl_merge.py``), which removes the original blocker this
+kernel family was quarantined to interpret mode for.  What remains
+between it and a compiled Mosaic lowering is narrower and mechanical:
+the per-lane dynamic gathers of the binary searches and the int32
+knot-count bookkeeping.  On this CPU-only container the kernels still
+default to **interpret mode** (CPU-exact, float64, used by the parity
+tests and benchmarks — and ~2x faster since the rewrite); pass
+``interpret=False`` to attempt a real lowering on TPU hardware.  The
+BlockSpec / grid structure is unchanged — it was designed to be kept
+once the sorts disappeared, and they now have.
 """
 from __future__ import annotations
 
@@ -57,9 +65,17 @@ __all__ = ["rz_round", "RZ_SCALARS"]
 RZ_SCALARS = 11
 
 
-def _rz_round_kernel(sc_ref, *refs, levels: int, block: int, seller: bool,
-                     halo: bool):
-    """Advance one block of PWL lanes ``levels`` levels toward the root."""
+def _rz_round_kernel(sc_ref, *refs, levels: int, block: int,
+                     sellers: tuple, halo: bool):
+    """Advance one block of PWL lanes ``levels`` levels toward the root.
+
+    The leading axis of every PWL component is the *side* axis (seller /
+    buyer), walked fused in one pass: ``rz_level_step_lanes`` takes the
+    per-side flags as a traced ``(S, 1)`` array, so max/min envelopes and
+    the expense sign are per-lane selects, not separate kernels.  Lanes
+    of different sides never mix — the level recursion couples lane l to
+    l+1 within its own side row only.
+    """
     ncomp = 5                                   # xs, ys, sl, sr, m
     lvl0, s0, sig, r, k = (sc_ref[j] for j in range(5))
     pay = param_payoff(*(sc_ref[5 + j] for j in range(6)))
@@ -67,7 +83,7 @@ def _rz_round_kernel(sc_ref, *refs, levels: int, block: int, seller: bool,
 
     if halo:
         cur, nxt = refs[:ncomp], refs[ncomp:2 * ncomp]
-        z = P.PWL(*(jnp.concatenate([c[...], n[...]])
+        z = P.PWL(*(jnp.concatenate([c[...], n[...]], axis=1)
                     for c, n in zip(cur, nxt)))
         outs = refs[2 * ncomp:]
     else:
@@ -75,15 +91,24 @@ def _rz_round_kernel(sc_ref, *refs, levels: int, block: int, seller: bool,
         outs = refs[ncomp:]
     dtype = z.xs.dtype
     capacity = z.capacity
-    lanes = z.sl.shape[0]
+    lanes = z.sl.shape[-1]
     idx0 = pl.program_id(0) * block
     owned = jnp.arange(lanes) < block
+    # (S, 1) per-side seller flags, broadcast against the lane axis.
+    # Built from an iota, not jnp.asarray(sellers): pallas kernels may
+    # not capture array constants (scalar literals fold fine).
+    S = z.sl.shape[0]
+    row = jax.lax.broadcasted_iota(jnp.int32, (S, 1), 0)
+    side = jnp.zeros((S, 1), bool)
+    for j, s_j in enumerate(sellers):
+        if s_j:
+            side = side | (row == j)
 
     def body(j, carry):
         z, pieces = carry
         lvl = lvl0 - (j + 1).astype(dtype)
         z, pc = rz_level_step_lanes(z, lvl, params, capacity=capacity,
-                                    seller=seller, payoff=pay, dtype=dtype,
+                                    seller=side, payoff=pay, dtype=dtype,
                                     idx_offset=idx0)
         pieces = jnp.maximum(pieces, jnp.max(jnp.where(owned, pc, 0)))
         return z, pieces
@@ -91,25 +116,30 @@ def _rz_round_kernel(sc_ref, *refs, levels: int, block: int, seller: bool,
     z, pieces = jax.lax.fori_loop(0, levels, body,
                                   (z, jnp.zeros((), jnp.int32)))
     for ref, arr in zip(outs[:ncomp], z):
-        ref[...] = arr[:block]
+        ref[...] = arr[:, :block]
     outs[ncomp][...] = pieces[None]
 
 
 def rz_round(z: P.PWL, scalars, *, levels: int, block: int,
-             seller: bool, interpret: bool = True):
-    """One round of ``levels`` TC level-steps over all node blocks.
+             sellers: tuple = (True, False), interpret: bool = True):
+    """One round of ``levels`` fused TC level-steps over all node blocks.
 
-    z: PWL with node axis of P lanes, P a multiple of ``block``; scalars:
+    z: PWL with a leading side axis of ``len(sellers)`` rows (the engine
+    walks ``(seller, buyer)``; the white-box tests use a single side) and
+    a node axis of P lanes, P a multiple of ``block``; scalars:
     (RZ_SCALARS,) array (dtype of z.xs).  Multi-block rounds require
     ``levels <= block`` (halo staleness bound).  Returns ``(z_new,
     pieces)`` with ``pieces`` the scalar int32 max raw knot count over
-    owned live lanes — the overflow signal the engines carry.
+    owned live lanes of every side — the overflow signal the engines
+    carry.
     """
-    lanes = z.sl.shape[0]
+    S, lanes = z.sl.shape
     # loud ValueErrors, not asserts: these are user-reachable contracts and
     # a violation misprices silently (a short scalars vector clamp-indexes
     # inside the kernel; levels > block lets halo staleness reach owned
     # lanes) — they must survive python -O
+    if S != len(sellers):
+        raise ValueError(f"side axis {S} != len(sellers) {len(sellers)}")
     if lanes % block != 0:
         raise ValueError(f"lanes {lanes} not a multiple of block {block}")
     if scalars.shape != (RZ_SCALARS,):
@@ -125,19 +155,19 @@ def rz_round(z: P.PWL, scalars, *, levels: int, block: int,
     dtype = z.xs.dtype
 
     cur_specs = [
-        pl.BlockSpec((block, K), lambda i: (i, 0)),          # xs
-        pl.BlockSpec((block, K), lambda i: (i, 0)),          # ys
-        pl.BlockSpec((block,), lambda i: (i,)),              # sl
-        pl.BlockSpec((block,), lambda i: (i,)),              # sr
-        pl.BlockSpec((block,), lambda i: (i,)),              # m
+        pl.BlockSpec((S, block, K), lambda i: (0, i, 0)),    # xs
+        pl.BlockSpec((S, block, K), lambda i: (0, i, 0)),    # ys
+        pl.BlockSpec((S, block), lambda i: (0, i)),          # sl
+        pl.BlockSpec((S, block), lambda i: (0, i)),          # sr
+        pl.BlockSpec((S, block), lambda i: (0, i)),          # m
     ]
     nxt = lambda i: jnp.minimum(i + 1, nblk - 1)             # clamped halo
     nxt_specs = [
-        pl.BlockSpec((block, K), lambda i: (nxt(i), 0)),
-        pl.BlockSpec((block, K), lambda i: (nxt(i), 0)),
-        pl.BlockSpec((block,), lambda i: (nxt(i),)),
-        pl.BlockSpec((block,), lambda i: (nxt(i),)),
-        pl.BlockSpec((block,), lambda i: (nxt(i),)),
+        pl.BlockSpec((S, block, K), lambda i: (0, nxt(i), 0)),
+        pl.BlockSpec((S, block, K), lambda i: (0, nxt(i), 0)),
+        pl.BlockSpec((S, block), lambda i: (0, nxt(i))),
+        pl.BlockSpec((S, block), lambda i: (0, nxt(i))),
+        pl.BlockSpec((S, block), lambda i: (0, nxt(i))),
     ]
     in_specs = [pl.BlockSpec(memory_space=pl.ANY)] + cur_specs
     operands = [scalars, *z]
@@ -146,18 +176,19 @@ def rz_round(z: P.PWL, scalars, *, levels: int, block: int,
         operands += list(z)
 
     kernel = functools.partial(_rz_round_kernel, levels=levels, block=block,
-                               seller=seller, halo=halo)
+                               sellers=tuple(bool(s) for s in sellers),
+                               halo=halo)
     out = pl.pallas_call(
         kernel,
         grid=(nblk,),
         in_specs=in_specs,
         out_specs=[*cur_specs, pl.BlockSpec((1,), lambda i: (i,))],
         out_shape=[
-            jax.ShapeDtypeStruct((lanes, K), dtype),         # xs
-            jax.ShapeDtypeStruct((lanes, K), dtype),         # ys
-            jax.ShapeDtypeStruct((lanes,), dtype),           # sl
-            jax.ShapeDtypeStruct((lanes,), dtype),           # sr
-            jax.ShapeDtypeStruct((lanes,), jnp.int32),       # m
+            jax.ShapeDtypeStruct((S, lanes, K), dtype),      # xs
+            jax.ShapeDtypeStruct((S, lanes, K), dtype),      # ys
+            jax.ShapeDtypeStruct((S, lanes), dtype),         # sl
+            jax.ShapeDtypeStruct((S, lanes), dtype),         # sr
+            jax.ShapeDtypeStruct((S, lanes), jnp.int32),     # m
             jax.ShapeDtypeStruct((nblk,), jnp.int32),        # pieces/block
         ],
         interpret=interpret,

@@ -102,8 +102,12 @@ class ServiceMetrics:
     def snapshot(self) -> dict:
         lat = np.asarray(self.latencies) if self.latencies else np.zeros(1)
         waste = (1.0 - self.contracts / self.padded) if self.padded else 0.0
+        # before any engine flush there is no throughput to report: 0.0,
+        # not inf — json.dumps would emit non-standard `Infinity` into the
+        # BENCH_serve.json artifact (strict JSON parsers reject it, and
+        # tools/check_bench.py refuses non-finite metrics)
         cps = (self.contracts / self.engine_seconds
-               if self.engine_seconds > 0 else float("inf"))
+               if self.engine_seconds > 0 else 0.0)
         return {
             "requests": self.requests, "completed": self.completed,
             "batches": self.batches, "contracts": self.contracts,

@@ -90,7 +90,12 @@ def test_pallas_overflow_reported_identically():
 
 def test_rz_round_equals_level_step_chain():
     """White-box: one blocked round == ``levels`` full-width level steps
-    on the owned live lanes (the region-A/halo construction is exact)."""
+    on the owned live lanes (the region-A/halo construction is exact).
+
+    Values compare at 1e-12, not bitwise: the kernel's fused ``fori_loop``
+    body lets LLVM contract mul-adds into FMAs that the eagerly-executed
+    reference chain doesn't, a ±1-ulp effect.  Knot counts are exact.
+    """
     n_steps, capacity, block, levels = 9, 12, 4, 3
     dtype = jnp.float64
     pay = american_put(100.0)
@@ -114,13 +119,30 @@ def test_rz_round_equals_level_step_chain():
                          (lvl0, 100.0, float(params["sig_sqrt_dt"]),
                           float(params["r"]), 0.01, *pay.params)])
     assert scalars.shape == (RZ_SCALARS,)
-    z_krn, pieces = rz_round(z, scalars, levels=levels, block=block,
-                             seller=True)
+    # single-side round (sellers=(True,)): the kernel's fused side axis
+    # must reproduce the plain full-width chain exactly
+    z1 = jax.tree.map(lambda a: a[None], z)
+    z_krn, pieces = rz_round(z1, scalars, levels=levels, block=block,
+                             sellers=(True,))
     live = np.arange(lanes) <= lvl0 - levels     # live lanes at the new base
-    for a_ref, a_krn in zip(z_ref, z_krn):
-        np.testing.assert_array_equal(np.asarray(a_ref)[live],
-                                      np.asarray(a_krn)[live])
+    for a_ref, a_krn, name in zip(z_ref, z_krn, ("xs", "ys", "sl", "sr", "m")):
+        a_ref = np.asarray(a_ref)[live]
+        a_krn = np.asarray(a_krn)[0][live]
+        if name == "m":
+            np.testing.assert_array_equal(a_ref, a_krn)
+        else:
+            np.testing.assert_allclose(a_ref, a_krn, rtol=0, atol=1e-12)
     assert int(pieces) == int(jnp.max(pieces_ref))
+
+    # fused (seller, buyer) round: the seller row must be bit-identical
+    # to the single-side seller round (side fusion itself changes no
+    # values — both run through the same compiled kernel structure)
+    z2 = jax.tree.map(lambda a: jnp.stack([a, a]), z)
+    z_krn2, _ = rz_round(z2, scalars, levels=levels, block=block,
+                         sellers=(True, False))
+    for a_one, a_two in zip(z_krn, z_krn2):
+        np.testing.assert_array_equal(np.asarray(a_one)[0][live],
+                                      np.asarray(a_two)[0][live])
 
 
 @pytest.mark.parametrize("levels,block", [(None, None), (2, None), (3, 4)])

@@ -1,0 +1,71 @@
+"""Property-based triangle tests for the sort-free PWL envelope algebra.
+
+Every property runs the merge-path engine AND the retained sort-based
+engine (``_merge_take_bysort``/``_compact_bysort``, swapped in by
+``tests/test_pwl_merge.py::sort_based_engine``) on the same inputs and
+demands bitwise-identical results — knot positions, values, end slopes
+and the raw (pre-truncation) overflow counts — then checks both against
+the exact ``pwl_ref`` oracle wherever the raw count fits the capacity.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this environment")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import pwl as P  # noqa: E402
+from repro.core import pwl_ref as R  # noqa: E402
+
+from test_pwl_merge import _assert_pwl_identical, sort_based_engine  # noqa: E402
+
+_settings = settings(max_examples=60, deadline=None)
+CAP = 32
+_QS = np.linspace(-8.0, 8.0, 97)
+
+knots = st.integers(1, 5).flatmap(
+    lambda m: st.tuples(
+        st.lists(st.floats(-5, 5), min_size=m, max_size=m),
+        st.lists(st.floats(-100, 100), min_size=m, max_size=m)))
+end_slopes = st.tuples(st.floats(-150, -60), st.floats(-50, -5))
+
+
+def _pwl(xs, ys, sl, sr):
+    xs = np.sort(np.asarray(xs)) + np.arange(len(xs)) * 1e-3
+    return R.PWLRef(xs, np.asarray(ys), sl, sr)
+
+
+@given(knots, knots, end_slopes, end_slopes, st.integers(2, CAP),
+       st.booleans())
+@_settings
+def test_merge_path_envelope_vs_oracle_and_sort(kf, kg, ef, eg, cap,
+                                                take_max):
+    """Triangle property: merge-path == sort-based bitwise (knots, values,
+    m_raw overflow counts), and both == the pwl_ref oracle wherever the
+    raw count fits the output capacity."""
+    f = _pwl(kf[0], kf[1], *ef)
+    g = _pwl(kg[0], kg[1], *eg)
+    F, G = P.from_ref(f, CAP), P.from_ref(g, CAP)
+    new, m_new = P.envelope2(F, G, cap, take_max=take_max)
+    with sort_based_engine():
+        old, m_old = P.envelope2(F, G, cap, take_max=take_max)
+    _assert_pwl_identical((new, m_new), (old, m_old), "hypothesis envelope")
+    want = (R.pwl_max if take_max else R.pwl_min)(f, g)
+    if want.m > cap:
+        assert int(m_new) > cap          # overflow reported, never silent
+    if int(m_new) <= cap:
+        np.testing.assert_allclose(P.to_ref(new)(_QS), want(_QS), atol=1e-7)
+
+
+@given(knots, end_slopes, st.floats(80, 140), st.floats(20, 70))
+@_settings
+def test_merge_path_cone_vs_oracle_and_sort(kf, ef, a, b):
+    f = _pwl(kf[0], kf[1], min(ef[0], -b - 1), max(ef[1], -a))
+    F = P.from_ref(f, CAP)
+    new, m_new = P.cone_infconv(F, a, b, CAP)
+    with sort_based_engine():
+        old, m_old = P.cone_infconv(F, a, b, CAP)
+    _assert_pwl_identical((new, m_new), (old, m_old), "hypothesis cone")
+    want = R.cone_infconv(f, a, b)
+    assert int(m_new) <= CAP
+    np.testing.assert_allclose(P.to_ref(new)(_QS), want(_QS), atol=1e-7)

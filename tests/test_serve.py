@@ -56,6 +56,24 @@ def test_lm_engine_matches_full_forward():
     np.testing.assert_array_equal(got, want)
 
 
+def test_fresh_service_snapshot_is_strict_json():
+    """Regression: before any engine flush, ``engine_seconds`` is 0 and
+    ``contracts_per_sec`` used to come out ``float("inf")`` —
+    ``json.dumps`` then emitted the non-standard ``Infinity`` token into
+    the BENCH_serve.json artifact.  A fresh service must report 0.0 and
+    serialise as strict JSON."""
+    import json
+
+    svc = PricingService(max_batch=4, default_n_steps=8)
+    snap = svc.metrics()
+    assert snap["contracts_per_sec"] == 0.0
+    assert snap["engine_seconds"] == 0.0
+    # allow_nan=False makes json.dumps raise on inf/nan anywhere in the
+    # snapshot; strict parsers (and tools/check_bench.py) reject those
+    parsed = json.loads(json.dumps(snap, allow_nan=False))
+    assert parsed["contracts_per_sec"] == 0.0
+
+
 def test_scheduler_deadline_flush():
     """A partial bucket sits until its oldest request ages past the
     deadline; step() before that is a no-op, after it a flush."""

@@ -22,11 +22,16 @@ Two metric classes per bench:
 
 Unknown bench kinds fall back to gating every ``*contracts_per_sec``
 path found in both files.
+
+Non-finite metric values (``Infinity``/``NaN`` — which ``json`` parses
+happily from a buggy artifact) are rejected as failures rather than
+compared: a ratio against inf passes every gate silently.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import math
 import shutil
 import sys
 from pathlib import Path
@@ -46,7 +51,19 @@ _BENCHES = {
                        "baseline.contracts_per_sec"),
         "ratios": ("speedup", "speedup_nocache"),
     },
+    "pwl_envelope_ops": {
+        "config": ("lanes", "capacity", "repeats", "device"),
+        "throughput": ("envelope.ops_per_sec", "cone.ops_per_sec",
+                       "level_step.ops_per_sec"),
+        "ratios": (),
+    },
 }
+
+
+def _finite_number(v) -> bool:
+    """True only for real finite numbers (bool is not a metric)."""
+    return (isinstance(v, (int, float)) and not isinstance(v, bool)
+            and math.isfinite(v))
 
 
 def _get(report: dict, dotted: str):
@@ -103,6 +120,21 @@ def check(fresh: dict, baseline: dict, tol: float) -> list[str]:
             print(f"  SKIP {path}: missing "
                   f"({'fresh' if f is None else 'baseline'})")
             return
+        # json.loads happily parses the non-standard Infinity/NaN tokens
+        # a buggy bench can emit (json.dumps allows them by default); a
+        # ratio against inf/nan would then "pass" every gate or fail with
+        # a meaningless message.  Reject the metric outright instead —
+        # a non-finite baseline means the baseline needs regenerating.
+        for side, v in (("fresh", f), ("baseline", b)):
+            if not _finite_number(v):
+                print(f"  FAIL {path} ({klass}): {side} value {v!r} is "
+                      "not a finite number")
+                failures.append(
+                    f"{path}: {side} value {v!r} is not a finite number"
+                    + (" — regenerate the baseline (--write-baseline)"
+                       if side == "baseline" else
+                       " — the bench emitted a broken metric"))
+                return
         floor = b * (1.0 - tol)
         status = "PASS" if f >= floor else "FAIL"
         print(f"  {status} {path} ({klass}): fresh {f:.4g} vs baseline "
