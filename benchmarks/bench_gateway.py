@@ -1,0 +1,206 @@
+"""Gateway availability under replica failure: 1 vs 2 replicas.
+
+Replays the same 1k-request synthetic trace (``synth_trace`` — the
+``bench_serve`` mix) through the asyncio
+:class:`repro.serve.gateway.PricingGateway`, injecting a **replica
+crash mid-replay** (``FaultyReplica`` crash at chunk call ``--crash-at``,
+restart after ``--restart-s`` — modelling a pricing process respawn):
+
+  * ``one_replica`` — the crash stalls the whole gateway for the
+    restart window (plus retry backoff) before the replay can resume;
+  * ``two_replica`` — the in-flight chunk fails over to the healthy
+    replica immediately; the restart window is masked.
+
+Each timed replay is followed by a streaming segment (``run_stream``
+over a mixed :class:`~repro.serve.streaming.StreamingBook` and a
+``synth_ticks`` feed) so the artifact also carries tick-to-quote
+staleness percentiles.  ``BENCH_gateway.json`` reports quotes/sec per
+configuration, the ``two_over_one`` availability ratio (acceptance:
+>= 1.5x), latency/staleness p99, and an **oracle audit**: every quote
+either replay delivered — including the chunks requeued across the
+crash — is checked against ``repro.api.price_american`` at 1e-9.
+
+**Honest framing for 1-core hosts** (CI, this container): two replicas
+cannot beat one on raw compute — both drain the same core and jax's jit
+cache is process-wide.  The ratio measures *availability under
+failure*: the second replica masks the ``--restart-s`` outage that the
+single-replica run eats in full.  That is the property the gateway
+exists to provide, and it is what the baseline gates.
+
+    PYTHONPATH=src python -m benchmarks.bench_gateway \
+        [--requests 1000] [--max-batch 64] [--n-steps 16,24] \
+        [--crash-at 1] [--restart-s 1.0] [--out BENCH_gateway.json]
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import time
+from pathlib import Path
+
+from repro.api import price_american
+from repro.launch.serve_pricing import synth_trace
+from repro.serve.gateway import PricingGateway
+from repro.serve.replica import FaultyReplica, LocalReplica
+from repro.serve.streaming import StreamingBook, synth_ticks
+
+HARNESS_REQUESTS = 200
+DEFAULT_REQUESTS = 1000
+DEADLINE_MS = 25.0
+TICKS = 16
+
+
+def _replicas(n: int, crash_at):
+    """Replica 0 optionally crashes at its ``crash_at``-th chunk; the
+    rest are clean in-process workers."""
+    first = (LocalReplica(name="replica-0") if crash_at is None else
+             FaultyReplica(faults={int(crash_at): "crash"},
+                           name="replica-0"))
+    return [first] + [LocalReplica(name=f"replica-{i}")
+                      for i in range(1, n)]
+
+
+def _stream_book(n_steps):
+    return StreamingBook.mixed(n_underlyings=2, per_underlying=6,
+                               n_steps=tuple(n_steps), capacity=16)
+
+
+async def _replay(trace, *, n_replicas, crash_at, restart_s, max_batch,
+                  capacity, n_steps, ticks):
+    """One full replay: unary trace, then a streaming segment.  Returns
+    (quotes, unary_seconds, metrics, stream_summary)."""
+    async with PricingGateway(
+            replicas=_replicas(n_replicas, crash_at),
+            max_batch=max_batch, deadline_ms=DEADLINE_MS,
+            capacity=capacity, result_cache_size=0,
+            restart_s=restart_s, retry_backoff_s=0.05,
+            overload_factor=None) as gw:
+        t0 = time.perf_counter()
+        rids = [await gw.submit(r) for r in trace]
+        quotes = {rid: await gw.result(rid) for rid in rids}
+        dt = time.perf_counter() - t0
+        m_unary = gw.metrics()        # snapshot before the tick feed
+        stream = await gw.run_stream(
+            _stream_book(n_steps),
+            synth_ticks(ticks, n_underlyings=2, seed=1))
+        return quotes, dt, m_unary, gw.metrics(), stream
+
+
+def _audit(trace, quotes, rids):
+    """max |quote - price_american| over the trace (dedup by scenario)."""
+    refs, worst = {}, 0.0
+    for req, rid in zip(trace, rids):
+        key = (req.s0, req.sigma, req.rate, req.maturity, req.cost_rate,
+               req.payoff, req.strike, req.n_steps)
+        if key not in refs:
+            refs[key] = price_american(
+                s0=req.s0, sigma=req.sigma, rate=req.rate,
+                maturity=req.maturity, n_steps=req.n_steps,
+                payoff=req.payoff, strike=req.strike,
+                cost_rate=req.cost_rate, capacity=32)
+        ref, q = refs[key], quotes[rid]
+        worst = max(worst, abs(q.ask - ref.ask), abs(q.bid - ref.bid))
+    return worst, len(refs)
+
+
+def bench(requests: int = DEFAULT_REQUESTS, max_batch: int = 64,
+          n_steps=(16, 24), capacity: int = 16, crash_at: int = 1,
+          restart_s: float = 1.0, seed: int = 0,
+          out: str = "BENCH_gateway.json") -> dict:
+    import jax
+    trace = synth_trace(requests, n_steps=n_steps, seed=seed)
+    n = len(trace)
+    print(f"{n}-request trace, crash at replica chunk #{crash_at}, "
+          f"restart after {restart_s}s")
+
+    def replay(n_replicas, crash):
+        return asyncio.run(_replay(
+            trace, n_replicas=n_replicas, crash_at=crash,
+            restart_s=restart_s, max_batch=max_batch, capacity=capacity,
+            n_steps=n_steps, ticks=TICKS))
+
+    # warm-up: compile every unary + streaming batch shape, no faults
+    replay(2, None)
+
+    results = {}
+    for label, n_replicas in (("one_replica", 1), ("two_replica", 2)):
+        quotes, dt, m, m_final, stream = replay(n_replicas, crash_at)
+        assert len(quotes) == n and m_final["failed"] == 0, \
+            f"{label}: dropped/failed quotes despite failover"
+        # the crash must land inside the timed unary replay (sticky
+        # affinity means replica-0 only sees its own bucket's chunks —
+        # keep --crash-at below that count)
+        assert m["replica_crashes"] == 1, \
+            f"{label}: crash did not fire during the unary replay"
+        worst, distinct = _audit(trace, quotes, sorted(quotes))
+        assert worst < 1e-9, f"{label}: oracle audit failed ({worst:.2e})"
+        results[label] = {
+            "seconds": dt, "quotes_per_sec": n / dt,
+            "requeues": m["requeues"], "retries": m["retries"],
+            "replica_restarts": m_final["replica_restarts"],
+            "p99_latency_ms": m["p99_latency_ms"],
+            "staleness_p50_ms": stream["staleness_p50_ms"],
+            "staleness_p99_ms": stream["staleness_p99_ms"],
+            "oracle_max_abs_err": worst,
+        }
+        print(f"{label:12s}: {dt:7.3f} s ({n / dt:9.1f} quotes/s)  "
+              f"requeues={m['requeues']} "
+              f"restarts={m_final['replica_restarts']} "
+              f"stale_p99={stream['staleness_p99_ms']:.1f}ms  "
+              f"oracle max|err|={worst:.2e} over {distinct} scenarios")
+
+    ratio = (results["two_replica"]["quotes_per_sec"]
+             / results["one_replica"]["quotes_per_sec"])
+    print(f"two_over_one: {ratio:.2f}x (criterion: >= 1.5x — the second "
+          "replica masks the restart outage)")
+
+    report = {
+        "bench": "gateway_replicas",
+        "requests": n, "max_batch": max_batch, "n_steps": list(n_steps),
+        "capacity": capacity, "crash_at": crash_at,
+        "restart_s": restart_s, "seed": seed, "ticks": TICKS,
+        "device": jax.devices()[0].platform,
+        "one_replica": results["one_replica"],
+        "two_replica": results["two_replica"],
+        "two_over_one": ratio,
+        "meets_1p5x_criterion": bool(ratio >= 1.5),
+        "oracle": {"tol": 1e-9},
+    }
+    Path(out).write_text(json.dumps(report, indent=2) + "\n")
+    print(f"wrote {out}")
+    return report
+
+
+def run() -> list[str]:
+    """benchmarks.run entry — harness-sized trace, full JSON artifact."""
+    rep = bench(requests=HARNESS_REQUESTS)
+    us = rep["two_replica"]["seconds"] * 1e6 / rep["requests"]
+    return [
+        f"gateway,{us:.0f},"
+        f"two_over_one={rep['two_over_one']:.2f}x;"
+        f"one_qps={rep['one_replica']['quotes_per_sec']:.0f};"
+        f"two_qps={rep['two_replica']['quotes_per_sec']:.0f};"
+        f"stale_p99={rep['two_replica']['staleness_p99_ms']:.0f}ms",
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--requests", type=int, default=DEFAULT_REQUESTS)
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--n-steps", default="16,24")
+    ap.add_argument("--capacity", type=int, default=16)
+    ap.add_argument("--crash-at", type=int, default=1)
+    ap.add_argument("--restart-s", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_gateway.json")
+    a = ap.parse_args()
+    bench(requests=a.requests, max_batch=a.max_batch,
+          n_steps=tuple(int(x) for x in a.n_steps.split(",")),
+          capacity=a.capacity, crash_at=a.crash_at,
+          restart_s=a.restart_s, seed=a.seed, out=a.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,7 @@ _REGISTRY = {
     "grid": "scenario_grid",
     "rz_pallas": "bench_rz_pallas",
     "serve": "bench_serve",
+    "gateway": "bench_gateway",
     "pwl": "bench_pwl",
 }
 # module-name aliases: `python -m benchmarks.run bench_serve` works too

@@ -194,7 +194,11 @@ def price_flat(*, s0, sigma, rate, maturity, cost_rate=0.0, payoff="put",
     slice the first ``len(s0)`` rows (the scheduler does this for you).
     ``mesh``/``devices``/``shard_plan`` shard the (padded) batch over a
     1-D device mesh as in :func:`price_grid`; a ``shard_plan`` must
-    cover the padded batch.
+    cover the padded batch.  The returned ``GridResult.row_pieces``
+    carries the *per-row* PWL knot counts (0 on the no-TC path) — rows
+    are independent vmap lanes, so row ``i``'s count is exactly what
+    pricing contract ``i`` alone would report, which is how the serving
+    layer attaches an exact ``max_pieces`` to each quote it unpads.
 
         >>> from repro.api import price_flat
         >>> res = price_flat(s0=(95.0, 100.0), payoff=("put", "call"),

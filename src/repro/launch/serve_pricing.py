@@ -3,7 +3,7 @@
     PYTHONPATH=src python -m repro.launch.serve_pricing \
         --qps 500 --requests 1000 --deadline-ms 5 --max-batch 64 \
         [--n-steps 16,24] [--tc-fraction 0.0] [--backend jnp] [--seed 0] \
-        [--devices W]
+        [--devices W] [--gateway [--replicas N] [--crash-at K]]
 
 Synthesises a request stream (mixed payoff families, strikes, spots and
 tree depths; an optional transaction-cost slice) arriving at ``--qps``,
@@ -12,11 +12,19 @@ the deadline loop between arrivals — the smallest real deployment shape:
 
     while traffic:  submit due arrivals; service.step()   # deadline tick
 
+With ``--gateway`` the same trace goes through the asyncio
+:class:`repro.serve.gateway.PricingGateway` instead: ``--replicas N``
+worker replicas, a timer-driven deadline flusher (no ``step()`` loop),
+and optionally ``--crash-at K`` to kill replica 0 at its ``K``-th chunk
+mid-replay and watch the failover metrics (requeues, retries,
+restarts).
+
 Prints the service metrics (batches, p50/p99 latency, pad waste,
 contracts/sec, compile + result-cache counters) at the end.  Tuning
 guidance for ``--deadline-ms``/``--max-batch`` lives in
 ``docs/SERVING.md``; the scheduler-vs-per-request benchmark is
-``benchmarks/bench_serve.py``.
+``benchmarks/bench_serve.py``, the gateway availability benchmark
+``benchmarks/bench_gateway.py``.
 """
 from __future__ import annotations
 
@@ -73,6 +81,35 @@ def drive(service: PricingService, trace, *, qps: float,
     return {rid: service.result(rid) for rid in ids}
 
 
+def drive_gateway(trace, *, replicas: int, crash_at, max_batch: int,
+                  deadline_ms: float, capacity: int, backend: str,
+                  n_steps: int, restart_s: float = 1.0) -> tuple:
+    """Replay ``trace`` through the asyncio gateway; returns
+    ({rid: quote}, metrics).  ``crash_at`` injects a replica-0 crash at
+    that chunk call (restarted after ``restart_s``)."""
+    import asyncio
+
+    from ..serve.gateway import PricingGateway
+    from ..serve.replica import FaultyReplica, LocalReplica
+
+    pool = [LocalReplica(name=f"replica-{i}") for i in range(replicas)]
+    if crash_at is not None:
+        pool[0] = FaultyReplica(faults={int(crash_at): "crash"},
+                                name="replica-0")
+
+    async def run():
+        async with PricingGateway(
+                replicas=pool, max_batch=max_batch,
+                deadline_ms=deadline_ms, capacity=capacity,
+                backend=backend, default_n_steps=n_steps,
+                restart_s=restart_s) as gw:
+            rids = [await gw.submit(r) for r in trace]
+            quotes = {rid: await gw.result(rid) for rid in rids}
+            return quotes, gw.metrics()
+
+    return asyncio.run(run())
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--qps", type=float, default=500.0,
@@ -93,15 +130,53 @@ def main() -> None:
                     help="route micro-batches onto a 1-D mesh of this many "
                          "devices, with measured-seconds shard rebalancing "
                          "(see docs/SERVING.md)")
+    ap.add_argument("--gateway", action="store_true",
+                    help="replay through the asyncio multi-replica gateway "
+                         "instead of the cooperative service")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="gateway replica count (with --gateway)")
+    ap.add_argument("--crash-at", type=int, default=None,
+                    help="inject a replica-0 crash at this chunk call "
+                         "(with --gateway; restarted after 1s)")
     args = ap.parse_args()
 
     depths = tuple(int(x) for x in args.n_steps.split(","))
+    trace = synth_trace(args.requests, n_steps=depths,
+                        tc_fraction=args.tc_fraction, seed=args.seed)
+
+    if args.gateway:
+        t0 = time.perf_counter()
+        quotes, m = drive_gateway(
+            trace, replicas=args.replicas, crash_at=args.crash_at,
+            max_batch=args.max_batch, deadline_ms=args.deadline_ms,
+            capacity=args.capacity, backend=args.backend,
+            n_steps=depths[0])
+        wall = time.perf_counter() - t0
+        assert m["completed"] == len(trace) and m["failed"] == 0
+        print(f"{len(trace)} requests through the gateway, "
+              f"{args.replicas} replicas"
+              + (f", crash injected at chunk {args.crash_at}"
+                 if args.crash_at is not None else ""))
+        print(f"  wall            : {wall:8.2f} s "
+              f"({len(trace) / wall:9.1f} requests/s end-to-end)")
+        print(f"  batches         : {m['batches']:8d} "
+              f"(deadline {m['deadline_flushes']} / size "
+              f"{m['size_flushes']})")
+        print(f"  failover        : crashes={m['replica_crashes']} "
+              f"requeues={m['requeues']} retries={m['retries']} "
+              f"restarts={m['replica_restarts']}")
+        print(f"  healthy replicas: {m['healthy_replicas']:8d}")
+        print(f"  latency p50/p99 : {m['p50_latency_ms']:8.2f} / "
+              f"{m['p99_latency_ms']:.2f} ms")
+        sample, q = trace[0], quotes[min(quotes)]
+        print(f"  e.g. {sample.payoff} K={sample.strike:g} "
+              f"S0={sample.s0:g}: ask {q.ask:.6f} bid {q.bid:.6f}")
+        return
+
     service = PricingService(
         max_batch=args.max_batch, deadline_ms=args.deadline_ms,
         capacity=args.capacity, backend=args.backend,
         default_n_steps=depths[0], devices=args.devices)
-    trace = synth_trace(args.requests, n_steps=depths,
-                        tc_fraction=args.tc_fraction, seed=args.seed)
 
     t0 = time.perf_counter()
     quotes = drive(service, trace, qps=args.qps)

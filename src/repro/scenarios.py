@@ -231,6 +231,15 @@ class GridResult:
     call: ``delta_* = dP/ds0``, ``vega_* = dP/dsigma``.  ``shard_info``
     is set when the call ran over a device mesh (or its single-device
     simulation).
+
+    ``max_pieces`` is the batch-wide peak PWL knot count (the scalar the
+    OverflowError check reduces to); ``row_pieces`` is the pre-reduction
+    *per-scenario* peak (shape ``grid.shape``, all zeros on the
+    friction-free path).  Rows are independent lanes, so a scenario's
+    ``row_pieces`` entry is exactly the ``max_pieces`` it would report
+    priced alone — what lets the serving layer stamp each quote with its
+    own count and lets streaming requotes reproduce a full reprice's
+    ``max_pieces`` without repricing untouched rows.
     """
     grid: ScenarioGrid
     ask: np.ndarray
@@ -241,6 +250,7 @@ class GridResult:
     vega_ask: Optional[np.ndarray] = None
     vega_bid: Optional[np.ndarray] = None
     shard_info: Optional[ShardExecInfo] = None
+    row_pieces: Optional[np.ndarray] = None
 
     @property
     def price(self) -> np.ndarray:
@@ -488,9 +498,10 @@ def price_grid_rz(grid: ScenarioGrid, *, capacity: int = 48,
             "re-run with a larger capacity")
     a, da, va = _split_bumps(ask, n, copies, grid.s0, grid.shape)
     b, db, vb = _split_bumps(bid, n, copies, grid.s0, grid.shape)
+    row_pieces = np.asarray(pieces)[:n].reshape(grid.shape).astype(int)
     return GridResult(grid=grid, ask=a, bid=b, max_pieces=max_pieces,
                       delta_ask=da, delta_bid=db, vega_ask=va, vega_bid=vb,
-                      shard_info=shard_info)
+                      shard_info=shard_info, row_pieces=row_pieces)
 
 
 # --------------------------------------------------------------------- #
@@ -611,4 +622,5 @@ def price_grid_notc(grid: ScenarioGrid, *, backend: str = "jnp",
     cp = lambda a: None if a is None else a.copy()
     return GridResult(grid=grid, ask=p, bid=p.copy(), max_pieces=0,
                       delta_ask=dp, delta_bid=cp(dp),
-                      vega_ask=vp, vega_bid=cp(vp), shard_info=shard_info)
+                      vega_ask=vp, vega_bid=cp(vp), shard_info=shard_info,
+                      row_pieces=np.zeros(grid.shape, dtype=int))

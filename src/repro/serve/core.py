@@ -1,0 +1,427 @@
+"""Transport-free scheduler core shared by every serving front end.
+
+PR 6 split ``serve/scheduler.py`` in two.  This module is the half with
+no opinion about *when* or *where* work runs: request normalisation,
+bucket queues, the result LRU, chunk assembly, result distribution and
+metrics — pure bookkeeping over numpy arrays.  The other half is a
+transport:
+
+  * :class:`~repro.serve.scheduler.PricingService` — the original
+    cooperative in-process driver (``submit``/``step`` price inline);
+  * :class:`~repro.serve.gateway.PricingGateway` — the asyncio
+    multi-replica gateway (timer-driven deadline flushes, replica pool,
+    fault recovery, streaming repricing).
+
+The unit of work handed to a transport is a :class:`ChunkSpec` — one
+micro-batch of one bucket, padded to a power of two, carrying plain
+arrays so it can cross a thread (or, later, process) boundary — and the
+unit coming back is a :class:`ChunkResult`.  :func:`execute_chunk` is
+the reference executor over ``repro.api.price_flat``; replicas wrap it.
+
+``ServiceMetrics`` lives here too and is **thread-safe**: gateway
+flushes complete on replica worker threads concurrently, so every
+mutation goes through methods that hold the instance lock
+(:meth:`ServiceMetrics.bump`, :meth:`~ServiceMetrics.add_latency`,
+:meth:`~ServiceMetrics.record_flush`) and :meth:`~ServiceMetrics.snapshot`
+reads under the same lock.  Plain ``metrics.field += 1`` from two
+threads loses updates (a read-modify-write race) — the regression test
+``tests/test_serve.py::test_service_metrics_thread_safe`` pins this.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import OrderedDict
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from ..core.partition import _next_pow2
+from ..scenarios import PAYOFF_FAMILIES
+
+__all__ = ["ServiceMetrics", "SchedulerCore", "ChunkSpec", "ChunkResult",
+           "execute_chunk"]
+
+
+@dataclasses.dataclass(frozen=True)
+class _Pending:
+    rid: int
+    key: tuple            # full scenario tuple (the result-cache key)
+    t_submit: float
+
+
+@dataclasses.dataclass
+class ServiceMetrics:
+    """Counters a pricing front end accumulates (all cumulative).
+
+    Thread-safe: mutate only through :meth:`bump` / :meth:`add_latency`
+    / :meth:`record_flush`; read through :meth:`snapshot`.
+    """
+    requests: int = 0            # single-contract requests submitted
+    completed: int = 0           # ... with a result available
+    batches: int = 0             # engine flushes (micro-batches priced)
+    contracts: int = 0           # real (un-padded) contracts priced
+    padded: int = 0              # lanes submitted to the engines
+    cache_hits: int = 0          # result-LRU short-circuits
+    compile_hits: int = 0        # batch shapes seen before
+    compile_misses: int = 0      # batch shapes compiled fresh
+    engine_seconds: float = 0.0  # time inside the compiled engines
+    engine_batches: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {"notc": 0, "rz": 0})
+    grids: int = 0               # GridRequests priced
+    grid_scenarios: int = 0
+    shard_batches: int = 0       # flushes routed onto the device mesh
+    rebalances: int = 0          # measured-seconds feedbacks folded in
+    # p50/p99 are computed over a bounded window of recent samples so a
+    # long-running service doesn't grow without limit
+    latencies: List[float] = dataclasses.field(default_factory=list)
+    latency_window: int = 4096
+
+    def __post_init__(self):
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------ #
+    # locked mutation
+    # ------------------------------------------------------------------ #
+    def bump(self, **deltas) -> None:
+        """Atomically add ``deltas`` to the named counters."""
+        with self._lock:
+            for name, d in deltas.items():
+                setattr(self, name, getattr(self, name) + d)
+
+    def count_engine(self, engine: str) -> None:
+        with self._lock:
+            self.engine_batches[engine] += 1
+
+    def add_latency(self, seconds: float) -> None:
+        with self._lock:
+            self._add_latency_locked(seconds)
+
+    def _add_latency_locked(self, seconds: float) -> None:
+        self.latencies.append(seconds)
+        if len(self.latencies) > 2 * self.latency_window:
+            del self.latencies[:-self.latency_window]
+
+    def record_flush(self, *, contracts: int, padded: int, engine: str,
+                     seconds: float, latencies) -> None:
+        """Fold one completed micro-batch in as a single atomic update."""
+        with self._lock:
+            self.batches += 1
+            self.contracts += contracts
+            self.padded += padded
+            self.completed += contracts
+            self.engine_seconds += seconds
+            self.engine_batches[engine] += 1
+            for s in latencies:
+                self._add_latency_locked(s)
+
+    # ------------------------------------------------------------------ #
+    # locked read
+    # ------------------------------------------------------------------ #
+    def snapshot(self) -> dict:
+        with self._lock:
+            lat = (np.asarray(self.latencies) if self.latencies
+                   else np.zeros(1))
+            waste = (1.0 - self.contracts / self.padded
+                     if self.padded else 0.0)
+            # before any engine flush there is no throughput to report:
+            # 0.0, not inf — json.dumps would emit non-standard
+            # `Infinity` into the BENCH_serve.json artifact (strict JSON
+            # parsers reject it, and tools/check_bench.py refuses
+            # non-finite metrics)
+            cps = (self.contracts / self.engine_seconds
+                   if self.engine_seconds > 0 else 0.0)
+            return {
+                "requests": self.requests, "completed": self.completed,
+                "batches": self.batches, "contracts": self.contracts,
+                "padded": self.padded, "pad_waste": waste,
+                "cache_hits": self.cache_hits,
+                "compile_hits": self.compile_hits,
+                "compile_misses": self.compile_misses,
+                "engine_seconds": self.engine_seconds,
+                "contracts_per_sec": cps,
+                "engine_batches": dict(self.engine_batches),
+                "grids": self.grids,
+                "grid_scenarios": self.grid_scenarios,
+                "shard_batches": self.shard_batches,
+                "rebalances": self.rebalances,
+                "p50_latency_ms": float(np.percentile(lat, 50) * 1e3),
+                "p99_latency_ms": float(np.percentile(lat, 99) * 1e3),
+            }
+
+
+@dataclasses.dataclass
+class ChunkSpec:
+    """One dispatchable micro-batch: a slice of one bucket, padded.
+
+    Carries plain numpy columns (s0, sigma, rate, maturity, cost_rate,
+    payoff, strike, strike2 — the :func:`repro.api.price_flat`
+    signature) so it can cross a worker boundary without touching the
+    scheduler's queues.  ``mesh``/``shard_plan`` are set by transports
+    that route chunks onto a device mesh.
+    """
+    bucket: tuple
+    requests: List[_Pending]
+    n_steps: int
+    engine: str
+    capacity: int
+    backend: str
+    padded: int
+    cols: tuple
+    mesh: Any = None
+    shard_plan: Any = None
+
+    @property
+    def n(self) -> int:
+        return len(self.requests)
+
+
+@dataclasses.dataclass
+class ChunkResult:
+    """What comes back from pricing a :class:`ChunkSpec`.
+
+    ``row_pieces`` is the exact per-lane peak PWL knot count
+    (``GridResult.row_pieces``) over the padded batch — all zero on the
+    friction-free path — so every delivered quote carries its *own*
+    ``max_pieces``, matching ``price_american`` exactly.  ``seconds`` is
+    the executor-measured wall time inside the engine call.
+    """
+    ask: np.ndarray
+    bid: np.ndarray
+    max_pieces: int
+    row_pieces: np.ndarray
+    seconds: float
+    shard_info: Any = None
+
+
+def execute_chunk(chunk: ChunkSpec) -> ChunkResult:
+    """Price one chunk through ``repro.api.price_flat`` (the reference
+    executor — replicas and the in-process service both route here)."""
+    from ..api import price_flat
+    cols = chunk.cols
+    t0 = time.perf_counter()
+    res = price_flat(
+        s0=np.asarray(cols[0]), sigma=np.asarray(cols[1]),
+        rate=np.asarray(cols[2]), maturity=np.asarray(cols[3]),
+        cost_rate=np.asarray(cols[4]), payoff=tuple(cols[5]),
+        strike=np.asarray(cols[6]), strike2=np.asarray(cols[7]),
+        n_steps=chunk.n_steps, engine=chunk.engine,
+        capacity=chunk.capacity, backend=chunk.backend,
+        pad_to=chunk.padded, mesh=chunk.mesh, shard_plan=chunk.shard_plan)
+    seconds = time.perf_counter() - t0
+    rp = res.row_pieces
+    rp = (np.zeros(chunk.padded, dtype=int) if rp is None
+          else np.asarray(rp).ravel().astype(int))
+    return ChunkResult(ask=np.asarray(res.ask).ravel(),
+                       bid=np.asarray(res.bid).ravel(),
+                       max_pieces=int(res.max_pieces), row_pieces=rp,
+                       seconds=seconds, shard_info=res.shard_info)
+
+
+class SchedulerCore:
+    """Coalescing/bucketing/caching core, with no flush policy attached.
+
+    Owns: request-id allocation, scenario normalisation, the bucket
+    queues keyed ``(n_steps, cost_rate > 0)``, the result LRU, the
+    bounded completed-result store, the compile-key accounting and the
+    shared :class:`ServiceMetrics`.  Transports decide *when* to call
+    :meth:`take_chunk` (size trigger, deadline timer) and *where* the
+    chunk executes (inline, a replica worker); they hand results back
+    through :meth:`complete` or return work through :meth:`requeue`.
+    """
+
+    def __init__(self, *, max_batch: int = 64, deadline_ms: float = 5.0,
+                 capacity: int = 48, backend: str = "jnp",
+                 default_n_steps: int = 100, default_payoff: str = "put",
+                 default_strike: float = 100.0,
+                 result_cache_size: int = 1024, max_results: int = 65536,
+                 clock: Callable[[], float] = time.monotonic,
+                 metrics: Optional[ServiceMetrics] = None):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.max_batch = int(max_batch)
+        self.deadline_s = float(deadline_ms) * 1e-3
+        self.capacity = int(capacity)
+        self.backend = backend
+        self.default_n_steps = int(default_n_steps)
+        self.default_payoff = default_payoff
+        self.default_strike = float(default_strike)
+        self._clock = clock
+        self.max_results = int(max_results)
+        self.buckets: Dict[tuple, List[_Pending]] = {}
+        self._results: OrderedDict = OrderedDict()
+        self._result_cache: OrderedDict = OrderedDict()
+        self._result_cache_size = int(result_cache_size)
+        self._compiled: Dict[tuple, int] = {}
+        self._next_id = 0
+        self.metrics_ = metrics if metrics is not None else ServiceMetrics()
+
+    # ------------------------------------------------------------------ #
+    # request intake
+    # ------------------------------------------------------------------ #
+    def scenario_key(self, req) -> tuple:
+        """Normalise a PriceRequest to the full scenario tuple.
+
+        Unset (None) payoff/strike/n_steps fields take the service
+        defaults — per-request values are always honoured (they batch as
+        payoff *data*, so heterogeneous batches stay one compiled call).
+        """
+        payoff = req.payoff if req.payoff is not None else self.default_payoff
+        if payoff not in PAYOFF_FAMILIES:
+            raise ValueError(f"unknown payoff family {payoff!r}; "
+                             f"supported: {PAYOFF_FAMILIES}")
+        strike = (self.default_strike if req.strike is None
+                  else float(req.strike))
+        strike2 = (strike + 10.0 if getattr(req, "strike2", None) is None
+                   else float(req.strike2))
+        n_steps = (self.default_n_steps if req.n_steps is None
+                   else int(req.n_steps))
+        return (float(req.s0), float(req.sigma), float(req.rate),
+                float(req.maturity), float(req.cost_rate), payoff,
+                strike, strike2, n_steps)
+
+    def submit(self, req):
+        """Enqueue one contract.
+
+        Returns ``(rid, bucket, quote)``: a result-LRU hit completes
+        inline (``bucket`` is None, ``quote`` the cached PriceQuote);
+        otherwise the request joined ``bucket``'s queue and the caller
+        decides whether its length warrants a size-trigger flush.
+        """
+        key = self.scenario_key(req)
+        rid = self._next_id
+        self._next_id += 1
+        self.metrics_.bump(requests=1)
+        now = self._clock()
+        if key in self._result_cache:
+            self._result_cache.move_to_end(key)
+            quote = self._result_cache[key]
+            self.store_result(rid, quote)
+            self.metrics_.bump(cache_hits=1, completed=1)
+            self.metrics_.add_latency(self._clock() - now)
+            return rid, None, quote
+        bucket = (key[8], key[4] > 0.0)          # (n_steps, needs TC engine)
+        self.buckets.setdefault(bucket, []).append(
+            _Pending(rid=rid, key=key, t_submit=now))
+        return rid, bucket, None
+
+    # ------------------------------------------------------------------ #
+    # chunk lifecycle
+    # ------------------------------------------------------------------ #
+    def take_chunk(self, bucket: tuple,
+                   limit: Optional[int] = None) -> Optional[ChunkSpec]:
+        """Pop up to ``limit`` (default ``max_batch``) oldest requests of
+        ``bucket`` as a dispatchable :class:`ChunkSpec` (None if empty)."""
+        pending = self.buckets.get(bucket)
+        if not pending:
+            return None
+        limit = self.max_batch if limit is None else max(1, int(limit))
+        chunk_reqs, rest = pending[:limit], pending[limit:]
+        if rest:
+            self.buckets[bucket] = rest
+        else:
+            self.buckets.pop(bucket, None)
+        n_steps, has_tc = bucket
+        cols = tuple(zip(*(p.key for p in chunk_reqs)))
+        return ChunkSpec(bucket=bucket, requests=chunk_reqs,
+                         n_steps=n_steps,
+                         engine="rz" if has_tc else "notc",
+                         capacity=self.capacity, backend=self.backend,
+                         padded=_next_pow2(len(chunk_reqs)), cols=cols)
+
+    def requeue(self, chunk: ChunkSpec) -> None:
+        """Return a chunk's requests to the *front* of their bucket (no
+        request is ever silently lost on an engine/replica failure)."""
+        self.buckets[chunk.bucket] = (list(chunk.requests)
+                                      + self.buckets.get(chunk.bucket, []))
+
+    def complete(self, chunk: ChunkSpec, res: ChunkResult, now: float, *,
+                 engine_seconds: Optional[float] = None) -> Dict[int, Any]:
+        """Distribute one chunk's results; returns ``{rid: PriceQuote}``.
+
+        Each quote carries its row's exact ``row_pieces`` as
+        ``max_pieces`` — identical to pricing the contract alone through
+        ``price_american`` (lanes are independent in the grid engines).
+        """
+        from ..api import PriceQuote
+        seconds = res.seconds if engine_seconds is None else engine_seconds
+        done: Dict[int, Any] = {}
+        lats = []
+        for i, p in enumerate(chunk.requests):
+            quote = PriceQuote(ask=float(res.ask[i]), bid=float(res.bid[i]),
+                               max_pieces=int(res.row_pieces[i]))
+            self.store_result(p.rid, quote)
+            done[p.rid] = quote
+            self.remember(p.key, quote)
+            lats.append(now - p.t_submit)
+        self.metrics_.record_flush(contracts=chunk.n, padded=chunk.padded,
+                                  engine=chunk.engine, seconds=seconds,
+                                  latencies=lats)
+        plan = chunk.shard_plan
+        self.compile_key_seen(chunk.padded, chunk.n_steps, chunk.engine,
+                              False, backend=chunk.backend,
+                              shard=(plan.n_shards, plan.lanes)
+                              if plan is not None else None)
+        return done
+
+    def compile_key_seen(self, padded: int, n_steps: int, engine: str,
+                         greeks: bool, backend: Optional[str] = None,
+                         shard: Optional[tuple] = None) -> None:
+        """Count a *successful* engine call against its compiled-program
+        key.  Called only after the call returns: a failed call (e.g. a
+        capacity overflow) compiled nothing worth counting, and raising
+        ``capacity`` — a shape parameter, hence part of the key — then
+        retrying is a genuine fresh compile, not a hit.  ``shard`` is
+        ``(n_shards, lanes)`` when the call ran on the device mesh —
+        both change the compiled program's shape, so they are part of
+        the key."""
+        ck = (padded, n_steps, engine,
+              self.backend if backend is None else backend, greeks,
+              self.capacity, shard)
+        if ck in self._compiled:
+            self._compiled[ck] += 1
+            self.metrics_.bump(compile_hits=1)
+        else:
+            self._compiled[ck] = 1
+            self.metrics_.bump(compile_misses=1)
+
+    # ------------------------------------------------------------------ #
+    # results / caches
+    # ------------------------------------------------------------------ #
+    def store_result(self, rid: int, quote) -> None:
+        """Keep completed quotes retrievable via :meth:`result`, bounded
+        to the most recent ``max_results`` so a long-running service
+        doesn't grow without limit — collect results promptly."""
+        self._results[rid] = quote
+        while len(self._results) > self.max_results:
+            self._results.popitem(last=False)
+
+    def remember(self, key: tuple, quote) -> None:
+        if self._result_cache_size <= 0:
+            return
+        self._result_cache[key] = quote
+        self._result_cache.move_to_end(key)
+        while len(self._result_cache) > self._result_cache_size:
+            self._result_cache.popitem(last=False)
+
+    def result(self, rid: int):
+        return self._results.get(rid)
+
+    @property
+    def pending_count(self) -> int:
+        return sum(len(p) for p in self.buckets.values())
+
+    # ------------------------------------------------------------------ #
+    # deadline bookkeeping (policy-free: transports ask, then act)
+    # ------------------------------------------------------------------ #
+    def due_buckets(self, now: float) -> List[tuple]:
+        """Buckets whose oldest request has waited at least the deadline."""
+        return [b for b, pend in self.buckets.items()
+                if pend and now - pend[0].t_submit >= self.deadline_s]
+
+    def next_deadline(self) -> Optional[float]:
+        """Absolute clock time the earliest pending deadline expires
+        (None when no request is queued) — what a timer sleeps until."""
+        oldest = [pend[0].t_submit for pend in self.buckets.values() if pend]
+        return min(oldest) + self.deadline_s if oldest else None

@@ -1,0 +1,98 @@
+"""Replica workers for the asyncio pricing gateway.
+
+A *replica* is anything with a ``price_chunk(ChunkSpec) -> ChunkResult``
+method.  The gateway runs each replica on its own single-thread executor
+(one engine call in flight per replica — jax dispatch is not re-entrant
+per program anyway) and treats the boundary as untrusted: a replica may
+crash (:class:`ReplicaCrash`), hang past the gateway's timeout, or raise
+a *request* error like ``OverflowError`` (the chunk's own fault — the
+replica stays healthy, the chunk retries/errors out).
+
+:class:`LocalReplica` is the in-process reference replica over
+``serve/core.py::execute_chunk``.  :class:`FaultyReplica` wraps any
+replica with a call-indexed fault schedule — the fault-injection
+harness's probe (``tests/test_gateway_faults.py``), exported here so the
+bench can inject the same faults it tests.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional
+
+from .core import ChunkResult, ChunkSpec, execute_chunk
+
+__all__ = ["ReplicaCrash", "LocalReplica", "FaultyReplica"]
+
+
+class ReplicaCrash(RuntimeError):
+    """The replica process/worker died — an infrastructure failure, not a
+    property of the chunk.  The gateway marks the replica dead and
+    re-queues the in-flight chunk to a healthy replica."""
+
+
+class LocalReplica:
+    """In-process replica: prices chunks through the compiled engines.
+
+    Each replica keeps engine warmth implicitly — jax's jit cache is
+    process-wide, so in-process replicas share compilations; the sticky
+    bucket→replica affinity is what keeps *per-process* replicas warm
+    when the pool is later backed by real processes.
+    """
+
+    def __init__(self, name: str = "replica"):
+        self.name = name
+        self.calls = 0
+
+    def price_chunk(self, chunk: ChunkSpec) -> ChunkResult:
+        self.calls += 1
+        return execute_chunk(chunk)
+
+
+class FaultyReplica:
+    """Fault-injection wrapper: fail specific calls by index.
+
+    ``faults`` maps the replica-local call index (0-based, counting every
+    ``price_chunk`` invocation) to a fault kind:
+
+    * ``"crash"``    — raise :class:`ReplicaCrash` (replica dies);
+    * ``"hang"``     — block until :meth:`release` (or ``hang_s``, a
+      safety bound so an un-released hang cannot wedge the test process:
+      executor threads are non-daemon), then die;
+    * ``"overflow"`` — raise ``OverflowError`` (a *request* error: the
+      replica survives and the chunk is retried).
+
+    Un-scheduled calls delegate to the wrapped replica.
+    """
+
+    def __init__(self, inner: Optional[LocalReplica] = None,
+                 faults: Optional[Dict[int, str]] = None, *,
+                 hang_s: float = 60.0, name: str = "faulty"):
+        self.inner = inner if inner is not None else LocalReplica()
+        self.faults = dict(faults or {})
+        self.hang_s = float(hang_s)
+        self.name = name
+        self.calls = 0
+        self._release = threading.Event()
+
+    def release(self) -> None:
+        """Unblock a hanging call (test teardown — without it the worker
+        thread would outlive the test by up to ``hang_s``)."""
+        self._release.set()
+
+    def price_chunk(self, chunk: ChunkSpec) -> ChunkResult:
+        i = self.calls
+        self.calls += 1
+        fault = self.faults.get(i)
+        if fault == "crash":
+            raise ReplicaCrash(f"{self.name}: injected crash on call {i}")
+        if fault == "hang":
+            self._release.wait(self.hang_s)
+            # by the time the hang releases the gateway has long timed
+            # this call out and re-queued the chunk elsewhere; die like
+            # the wedged worker this simulates rather than return a
+            # duplicate (stale) result
+            raise ReplicaCrash(f"{self.name}: hung call {i} released")
+        if fault == "overflow":
+            raise OverflowError(
+                f"{self.name}: injected PWL capacity overflow on call {i}")
+        return self.inner.price_chunk(chunk)

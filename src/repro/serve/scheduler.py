@@ -45,85 +45,26 @@ Design points (see ``docs/SERVING.md`` for the operator's guide):
   compile cache is additionally keyed on the mesh shape and the plan's
   per-device lane count (both change the compiled program).
 
-The service is deliberately single-process and cooperative (no threads:
-``submit``/``step`` do the work inline) — see ``docs/KNOWN_ISSUES.md``
-for the resulting limits and the multi-process outlook.
+Since PR 6 the queueing/caching state machine lives in
+``serve/core.py::SchedulerCore``; this class is the *cooperative,
+in-process transport* over it (``submit``/``step`` price inline on the
+caller's thread).  The asyncio multi-replica front end over the same
+core — timer-driven deadline flushes, replica fault recovery, streaming
+repricing — is ``serve/gateway.py::PricingGateway``; see
+``docs/KNOWN_ISSUES.md`` for when the cooperative service stops being
+enough.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
-from collections import OrderedDict
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, Optional
 
 import numpy as np
 
 from ..core.partition import _next_pow2
-from ..scenarios import PAYOFF_FAMILIES
+from .core import SchedulerCore, ServiceMetrics, execute_chunk
 
 __all__ = ["PricingService", "ServiceMetrics"]
-
-
-@dataclasses.dataclass(frozen=True)
-class _Pending:
-    rid: int
-    key: tuple            # full scenario tuple (the result-cache key)
-    t_submit: float
-
-
-@dataclasses.dataclass
-class ServiceMetrics:
-    """Counters a :class:`PricingService` accumulates (all cumulative)."""
-    requests: int = 0            # single-contract requests submitted
-    completed: int = 0           # ... with a result available
-    batches: int = 0             # engine flushes (micro-batches priced)
-    contracts: int = 0           # real (un-padded) contracts priced
-    padded: int = 0              # lanes submitted to the engines
-    cache_hits: int = 0          # result-LRU short-circuits
-    compile_hits: int = 0        # batch shapes seen before
-    compile_misses: int = 0      # batch shapes compiled fresh
-    engine_seconds: float = 0.0  # time inside the compiled engines
-    engine_batches: Dict[str, int] = dataclasses.field(
-        default_factory=lambda: {"notc": 0, "rz": 0})
-    grids: int = 0               # GridRequests priced
-    grid_scenarios: int = 0
-    shard_batches: int = 0       # flushes routed onto the device mesh
-    rebalances: int = 0          # measured-seconds feedbacks folded in
-    # p50/p99 are computed over a bounded window of recent samples so a
-    # long-running service doesn't grow without limit
-    latencies: List[float] = dataclasses.field(default_factory=list)
-    latency_window: int = 4096
-
-    def add_latency(self, seconds: float) -> None:
-        self.latencies.append(seconds)
-        if len(self.latencies) > 2 * self.latency_window:
-            del self.latencies[:-self.latency_window]
-
-    def snapshot(self) -> dict:
-        lat = np.asarray(self.latencies) if self.latencies else np.zeros(1)
-        waste = (1.0 - self.contracts / self.padded) if self.padded else 0.0
-        # before any engine flush there is no throughput to report: 0.0,
-        # not inf — json.dumps would emit non-standard `Infinity` into the
-        # BENCH_serve.json artifact (strict JSON parsers reject it, and
-        # tools/check_bench.py refuses non-finite metrics)
-        cps = (self.contracts / self.engine_seconds
-               if self.engine_seconds > 0 else 0.0)
-        return {
-            "requests": self.requests, "completed": self.completed,
-            "batches": self.batches, "contracts": self.contracts,
-            "padded": self.padded, "pad_waste": waste,
-            "cache_hits": self.cache_hits,
-            "compile_hits": self.compile_hits,
-            "compile_misses": self.compile_misses,
-            "engine_seconds": self.engine_seconds,
-            "contracts_per_sec": cps,
-            "engine_batches": dict(self.engine_batches),
-            "grids": self.grids, "grid_scenarios": self.grid_scenarios,
-            "shard_batches": self.shard_batches,
-            "rebalances": self.rebalances,
-            "p50_latency_ms": float(np.percentile(lat, 50) * 1e3),
-            "p99_latency_ms": float(np.percentile(lat, 99) * 1e3),
-        }
 
 
 class PricingService:
@@ -138,9 +79,12 @@ class PricingService:
                  devices: Optional[int] = None, mesh=None,
                  rebalance_ema: float = 0.5,
                  clock: Callable[[], float] = time.monotonic):
-        if max_batch < 1:
-            raise ValueError("max_batch must be >= 1")
-        self.max_batch = int(max_batch)
+        self.core = SchedulerCore(
+            max_batch=max_batch, deadline_ms=deadline_ms, capacity=capacity,
+            backend=backend, default_n_steps=default_n_steps,
+            default_payoff=default_payoff, default_strike=default_strike,
+            result_cache_size=result_cache_size, max_results=max_results,
+            clock=clock)
         # device-mesh routing (lazy imports: the jax-touching modules load
         # only when sharding is actually requested)
         if devices is not None or mesh is not None:
@@ -152,48 +96,62 @@ class PricingService:
         else:
             self._mesh, self._n_shards = None, 1
             self._rebalancer = None
-        self.deadline_s = float(deadline_ms) * 1e-3
-        self.capacity = int(capacity)
-        self.backend = backend
-        self.default_n_steps = int(default_n_steps)
-        self.default_payoff = default_payoff
-        self.default_strike = float(default_strike)
         self.min_grid_bucket = (self.max_batch if min_grid_bucket is None
                                 else int(min_grid_bucket))
         self._clock = clock
-        self.max_results = int(max_results)
-        self._buckets: Dict[tuple, List[_Pending]] = {}
-        self._results: OrderedDict = OrderedDict()
-        self._result_cache: OrderedDict = OrderedDict()
-        self._result_cache_size = int(result_cache_size)
-        self._compiled: Dict[tuple, int] = {}
-        self._next_id = 0
         self._deferred_error: Optional[BaseException] = None
-        self.metrics_ = ServiceMetrics()
+
+    # core-owned configuration/state, re-exposed under the historical
+    # names so operator code (and the shard tests) keep working
+    @property
+    def max_batch(self) -> int:
+        return self.core.max_batch
+
+    @property
+    def deadline_s(self) -> float:
+        return self.core.deadline_s
+
+    @property
+    def capacity(self) -> int:
+        return self.core.capacity
+
+    @property
+    def backend(self) -> str:
+        return self.core.backend
+
+    @property
+    def default_n_steps(self) -> int:
+        return self.core.default_n_steps
+
+    @property
+    def default_payoff(self) -> str:
+        return self.core.default_payoff
+
+    @property
+    def default_strike(self) -> float:
+        return self.core.default_strike
+
+    @property
+    def max_results(self) -> int:
+        return self.core.max_results
+
+    @property
+    def metrics_(self) -> ServiceMetrics:
+        return self.core.metrics_
+
+    @property
+    def _buckets(self) -> Dict:
+        return self.core.buckets
+
+    @property
+    def _compiled(self) -> Dict[tuple, int]:
+        return self.core._compiled
 
     # ------------------------------------------------------------------ #
     # request intake
     # ------------------------------------------------------------------ #
     def _scenario_key(self, req) -> tuple:
-        """Normalise a PriceRequest to the full scenario tuple.
-
-        Unset (None) payoff/strike/n_steps fields take the service
-        defaults — per-request values are always honoured (they batch as
-        payoff *data*, so heterogeneous batches stay one compiled call).
-        """
-        payoff = req.payoff if req.payoff is not None else self.default_payoff
-        if payoff not in PAYOFF_FAMILIES:
-            raise ValueError(f"unknown payoff family {payoff!r}; "
-                             f"supported: {PAYOFF_FAMILIES}")
-        strike = (self.default_strike if req.strike is None
-                  else float(req.strike))
-        strike2 = (strike + 10.0 if getattr(req, "strike2", None) is None
-                   else float(req.strike2))
-        n_steps = (self.default_n_steps if req.n_steps is None
-                   else int(req.n_steps))
-        return (float(req.s0), float(req.sigma), float(req.rate),
-                float(req.maturity), float(req.cost_rate), payoff,
-                strike, strike2, n_steps)
+        return self.core.scenario_key(req)
 
     def submit(self, req) -> int:
         """Enqueue one contract; returns a request id.
@@ -201,22 +159,9 @@ class PricingService:
         Flushes the request's bucket inline if it reaches ``max_batch``
         (size trigger).  A result-cache hit completes immediately.
         """
-        key = self._scenario_key(req)
-        rid = self._next_id
-        self._next_id += 1
-        self.metrics_.requests += 1
-        now = self._clock()
-        if key in self._result_cache:
-            self._result_cache.move_to_end(key)
-            self._store_result(rid, self._result_cache[key])
-            self.metrics_.cache_hits += 1
-            self.metrics_.completed += 1
-            self.metrics_.add_latency(self._clock() - now)
-            return rid
-        bucket = (key[8], key[4] > 0.0)          # (n_steps, needs TC engine)
-        self._buckets.setdefault(bucket, []).append(
-            _Pending(rid=rid, key=key, t_submit=now))
-        if len(self._buckets[bucket]) >= self.max_batch:
+        rid, bucket, _ = self.core.submit(req)
+        if (bucket is not None
+                and len(self.core.buckets[bucket]) >= self.max_batch):
             # an engine error here must not swallow the request id the
             # caller is owed: the chunk is already re-queued by
             # _flush_bucket, so defer the exception to the next
@@ -233,23 +178,8 @@ class PricingService:
     def _compile_key_seen(self, padded: int, n_steps: int, engine: str,
                           greeks: bool, backend: Optional[str] = None,
                           shard: Optional[tuple] = None) -> None:
-        """Count a *successful* engine call against its compiled-program
-        key.  Called only after the call returns: a failed call (e.g. a
-        capacity overflow) compiled nothing worth counting, and raising
-        ``capacity`` — a shape parameter, hence part of the key — then
-        retrying is a genuine fresh compile, not a hit.  ``shard`` is
-        ``(n_shards, lanes)`` when the call ran on the device mesh —
-        both change the compiled program's shape, so they are part of
-        the key."""
-        ck = (padded, n_steps, engine,
-              self.backend if backend is None else backend, greeks,
-              self.capacity, shard)
-        if ck in self._compiled:
-            self._compiled[ck] += 1
-            self.metrics_.compile_hits += 1
-        else:
-            self._compiled[ck] = 1
-            self.metrics_.compile_misses += 1
+        self.core.compile_key_seen(padded, n_steps, engine, greeks,
+                                   backend=backend, shard=shard)
 
     # ------------------------------------------------------------------ #
     # device-mesh shard planning / rebalance hook
@@ -291,13 +221,13 @@ class PricingService:
         info = getattr(res, "shard_info", None)
         if self._rebalancer is None or info is None:
             return
-        self.metrics_.shard_batches += 1
+        self.metrics_.bump(shard_batches=1)
         work = np.asarray(info.measured_work, np.float64)
         if work.sum() <= 0 or seconds <= 0:
             return                   # nothing measurable to fold in
         per_shard = seconds * work / work.sum()
         self._rebalancer.observe(bucket, info.plan, per_shard)
-        self.metrics_.rebalances += 1
+        self.metrics_.bump(rebalances=1)
 
     def observe_shard_seconds(self, bucket: tuple, plan,
                               per_shard_seconds) -> None:
@@ -306,7 +236,7 @@ class PricingService:
         if self._rebalancer is None:
             raise ValueError("service is not sharded (pass devices=/mesh=)")
         self._rebalancer.observe(bucket, plan, per_shard_seconds)
-        self.metrics_.rebalances += 1
+        self.metrics_.bump(rebalances=1)
 
     def shard_speed(self, bucket: tuple):
         """Current per-device speed estimates for ``bucket`` (None when
@@ -316,75 +246,38 @@ class PricingService:
         return self._rebalancer.speed(bucket, self._n_shards)
 
     def _flush_bucket(self, bucket: tuple) -> Dict[int, "PriceQuote"]:
-        from ..api import PriceQuote, price_flat
-        pending = self._buckets.pop(bucket, [])
-        n_steps, has_tc = bucket
         done: Dict[int, "PriceQuote"] = {}
-        while pending:
-            chunk, pending = pending[:self.max_batch], pending[self.max_batch:]
-            n = len(chunk)
-            padded = _next_pow2(n)
-            cols = list(zip(*(p.key for p in chunk)))
-            engine = "rz" if has_tc else "notc"
-            plan = self._shard_plan(bucket, cols[4], n_steps, padded)
+        while True:
+            chunk = self.core.take_chunk(bucket, self.max_batch)
+            if chunk is None:
+                break
+            chunk.mesh = self._mesh
+            chunk.shard_plan = self._shard_plan(
+                bucket, chunk.cols[4], chunk.n_steps, chunk.padded)
             t0 = self._clock()
             try:
-                res = price_flat(
-                    s0=np.asarray(cols[0]), sigma=np.asarray(cols[1]),
-                    rate=np.asarray(cols[2]), maturity=np.asarray(cols[3]),
-                    cost_rate=np.asarray(cols[4]), payoff=tuple(cols[5]),
-                    strike=np.asarray(cols[6]), strike2=np.asarray(cols[7]),
-                    n_steps=n_steps, engine=engine, capacity=self.capacity,
-                    backend=self.backend, pad_to=padded,
-                    mesh=self._mesh, shard_plan=plan)
+                res = execute_chunk(chunk)
             except Exception:
-                # no request is ever silently lost: re-queue this chunk and
-                # everything behind it, then surface the error (e.g. a PWL
-                # OverflowError — raise `capacity` and flush again)
-                self._buckets[bucket] = (chunk + pending
-                                         + self._buckets.get(bucket, []))
+                # no request is ever silently lost: re-queue this chunk
+                # (the rest of the bucket is still queued behind it),
+                # then surface the error (e.g. a PWL OverflowError —
+                # raise `capacity` and flush again)
+                self.core.requeue(chunk)
                 raise
             now = self._clock()
             self._observe_flush(bucket, res, now - t0)
-            self._compile_key_seen(
-                padded, n_steps, engine, False,
-                shard=(plan.n_shards, plan.lanes) if plan else None)
-            ask, bid = res.ask.ravel(), res.bid.ravel()
-            for i, p in enumerate(chunk):
-                # max_pieces is the *micro-batch* peak PWL knot count — a
-                # conservative per-contract upper bound (the engines reduce
-                # over the batch); 0 on the no-TC path as everywhere else
-                quote = PriceQuote(ask=float(ask[i]), bid=float(bid[i]),
-                                   max_pieces=res.max_pieces)
-                self._store_result(p.rid, quote)
-                done[p.rid] = quote
-                self._remember(p.key, quote)
-                self.metrics_.add_latency(now - p.t_submit)
-            m = self.metrics_
-            m.batches += 1
-            m.contracts += n
-            m.padded += padded
-            m.completed += n
-            m.engine_seconds += now - t0
-            m.engine_batches[engine] += 1
+            # the cooperative service measures engine time with its own
+            # clock (fake-clock tests steer it); the executor-measured
+            # res.seconds is what the gateway's replica workers report
+            done.update(self.core.complete(chunk, res, now,
+                                           engine_seconds=now - t0))
         return done
 
     def _store_result(self, rid: int, quote) -> None:
-        """Keep completed quotes retrievable via :meth:`result`, bounded to
-        the most recent ``max_results`` so a long-running service doesn't
-        grow without limit — collect results promptly (the driver loop
-        does; see docs/KNOWN_ISSUES.md)."""
-        self._results[rid] = quote
-        while len(self._results) > self.max_results:
-            self._results.popitem(last=False)
+        self.core.store_result(rid, quote)
 
     def _remember(self, key: tuple, quote) -> None:
-        if self._result_cache_size <= 0:
-            return
-        self._result_cache[key] = quote
-        self._result_cache.move_to_end(key)
-        while len(self._result_cache) > self._result_cache_size:
-            self._result_cache.popitem(last=False)
+        self.core.remember(key, quote)
 
     def _raise_deferred(self) -> None:
         if self._deferred_error is not None:
@@ -398,10 +291,8 @@ class PricingService:
         from a ``submit`` size-trigger flush re-raises here."""
         self._raise_deferred()
         now = self._clock() if now is None else now
-        due = [b for b, pend in self._buckets.items()
-               if pend and now - pend[0].t_submit >= self.deadline_s]
         done: Dict[int, "PriceQuote"] = {}
-        for bucket in due:
+        for bucket in self.core.due_buckets(now):
             done.update(self._flush_bucket(bucket))
         return done
 
@@ -412,7 +303,7 @@ class PricingService:
         here."""
         self._raise_deferred()
         done: Dict[int, "PriceQuote"] = {}
-        for bucket in list(self._buckets):
+        for bucket in list(self.core.buckets):
             done.update(self._flush_bucket(bucket))
         return done
 
@@ -422,14 +313,14 @@ class PricingService:
     def result(self, rid: int):
         """The :class:`~repro.api.PriceQuote` for ``rid`` (None if still
         pending — call :meth:`step` or :meth:`flush`)."""
-        return self._results.get(rid)
+        return self.core.result(rid)
 
     @property
     def pending_count(self) -> int:
-        return sum(len(p) for p in self._buckets.values())
+        return self.core.pending_count
 
     def metrics(self) -> dict:
-        return self.metrics_.snapshot()
+        return self.core.metrics_.snapshot()
 
     # ------------------------------------------------------------------ #
     # whole-grid requests (cartesian surfaces)
@@ -471,21 +362,22 @@ class PricingService:
                          backend=req.backend, mesh=self._mesh,
                          shard_plan=plan)
         elapsed = self._clock() - t0
-        self.metrics_.engine_seconds += elapsed
+        self.metrics_.bump(engine_seconds=elapsed, grids=1,
+                           grid_scenarios=n)
         self._observe_flush(gkey, res, elapsed)
         info = res.shard_info
         self._compile_key_seen(bucket, grid.n_steps, engine, req.greeks,
                                backend=req.backend,
                                shard=(info.plan.n_shards, info.plan.lanes)
                                if info else None)
-        self.metrics_.engine_batches[engine] += 1
-        self.metrics_.grids += 1
-        self.metrics_.grid_scenarios += n
+        self.metrics_.count_engine(engine)
         cut = lambda a: (None if a is None
                          else a.ravel()[:n].reshape(grid.shape))
+        rp = getattr(res, "row_pieces", None)
         return GridResult(
             grid=grid, ask=cut(res.ask), bid=cut(res.bid),
             max_pieces=res.max_pieces,
             delta_ask=cut(res.delta_ask), delta_bid=cut(res.delta_bid),
             vega_ask=cut(res.vega_ask), vega_bid=cut(res.vega_bid),
-            shard_info=res.shard_info)
+            shard_info=res.shard_info,
+            row_pieces=None if rp is None else cut(np.asarray(rp)))

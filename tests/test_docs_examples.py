@@ -48,6 +48,10 @@ def test_serving_guide_snippets_execute():
     m = ns["service"].metrics()
     assert m["completed"] == m["requests"] == 4
     assert m["cache_hits"] == 1
+    # ... and the gateway section leaves its results in scope too
+    assert ns["gw_metrics"]["completed"] == 2
+    assert ns["gw_metrics"]["replica_crashes"] == 0
+    assert ns["stream_summary"]["staleness_p99_ms"] >= 0.0
 
 
 def test_markdown_links_resolve():

@@ -1,0 +1,122 @@
+"""Deadline semantics of the gateway's timer-driven flusher, under a
+fake clock.
+
+Regression target: the cooperative ``PricingService`` only honours
+deadlines inside ``step()`` (scheduler.py — the driver must poll), so a
+driver that stops polling strands queued requests forever.  The gateway
+owns its own timer: a submitted request must be flushed within
+``deadline_ms`` with **zero** driver calls — nothing but ``submit`` and
+``result`` ever touches the gateway here.
+
+Time is fully faked (``clock``/``sleeper`` injection): the flusher's
+timer arithmetic is asserted exactly — the dispatch happens at
+``t_submit + deadline``, not at some poll interval after it.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.serve.core import ChunkResult
+from repro.serve.engine import PriceRequest
+from repro.serve.gateway import PricingGateway
+from repro.serve.scheduler import PricingService
+
+pytestmark = pytest.mark.gateway
+
+
+class FakeTime:
+    """Deterministic clock: time only moves when the gateway sleeps."""
+
+    def __init__(self):
+        self.t = 0.0
+        self.sleeps = []
+
+    def clock(self) -> float:
+        return self.t
+
+    async def sleep(self, seconds: float) -> None:
+        # yield once so other ready tasks run, then jump the clock —
+        # the flusher's requested timeout IS the time that passes
+        await asyncio.sleep(0)
+        self.sleeps.append(seconds)
+        self.t += seconds
+
+
+class StubReplica:
+    """Instant engine-free replica (this file tests *timing*, not
+    prices — the oracle checks live in test_gateway_faults.py)."""
+
+    name = "stub"
+
+    def price_chunk(self, chunk) -> ChunkResult:
+        pad = chunk.padded
+        return ChunkResult(ask=np.full(pad, 2.0), bid=np.full(pad, 1.0),
+                           max_pieces=0, row_pieces=np.zeros(pad, int),
+                           seconds=1e-4)
+
+
+def _req(s0=100.0):
+    return PriceRequest(s0=s0, sigma=0.2, rate=0.1, maturity=0.25,
+                        cost_rate=0.0, n_steps=8)
+
+
+def test_gateway_flushes_at_deadline_with_zero_driver_calls():
+    """The quote arrives, dispatched by the timer at exactly
+    ``t_submit + deadline`` — the driver never polls anything."""
+    fake = FakeTime()
+    dispatch_times = []
+
+    async def main():
+        async with PricingGateway(
+                replicas=[StubReplica()], max_batch=64, deadline_ms=50.0,
+                clock=fake.clock, sleeper=fake.sleep) as gw:
+            # spy on dispatch before the flusher's first iteration runs
+            # (no await between start and here, so it cannot have run)
+            orig = gw._dispatch_bucket
+            gw._dispatch_bucket = lambda b, force=False: (
+                dispatch_times.append(fake.t), orig(b, force))
+            rid = await gw.submit(_req())
+            quote = await gw.result(rid)
+            return quote, gw.metrics()
+
+    quote, m = asyncio.run(main())
+    assert quote.ask == 2.0                       # delivered
+    # the gateway has no step(): there is nothing a driver *could* poll
+    assert not hasattr(PricingGateway, "step")
+    assert dispatch_times == [pytest.approx(0.05)]
+    assert m["deadline_flushes"] == 1
+    assert m["size_flushes"] == 0
+
+
+def test_deadline_batch_coalesces_all_waiting_requests():
+    """Requests accumulated under the deadline flush as ONE chunk when
+    the oldest request's deadline expires."""
+    fake = FakeTime()
+
+    async def main():
+        async with PricingGateway(
+                replicas=[StubReplica()], max_batch=64, deadline_ms=50.0,
+                clock=fake.clock, sleeper=fake.sleep,
+                result_cache_size=0) as gw:
+            rids = [await gw.submit(_req(95.0 + i)) for i in range(3)]
+            quotes = [await gw.result(r) for r in rids]
+            return quotes, gw.metrics()
+
+    quotes, m = asyncio.run(main())
+    assert len(quotes) == 3
+    assert m["batches"] == 1                      # one coalesced flush
+    assert m["deadline_flushes"] == 1
+    assert m["contracts"] == 3 and m["padded"] == 4
+
+
+def test_cooperative_service_deadline_still_requires_step_polling():
+    """Documents the bug the gateway fixes: the in-process service's
+    deadline only fires when the driver calls step()."""
+    t = [0.0]
+    svc = PricingService(max_batch=64, deadline_ms=50.0,
+                         clock=lambda: t[0])
+    rid = svc.submit(_req())
+    t[0] = 10.0                    # deadline LONG expired...
+    assert svc.result(rid) is None  # ...but nothing happens without
+    assert svc.pending_count == 1   # a driver step() poll

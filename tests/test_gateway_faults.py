@@ -1,0 +1,287 @@
+"""Fault-injection harness for the asyncio multi-replica gateway.
+
+The deliverable under test is *robustness*: with replicas crashing,
+hanging past the timeout, or raising request errors mid-flush, the
+gateway must re-queue the in-flight chunk to a healthy replica (bounded
+retry + exponential backoff, all counted in metrics), deliver 100% of
+submitted quotes, and every delivered quote must still match the
+``price_american`` oracle at 1e-9 — including its per-contract
+``max_pieces``.  Faults are injected with
+``repro.serve.replica.FaultyReplica`` (a call-indexed fault schedule);
+overload degradation and the shedding threshold are exercised with a
+wedged replica so nothing ever completes.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.api import price_american
+from repro.serve.engine import PriceRequest
+from repro.serve.gateway import (GatewayOverloaded, PricingGateway)
+from repro.serve.replica import FaultyReplica, LocalReplica
+from repro.serve.streaming import StreamingBook, Tick
+
+pytestmark = pytest.mark.gateway
+
+TOL = 1e-9
+N_STEPS = 8
+CAPACITY = 16
+
+
+def _req(s0=100.0, sigma=0.2, rate=0.1, maturity=0.25, cost_rate=0.0, **kw):
+    kw.setdefault("n_steps", N_STEPS)
+    return PriceRequest(s0=s0, sigma=sigma, rate=rate, maturity=maturity,
+                        cost_rate=cost_rate, **kw)
+
+
+def _mixed_requests():
+    """Both buckets (frictionless + TC), mixed payoff families/strikes."""
+    return [
+        _req(s0=95.0, payoff="put", strike=100.0),
+        _req(s0=105.0, payoff="bull_spread", strike=95.0),
+        _req(s0=100.0, payoff="call", strike=95.0),
+        _req(s0=98.0, payoff="put", strike=100.0, cost_rate=0.01),
+        _req(s0=102.0, payoff="call", strike=95.0, cost_rate=0.005),
+        _req(s0=100.0, payoff="put", strike=105.0, cost_rate=0.01),
+    ]
+
+
+def _assert_oracle(req, quote):
+    ref = price_american(
+        s0=req.s0, sigma=req.sigma, rate=req.rate, maturity=req.maturity,
+        n_steps=req.n_steps, payoff=req.payoff or "put",
+        strike=req.strike if req.strike is not None else 100.0,
+        cost_rate=req.cost_rate, capacity=CAPACITY)
+    assert abs(quote.ask - ref.ask) < TOL
+    assert abs(quote.bid - ref.bid) < TOL
+    assert quote.max_pieces == ref.max_pieces
+
+
+async def _submit_await_all(gw, reqs):
+    rids = [await gw.submit(r) for r in reqs]
+    return [await gw.result(rid) for rid in rids]
+
+
+def test_crashed_replica_chunk_requeued_no_request_dropped():
+    """A replica crash mid-run: its in-flight chunk fails over to the
+    healthy replica; every quote arrives and matches the oracle."""
+    crashy = FaultyReplica(faults={0: "crash"}, name="crashy")
+
+    async def main():
+        async with PricingGateway(
+                replicas=[crashy, LocalReplica("good")], max_batch=4,
+                deadline_ms=2.0, capacity=CAPACITY,
+                default_n_steps=N_STEPS, retry_backoff_s=0.01,
+                result_cache_size=0) as gw:
+            reqs = _mixed_requests()
+            quotes = await _submit_await_all(gw, reqs)
+            return reqs, quotes, gw.metrics(), gw.replica_states()
+
+    reqs, quotes, m, states = asyncio.run(main())
+    for req, quote in zip(reqs, quotes):
+        _assert_oracle(req, quote)
+    assert m["completed"] == m["requests"] == len(reqs)   # nothing dropped
+    assert m["failed"] == 0
+    assert m["replica_crashes"] == 1
+    assert m["requeues"] >= 1 and m["retries"] >= 1       # chunk re-queued
+    assert m["backoffs"] >= 1 and m["backoff_seconds"] > 0
+    assert m["healthy_replicas"] == 1
+    dead = [s for s in states if not s["healthy"]]
+    assert [s["dead_reason"] for s in dead] == ["crashed"]
+
+
+def test_hung_replica_times_out_and_chunk_fails_over():
+    """A replica that hangs past ``replica_timeout_s`` is declared dead;
+    its chunk re-queues to the healthy replica (sticky bucket re-homed),
+    and the hung worker thread is released at teardown."""
+    hangy = FaultyReplica(faults={0: "hang"}, hang_s=30.0, name="hangy")
+
+    async def main():
+        async with PricingGateway(
+                replicas=[hangy, LocalReplica("good")], max_batch=4,
+                deadline_ms=2.0, capacity=CAPACITY,
+                default_n_steps=N_STEPS, retry_backoff_s=0.01,
+                replica_timeout_s=0.5, result_cache_size=0) as gw:
+            reqs = _mixed_requests()
+            quotes = await _submit_await_all(gw, reqs)
+            return reqs, quotes, gw.metrics()
+
+    try:
+        reqs, quotes, m = asyncio.run(main())
+    finally:
+        hangy.release()
+    for req, quote in zip(reqs, quotes):
+        _assert_oracle(req, quote)
+    assert m["completed"] == len(reqs) and m["failed"] == 0
+    assert m["replica_hangs"] == 1
+    assert m["requeues"] >= 1
+    assert m["affinity_moves"] >= 1        # sticky bucket moved to 'good'
+    assert m["healthy_replicas"] == 1
+
+
+def test_crash_plus_hang_together_still_delivers_everything():
+    """The acceptance scenario: one replica crashed AND another hung
+    mid-run — the surviving replica still delivers 100% of quotes, all
+    at 1e-9 vs price_american."""
+    crashy = FaultyReplica(faults={0: "crash"}, name="crashy")
+    hangy = FaultyReplica(faults={0: "hang"}, hang_s=30.0, name="hangy")
+
+    async def main():
+        async with PricingGateway(
+                replicas=[crashy, hangy, LocalReplica("good")],
+                max_batch=4, deadline_ms=2.0, capacity=CAPACITY,
+                default_n_steps=N_STEPS, retry_backoff_s=0.01,
+                replica_timeout_s=0.5, result_cache_size=0) as gw:
+            reqs = _mixed_requests()
+            quotes = await _submit_await_all(gw, reqs)
+            return reqs, quotes, gw.metrics()
+
+    try:
+        reqs, quotes, m = asyncio.run(main())
+    finally:
+        hangy.release()
+    for req, quote in zip(reqs, quotes):
+        _assert_oracle(req, quote)
+    assert m["completed"] == m["requests"] == len(reqs)
+    assert m["failed"] == 0
+    assert m["replica_crashes"] == 1 and m["replica_hangs"] == 1
+    assert m["healthy_replicas"] == 1
+
+
+def test_overflow_mid_flush_retries_on_same_replica():
+    """An OverflowError is a *request* error, not a replica failure:
+    the chunk is re-queued (with backoff) but the replica stays healthy
+    and prices the retry itself."""
+    flaky = FaultyReplica(faults={0: "overflow"}, name="flaky")
+
+    async def main():
+        async with PricingGateway(
+                replicas=[flaky], max_batch=4, deadline_ms=2.0,
+                capacity=CAPACITY, default_n_steps=N_STEPS,
+                retry_backoff_s=0.01, result_cache_size=0) as gw:
+            reqs = [_req(s0=97.0, cost_rate=0.01),
+                    _req(s0=103.0, cost_rate=0.01, payoff="call",
+                         strike=95.0)]
+            quotes = await _submit_await_all(gw, reqs)
+            return reqs, quotes, gw.metrics()
+
+    reqs, quotes, m = asyncio.run(main())
+    for req, quote in zip(reqs, quotes):
+        _assert_oracle(req, quote)
+    assert m["retries"] == 1 and m["requeues"] == 1
+    assert m["backoffs"] == 1
+    assert m["replica_crashes"] == m["replica_hangs"] == 0
+    assert m["healthy_replicas"] == 1      # overflow does not kill it
+    assert flaky.calls == 2                # failed call + successful retry
+
+
+def test_retries_exhausted_delivers_the_error_not_silence():
+    """When every retry fails, the error is *delivered* on each request's
+    future — failure is an answer; nothing is dropped on the floor."""
+    bad = FaultyReplica(faults={i: "overflow" for i in range(10)},
+                        name="always-bad")
+
+    async def main():
+        async with PricingGateway(
+                replicas=[bad], max_batch=4, deadline_ms=2.0,
+                capacity=CAPACITY, default_n_steps=N_STEPS,
+                max_retries=1, retry_backoff_s=0.0,
+                result_cache_size=0) as gw:
+            rid = await gw.submit(_req(s0=99.0, cost_rate=0.01))
+            with pytest.raises(OverflowError):
+                await gw.result(rid)
+            return gw.metrics()
+
+    m = asyncio.run(main())
+    assert m["failed"] == 1
+    assert m["requeues"] == 2              # initial failure + failed retry
+    assert m["retries"] == 1               # bounded by max_retries
+
+
+def test_single_replica_crash_restarts_after_backoff():
+    """With restart_s set, a dead replica pool respawns via the factory
+    and the waiting chunk completes on the fresh replica."""
+    async def main():
+        async with PricingGateway(
+                replicas=[FaultyReplica(faults={0: "crash"})],
+                max_batch=4, deadline_ms=2.0, capacity=CAPACITY,
+                default_n_steps=N_STEPS, retry_backoff_s=0.01,
+                restart_s=0.05, result_cache_size=0) as gw:
+            reqs = [_req(s0=96.0), _req(s0=104.0, payoff="call",
+                                        strike=95.0)]
+            quotes = await _submit_await_all(gw, reqs)
+            return reqs, quotes, gw.metrics()
+
+    reqs, quotes, m = asyncio.run(main())
+    for req, quote in zip(reqs, quotes):
+        _assert_oracle(req, quote)
+    assert m["replica_crashes"] == 1
+    assert m["replica_restarts"] == 1
+    assert m["healthy_replicas"] == 1
+    assert m["failed"] == 0
+
+
+def test_sustained_overload_halves_max_batch_then_sheds():
+    """Under sustained overload (a wedged replica, unbounded intake) the
+    gateway degrades gracefully — effective max_batch halves down to
+    min_batch — before it finally refuses work with GatewayOverloaded."""
+    wedged = FaultyReplica(faults={i: "hang" for i in range(64)},
+                           hang_s=30.0, name="wedged")
+
+    async def main():
+        gw = PricingGateway(
+            replicas=[wedged], max_batch=4, deadline_ms=1000.0,
+            capacity=CAPACITY, default_n_steps=N_STEPS,
+            replica_timeout_s=20.0, overload_factor=1.0,
+            overload_grace_s=0.0, shed_factor=4.0)
+        await gw.start()
+        try:
+            with pytest.raises(GatewayOverloaded):
+                for i in range(64):
+                    await gw.submit(_req(s0=90.0 + 0.25 * i))
+            return gw.metrics(), gw.effective_max_batch
+        finally:
+            await gw.aclose(drain=False)
+
+    try:
+        m, eff = asyncio.run(main())
+    finally:
+        wedged.release()
+    assert m["degraded"] >= 2              # 4 -> 2 -> 1
+    assert eff == 1
+    assert m["shed"] == 1
+    assert m["replica_crashes"] == 0       # wedged, not yet timed out
+
+
+def test_streaming_survives_replica_crash_mid_feed():
+    """Streaming mode rides the same failover: a replica crash between
+    ticks loses no requote, and the incrementally maintained book still
+    equals a full reprice of the post-tick book."""
+    crashy = FaultyReplica(faults={1: "crash"}, name="crashy")
+
+    async def main():
+        async with PricingGateway(
+                replicas=[crashy, LocalReplica("good")], max_batch=8,
+                deadline_ms=2.0, capacity=CAPACITY, retry_backoff_s=0.01,
+                result_cache_size=0) as gw:
+            book = StreamingBook.mixed(n_underlyings=2, per_underlying=4,
+                                       n_steps=(N_STEPS,),
+                                       capacity=CAPACITY)
+            book.full_reprice()
+            ticks = [Tick(0, "s0", 104.0), Tick(1, "sigma", 0.3),
+                     Tick(0, "s0", 97.5), Tick(1, "s0", 101.0)]
+            summary = await gw.run_stream(book, ticks)
+            return book, summary, gw.metrics()
+
+    book, summary, m = asyncio.run(main())
+    assert m["replica_crashes"] == 1
+    assert summary["ticks"] == 4
+    assert summary["rows_requoted"] == 16   # 4 rows per underlying tick
+    assert summary["staleness_p99_ms"] > 0
+    reference = book.copy()
+    reference.full_reprice()
+    np.testing.assert_allclose(book.ask, reference.ask, rtol=0, atol=TOL)
+    np.testing.assert_allclose(book.bid, reference.bid, rtol=0, atol=TOL)
+    np.testing.assert_array_equal(book.row_pieces, reference.row_pieces)
+    assert book.max_pieces == reference.max_pieces

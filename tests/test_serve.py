@@ -282,3 +282,55 @@ def test_pricing_engine_batches_and_pads():
         ask, bid = out[rid]
         assert ask == pytest.approx(ref.ask, abs=1e-9)
         assert bid == pytest.approx(ref.bid, abs=1e-9)
+
+
+def test_service_metrics_thread_safe_under_concurrent_flushes():
+    """Regression (PR 6): gateway flushes complete on replica worker
+    threads concurrently, so ServiceMetrics mutation must be locked.
+    The unlocked implementation (bare ``self.field += 1``) loses updates
+    under a read-modify-write race; with a tiny switch interval this
+    test catches it reliably."""
+    import sys
+    import threading
+
+    from repro.serve.core import ServiceMetrics
+
+    m = ServiceMetrics(latency_window=256)
+    n_threads, n_iters = 4, 2000
+    start = threading.Barrier(n_threads)
+
+    def hammer(tid):
+        start.wait()
+        for i in range(n_iters):
+            m.bump(requests=1, cache_hits=1)
+            m.record_flush(contracts=2, padded=4,
+                           engine="rz" if tid % 2 else "notc",
+                           seconds=0.001, latencies=[1e-4, 2e-4])
+            m.add_latency(3e-4)
+            m.snapshot()           # concurrent reads must not torment writers
+
+    old = sys.getswitchinterval()
+    sys.setswitchinterval(1e-6)    # force frequent preemption at bytecode
+    try:                           # boundaries, where the race lives
+        threads = [threading.Thread(target=hammer, args=(t,))
+                   for t in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    finally:
+        sys.setswitchinterval(old)
+
+    total = n_threads * n_iters
+    snap = m.snapshot()
+    assert snap["requests"] == total
+    assert snap["cache_hits"] == total
+    assert snap["batches"] == total
+    assert snap["contracts"] == 2 * total
+    assert snap["padded"] == 4 * total
+    assert snap["completed"] == 2 * total
+    assert snap["engine_seconds"] == pytest.approx(0.001 * total)
+    assert snap["engine_batches"]["rz"] + snap["engine_batches"]["notc"] \
+        == total
+    # the latency window stayed bounded despite concurrent appends
+    assert len(m.latencies) <= 2 * m.latency_window

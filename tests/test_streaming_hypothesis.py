@@ -1,0 +1,179 @@
+"""Differential property: streaming incremental requotes == full reprice.
+
+For ANY tick sequence over a mixed 108-style book (both engines, mixed
+payoff families/strikes/depths), the incrementally maintained book must
+be indistinguishable from a full reprice of the post-tick book:
+
+* ask/bid bit-equal (asserted at the repo-wide 1e-9, rtol=0);
+* per-row ``max_pieces`` (``GridResult.row_pieces``) *exactly* equal —
+  grid-engine lanes are independent, so a row's PWL knot count cannot
+  depend on which batch priced it;
+* OverflowError parity — a tick sequence that pushes some touched row
+  past the PWL ``capacity`` budget blows up incrementally iff the full
+  reprice blows up (untouched rows already priced within budget cannot
+  start overflowing).
+
+The random-sequence property runs under Hypothesis (installed in CI via
+requirements-ci.txt; skipped locally when absent — the same fixed
+sequences run unconditionally below so the property logic is always
+exercised).
+"""
+import numpy as np
+import pytest
+
+from repro.api import price_american
+from repro.serve.streaming import StreamingBook, Tick, synth_ticks
+
+pytestmark = pytest.mark.gateway
+
+TOL = 1e-9
+
+# base vol 0.3 prices comfortably inside the books below at these
+# depths; see _tight_book for the calibrated overflow boundary
+_SIGMA0 = 0.3
+
+
+def _book(capacity: int = 48) -> StreamingBook:
+    return StreamingBook.mixed(n_underlyings=2, per_underlying=4,
+                               n_steps=(6, 8), sigma0=_SIGMA0,
+                               capacity=capacity)
+
+
+def _tight_book() -> StreamingBook:
+    """Two rows against a tight PWL budget (capacity=4), calibrated so
+    the overflow boundary is a *tick* away: the TC put needs 3 knots at
+    sigma=0.3 (fits) but 5 in the sigma<=0.2 region (overflows) — drawn
+    sequences genuinely cross the boundary."""
+    return StreamingBook(
+        underlying=[0, 1], s0=[100.0, 101.0], sigma=[_SIGMA0, _SIGMA0],
+        rate=0.05, maturity=0.5, cost_rate=[0.01, 0.0],
+        payoff=["put", "call"], strike=[100.0, 95.0], strike2=None,
+        n_steps=[8, 6], capacity=4)
+
+
+def _run_differential(ticks, make_book) -> None:
+    """The property: incremental and full-reprice books agree exactly
+    (quotes, row_pieces, max_pieces, and OverflowError behaviour)."""
+    book = make_book()
+    try:
+        book.full_reprice()
+    except OverflowError:
+        # initial book already over budget: the reference blows up too
+        # and there is no incremental state to diff
+        with pytest.raises(OverflowError):
+            make_book().full_reprice()
+        return
+    inc_err = None
+    try:
+        for tick in ticks:
+            book.requote(book.apply(tick))
+    except OverflowError as e:
+        inc_err = e
+    reference = book.copy()          # same post-tick inputs
+    ref_err = None
+    try:
+        reference.full_reprice()
+    except OverflowError as e:
+        ref_err = e
+    assert (inc_err is None) == (ref_err is None), (
+        f"OverflowError parity violated: incremental={inc_err!r} "
+        f"full={ref_err!r}")
+    if inc_err is None:
+        np.testing.assert_allclose(book.ask, reference.ask,
+                                   rtol=0, atol=TOL)
+        np.testing.assert_allclose(book.bid, reference.bid,
+                                   rtol=0, atol=TOL)
+        np.testing.assert_array_equal(book.row_pieces,
+                                      reference.row_pieces)
+        assert book.max_pieces == reference.max_pieces
+
+
+# --------------------------------------------------------------------- #
+# fixed sequences (always run, hypothesis or not)
+# --------------------------------------------------------------------- #
+def test_differential_on_fixed_sequences():
+    for seed in (0, 1):
+        _run_differential(synth_ticks(6, n_underlyings=2, seed=seed,
+                                      sigma_range=(0.28, 0.42)), _book)
+
+
+def test_differential_interleaved_spot_and_vol():
+    _run_differential([Tick(0, "s0", 93.0), Tick(1, "sigma", 0.33),
+                       Tick(0, "sigma", 0.41), Tick(1, "s0", 108.0),
+                       Tick(0, "s0", 101.5)], _book)
+
+
+def test_streaming_book_rows_match_price_american():
+    """Ties the chain to the oracle: every row of a repriced book equals
+    pricing that contract alone, including its per-row max_pieces."""
+    book = _book(48)
+    book.full_reprice()
+    book.requote(book.apply(Tick(0, "s0", 104.0)))
+    for i in range(book.n_rows):
+        ref = price_american(
+            s0=float(book.s0[i]), sigma=float(book.sigma[i]),
+            rate=float(book.rate[i]), maturity=float(book.maturity[i]),
+            n_steps=int(book.n_steps[i]), payoff=str(book.payoff[i]),
+            strike=float(book.strike[i]),
+            strike2=float(book.strike2[i]),
+            cost_rate=float(book.cost_rate[i]), capacity=48)
+        assert abs(book.ask[i] - ref.ask) < TOL
+        assert abs(book.bid[i] - ref.bid) < TOL
+        assert book.row_pieces[i] == ref.max_pieces
+
+
+def test_overflow_parity_tick_pushes_row_over_budget():
+    """A vol tick into the high-knot region overflows capacity=4 on the
+    incremental path AND on the full reprice — never one without the
+    other (the parity half of the property, pinned deterministically)."""
+    book = _tight_book()
+    book.full_reprice()              # pieces <= 3 everywhere: fits
+    idx = book.apply(Tick(0, "sigma", 0.2))   # the put row now needs 5
+    with pytest.raises(OverflowError):
+        book.requote(idx)
+    reference = book.copy()
+    with pytest.raises(OverflowError):
+        reference.full_reprice()
+
+
+def test_overflow_parity_safe_tick_stays_safe():
+    """Same tight capacity, but ticks that stay in the low-knot
+    region: neither path overflows and they still agree."""
+    _run_differential([Tick(0, "sigma", 0.35), Tick(1, "s0", 103.0)],
+                      _tight_book)
+
+
+# --------------------------------------------------------------------- #
+# the random-sequence property (CI: hypothesis from requirements-ci.txt;
+# guarded import — the fixed-sequence tests above must run regardless)
+# --------------------------------------------------------------------- #
+try:
+    import hypothesis
+    from hypothesis import strategies as st
+except ImportError:              # pragma: no cover - CI always has it
+    hypothesis = None
+
+if hypothesis is not None:
+    @st.composite
+    def _tick(draw):
+        u = draw(st.integers(min_value=0, max_value=1))
+        if draw(st.booleans()):
+            return Tick(u, "sigma", draw(st.floats(min_value=0.18,
+                                                   max_value=0.45)))
+        return Tick(u, "s0", draw(st.floats(min_value=85.0,
+                                            max_value=115.0)))
+
+    @hypothesis.settings(
+        max_examples=10, deadline=None, derandomize=True,
+        suppress_health_check=[hypothesis.HealthCheck.too_slow])
+    @hypothesis.given(ticks=st.lists(_tick(), max_size=5),
+                      tight=st.booleans())
+    def test_streaming_differential_property(ticks, tight):
+        """Random tick sequences, both a tight and a roomy PWL budget:
+        the incremental book always equals the full post-tick
+        reprice."""
+        _run_differential(ticks, _tight_book if tight else _book)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (CI runs it)")
+    def test_streaming_differential_property():
+        pass

@@ -51,6 +51,13 @@ _BENCHES = {
                        "baseline.contracts_per_sec"),
         "ratios": ("speedup", "speedup_nocache"),
     },
+    "gateway_replicas": {
+        "config": ("requests", "max_batch", "n_steps", "capacity",
+                   "crash_at", "restart_s", "seed", "ticks", "device"),
+        "throughput": ("one_replica.quotes_per_sec",
+                       "two_replica.quotes_per_sec"),
+        "ratios": ("two_over_one",),
+    },
     "pwl_envelope_ops": {
         "config": ("lanes", "capacity", "repeats", "device"),
         "throughput": ("envelope.ops_per_sec", "cone.ops_per_sec",
