@@ -1,0 +1,128 @@
+"""LSMC engine throughput: Monte Carlo paths/sec and contracts/sec.
+
+Prices one flat batch of Bermudan put contracts through
+``scenarios.price_grid_lsmc`` twice — plain single-device jit and the
+``devices=8`` mesh layout — and reports paths/sec (= contracts x paths
+per wall-second, the MC analogue of the lattice benches' nodes/sec) and
+contracts/sec for both, plus the mesh/single ratio.  On a machine
+without 8 devices the mesh cell runs the bit-identical *simulated*
+layout (docs/KNOWN_ISSUES.md) — the JSON records which — so the ratio
+then measures pure shard-plan code-path overhead, not a speedup; expose
+fake devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+to measure the real ``shard_map`` path.
+
+Timings are jit-warm (a warm-up call compiles both layouts first), the
+repo's benchmark convention; results are the same bits either way — the
+per-row fold_in keys make the draw independent of batch layout.
+
+    PYTHONPATH=src python -m benchmarks.bench_lsmc \
+        [--contracts 32] [--n-steps 50] [--paths 4096] \
+        [--every 5] [--repeats 5] [--out BENCH_lsmc.json]
+
+``BENCH_*.json`` files are git-ignored; the committed baseline lives in
+``benchmarks/baselines/BENCH_lsmc.json`` (gated by tools/check_bench.py).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.scenarios import ScenarioGrid, price_grid_lsmc
+
+DEFAULT_CONTRACTS = 32
+DEFAULT_N_STEPS = 50
+DEFAULT_PATHS = 4096
+DEFAULT_EVERY = 5
+DEFAULT_REPEATS = 5
+
+
+def _grid(contracts: int, n_steps: int, every: int) -> ScenarioGrid:
+    schedule = tuple(range(every, n_steps + 1, every))
+    return ScenarioGrid.explicit(
+        s0=np.linspace(85.0, 115.0, contracts), sigma=0.2, rate=0.1,
+        maturity=0.25, strike=100.0, payoff="put", n_steps=n_steps,
+        exercise_steps=schedule)
+
+
+def _time(grid, *, paths: int, repeats: int, devices):
+    run = lambda: price_grid_lsmc(grid, n_paths=paths, seed=0,  # noqa: E731
+                                  devices=devices)
+    res = run()                                   # warm-up: compile
+    best = min(_once(run) for _ in range(repeats))
+    return res, best
+
+
+def _once(run) -> float:
+    t0 = time.perf_counter()
+    run()
+    return time.perf_counter() - t0
+
+
+def bench(*, contracts: int = DEFAULT_CONTRACTS,
+          n_steps: int = DEFAULT_N_STEPS, paths: int = DEFAULT_PATHS,
+          every: int = DEFAULT_EVERY, repeats: int = DEFAULT_REPEATS,
+          out: str = "BENCH_lsmc.json") -> dict:
+    grid = _grid(contracts, n_steps, every)
+    n_ex = len(grid.exercise_steps)
+    cells = {}
+    res_single, t_single = _time(grid, paths=paths, repeats=repeats,
+                                 devices=None)
+    res_mesh, t_mesh = _time(grid, paths=paths, repeats=repeats, devices=8)
+    # layout must not change the draws — assert before reporting numbers
+    np.testing.assert_array_equal(res_single.ask, res_mesh.ask)
+    for name, t in (("single", t_single), ("mesh8", t_mesh)):
+        cells[name] = {
+            "seconds": t,
+            "contracts_per_sec": contracts / t,
+            "paths_per_sec": contracts * paths / t,
+        }
+        print(f"{name:7s}: {t * 1e3:8.2f} ms  "
+              f"({cells[name]['contracts_per_sec']:10.1f} contracts/s, "
+              f"{cells[name]['paths_per_sec']:14.0f} paths/s)")
+    si = res_mesh.shard_info
+    report = {
+        "bench": "lsmc_paths",
+        "contracts": contracts, "n_steps": n_steps, "paths": paths,
+        "n_exercise": n_ex, "repeats": repeats,
+        "device": jax.devices()[0].platform,
+        "mesh_simulated": bool(si.simulated) if si is not None else True,
+        "single": cells["single"], "mesh8": cells["mesh8"],
+        "mesh8_over_single": t_single / t_mesh,
+    }
+    Path(out).write_text(json.dumps(report, indent=2) + "\n")
+    print(f"wrote {out}")
+    return report
+
+
+def run() -> list[str]:
+    """benchmarks.run entry — default sizing, full JSON artifact."""
+    rep = bench()
+    us = rep["single"]["seconds"] * 1e6 / rep["contracts"]
+    return [
+        f"lsmc,{us:.2f},"
+        f"paths_per_sec={rep['single']['paths_per_sec']:.0f};"
+        f"mesh8_over_single={rep['mesh8_over_single']:.3f};"
+        f"contracts={rep['contracts']};paths={rep['paths']}",
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--contracts", type=int, default=DEFAULT_CONTRACTS)
+    ap.add_argument("--n-steps", type=int, default=DEFAULT_N_STEPS)
+    ap.add_argument("--paths", type=int, default=DEFAULT_PATHS)
+    ap.add_argument("--every", type=int, default=DEFAULT_EVERY)
+    ap.add_argument("--repeats", type=int, default=DEFAULT_REPEATS)
+    ap.add_argument("--out", default="BENCH_lsmc.json")
+    a = ap.parse_args()
+    bench(contracts=a.contracts, n_steps=a.n_steps, paths=a.paths,
+          every=a.every, repeats=a.repeats, out=a.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -31,6 +31,7 @@ _REGISTRY = {
     "serve": "bench_serve",
     "gateway": "bench_gateway",
     "pwl": "bench_pwl",
+    "lsmc": "bench_lsmc",
 }
 # module-name aliases: `python -m benchmarks.run bench_serve` works too
 _ALIASES = {mod: short for short, mod in _REGISTRY.items()}

@@ -42,12 +42,14 @@ from .core.lattice import LatticeModel
 from .core.payoff import (PayoffProcess, american_call, american_put,
                           bull_spread, cash_settled)
 from .scenarios import (PAYOFF_FAMILIES, GridResult, ScenarioGrid,
-                        price_grid_notc, price_grid_rz)
+                        price_grid_lsmc, price_grid_notc, price_grid_rz,
+                        route_engine)
 
 __all__ = [
     "price_american", "price_grid", "price_flat", "PriceQuote", "GridResult",
     "ScenarioGrid", "LatticeModel", "PayoffProcess", "PAYOFF_FAMILIES",
     "american_put", "american_call", "bull_spread", "cash_settled",
+    "route_engine",
 ]
 
 
@@ -59,10 +61,13 @@ class PriceQuote:
     interval: ``ask`` is the seller's (upper) price, ``bid`` the buyer's
     (lower) price.  Without frictions ask == bid == the binomial price.
     ``max_pieces`` reports the peak PWL knot count (0 for the no-TC path).
+    ``stderr`` is the Monte Carlo standard error when the quote came
+    from the ``lsmc`` engine (0.0 from the deterministic lattices).
     """
     ask: float
     bid: float
     max_pieces: int = 0
+    stderr: float = 0.0
 
     @property
     def mid(self) -> float:
@@ -117,8 +122,9 @@ def price_grid(grid: Optional[ScenarioGrid] = None, *,
                greeks: bool = False, backend: str = "jnp",
                n_steps: Union[int, Sequence[int], None] = None,
                levels: Optional[int] = None, block: Optional[int] = None,
-               interpret: bool = True, mesh=None,
-               devices: Optional[int] = None, shard_plan=None,
+               interpret: bool = True, n_paths: int = 4096, seed: int = 0,
+               basis: str = "poly", degree: int = 3, antithetic: bool = True,
+               mesh=None, devices: Optional[int] = None, shard_plan=None,
                **axes) -> Union[GridResult, list]:
     """Price a whole grid of scenarios in one compiled call.
 
@@ -128,17 +134,24 @@ def price_grid(grid: Optional[ScenarioGrid] = None, *,
         price_grid(s0=(95, 100, 105), cost_rate=(0.0, 0.005),
                    payoff=("put", "call"), n_steps=100)
 
-    ``engine="auto"`` picks the transaction-cost engine when any scenario
-    has ``cost_rate > 0`` and the friction-free engine otherwise.
-    ``backend`` selects the implementation of *either* engine ("jnp" or
-    "pallas" — for the TC engine the blocked PWL rounds of
+    ``engine="auto"`` routes by contract shape, then cost rate
+    (:func:`repro.scenarios.route_engine`): a multi-asset basket
+    (``n_assets > 1``) or Bermudan ``exercise_steps`` grid goes to the
+    least-squares Monte Carlo engine ``"lsmc"``; otherwise the
+    transaction-cost lattice engine ``"rz"`` when any scenario has
+    ``cost_rate > 0``, else the friction-free lattice engine ``"notc"``.
+    ``backend`` selects the implementation of *either lattice* engine
+    ("jnp" or "pallas" — for the TC engine the blocked PWL rounds of
     ``kernels/rz_step.py``, for the friction-free one
     ``kernels/binomial_step.py``); ``levels``/``block``/``interpret``
     tune the Pallas kernels (set ``interpret=False`` on real TPU
     hardware; TC ``block``/``levels`` default to the
-    ``core/partition.py`` schedule).  The tree depth is compile-time
-    static: passing a *sequence* of ``n_steps`` prices one grid per
-    distinct depth and returns the list of results in order.
+    ``core/partition.py`` schedule).  ``n_paths``/``seed``/``basis``/
+    ``degree``/``antithetic`` tune the MC engine
+    (:func:`repro.scenarios.price_grid_lsmc` — seeded, bitwise
+    deterministic).  The tree depth is compile-time static: passing a
+    *sequence* of ``n_steps`` prices one grid per distinct depth and
+    returns the list of results in order.
 
     ``mesh``/``devices`` shard the flat scenario batch across a 1-D
     device mesh under a cost-model shard plan
@@ -156,14 +169,18 @@ def price_grid(grid: Optional[ScenarioGrid] = None, *,
             return [price_grid(engine=engine, capacity=capacity,
                                greeks=greeks, backend=backend, n_steps=int(n),
                                levels=levels, block=block,
-                               interpret=interpret, mesh=mesh,
+                               interpret=interpret, n_paths=n_paths,
+                               seed=seed, basis=basis, degree=degree,
+                               antithetic=antithetic, mesh=mesh,
                                devices=devices, **axes) for n in n_steps]
         grid = ScenarioGrid.cartesian(n_steps=int(n_steps or 100), **axes)
     elif axes or n_steps is not None:
         raise TypeError("pass either a ScenarioGrid or cartesian axes, "
                         "not both")
     if engine == "auto":
-        engine = "rz" if np.any(grid.cost_rate > 0.0) else "notc"
+        engine = route_engine(any_tc=bool(np.any(grid.cost_rate > 0.0)),
+                              n_assets=grid.n_assets,
+                              exercise_steps=grid.exercise_steps)
     if engine == "rz":
         return price_grid_rz(grid, capacity=capacity, greeks=greeks,
                              backend=backend, levels=levels, block=block,
@@ -175,13 +192,22 @@ def price_grid(grid: Optional[ScenarioGrid] = None, *,
                                block=256 if block is None else block,
                                interpret=interpret, mesh=mesh,
                                devices=devices, shard_plan=shard_plan)
-    raise ValueError(f"unknown engine {engine!r}; use 'auto', 'rz' or 'notc'")
+    if engine == "lsmc":
+        return price_grid_lsmc(grid, n_paths=n_paths, seed=seed, basis=basis,
+                               degree=degree, antithetic=antithetic,
+                               greeks=greeks, mesh=mesh, devices=devices,
+                               shard_plan=shard_plan)
+    raise ValueError(f"unknown engine {engine!r}; use 'auto', 'rz', 'notc' "
+                     "or 'lsmc'")
 
 
 def price_flat(*, s0, sigma, rate, maturity, cost_rate=0.0, payoff="put",
                strike=100.0, strike2=None, n_steps: int = 100,
+               n_assets: int = 1, exercise_steps=None,
                engine: str = "auto", capacity: int = 48,
                greeks: bool = False, backend: str = "jnp",
+               n_paths: int = 4096, seed: int = 0, basis: str = "poly",
+               degree: int = 3, antithetic: bool = True,
                pad_to: Optional[int] = None, mesh=None,
                devices: Optional[int] = None, shard_plan=None) -> GridResult:
     """Price a *flat* batch of heterogeneous contracts in one compiled call.
@@ -212,9 +238,10 @@ def price_flat(*, s0, sigma, rate, maturity, cost_rate=0.0, payoff="put",
     grid = ScenarioGrid.explicit(
         s0=s0, sigma=sigma, rate=rate, maturity=maturity,
         cost_rate=cost_rate, payoff=payoff, strike=strike, strike2=strike2,
-        n_steps=n_steps)
+        n_steps=n_steps, n_assets=n_assets, exercise_steps=exercise_steps)
     if pad_to is not None:
         grid = grid.pad_to(pad_to)
     return price_grid(grid, engine=engine, capacity=capacity, greeks=greeks,
-                      backend=backend, mesh=mesh, devices=devices,
-                      shard_plan=shard_plan)
+                      backend=backend, n_paths=n_paths, seed=seed,
+                      basis=basis, degree=degree, antithetic=antithetic,
+                      mesh=mesh, devices=devices, shard_plan=shard_plan)

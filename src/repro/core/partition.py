@@ -270,23 +270,33 @@ class ShardPlan:
 
 
 def scenario_costs(n_steps: int, cost_rate, *, capacity: int = 48,
-                   pieces=None) -> np.ndarray:
+                   pieces=None, engine: Optional[str] = None,
+                   n_paths: int = 4096, n_exercise: Optional[int] = None,
+                   n_assets: int = 1) -> np.ndarray:
     """Predicted relative cost of each scenario row of a flat grid.
 
-    Cost model (see docs/ARCHITECTURE.md "Sharded grid engine"):
+    Cost model (see docs/ARCHITECTURE.md "Engine matrix"):
 
-      * a frictionless row is one backward induction over the tree:
-        ~``(N+1)^2 / 2`` node updates -> cost ``N^2``;
+      * a frictionless lattice row is one backward induction over the
+        tree: ~``(N+1)^2 / 2`` node updates -> cost ``N^2``;
       * a transaction-cost row runs the Roux–Zastawniak PWL sweep at
         every node: ~``pieces`` knots of work per node -> cost
         ``N^2 * pieces``.  Before anything has run, ``pieces`` is the
         worst-case ``capacity``; after a flush the *measured*
-        ``max_pieces`` is a much tighter estimate (feed it back here).
+        ``max_pieces`` is a much tighter estimate (feed it back here);
+      * an ``engine="lsmc"`` row simulates ``n_paths`` basket paths of
+        ``n_assets`` GBMs at ``n_exercise`` dates and regresses at each
+        -> cost ``n_paths * n_exercise * n_assets``, identical across
+        rows (MC work does not depend on the row's lambda).
 
     ``cost_rate`` is the per-row lambda array; ``pieces`` may be a scalar
     or a per-row array.  Returns a float64 array of per-row costs.
     """
     cr = np.atleast_1d(np.asarray(cost_rate, np.float64))
+    if engine == "lsmc":
+        n_ex = (n_steps + 1) if n_exercise is None else int(n_exercise)
+        cost = float(n_paths) * max(n_ex, 1) * max(int(n_assets), 1)
+        return np.full(cr.shape, cost)
     base = float(n_steps) ** 2
     if pieces is None:
         pieces = capacity

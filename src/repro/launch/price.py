@@ -23,6 +23,19 @@ CPU, expose fake devices first with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=W`` (asking for more
 devices than the process has runs the identical plan single-device —
 the simulated mesh, see docs/KNOWN_ISSUES.md).
+
+Monte Carlo engine (grid mode): ``--engine lsmc`` — or ``--n-assets``
+> 1 / ``--exercise-dates`` under ``--engine auto`` — routes the grid
+through the least-squares Monte Carlo engine (core/lsmc.py)::
+
+    PYTHONPATH=src python -m repro.launch.price --grid --engine lsmc \
+        --n-steps 50 --s0 90,100,110 --paths 8192 \
+        --exercise-dates 10,25,50 --n-assets 3 [--mc-seed 0] \
+        [--basis laguerre --degree 4]
+
+``--exercise-dates`` is a comma list of lattice step indices (must
+include the terminal step ``--n-steps``); lsmc output adds the
+per-scenario MC standard error column.
 """
 from __future__ import annotations
 
@@ -42,6 +55,11 @@ def _floats(csv: str):
     return tuple(float(x) for x in csv.split(","))
 
 
+def _steps(csv):
+    return (None if csv is None
+            else tuple(int(x) for x in csv.split(",")))
+
+
 def run_grid(args) -> None:
     from ..api import price_grid
     grid_kwargs = dict(
@@ -49,11 +67,15 @@ def run_grid(args) -> None:
         rate=_floats(args.rates), maturity=_floats(args.maturities),
         cost_rate=_floats(args.lambdas),
         payoff=tuple(args.payoffs.split(",")),
-        strike=_floats(args.strikes))
+        strike=_floats(args.strikes), n_assets=args.n_assets,
+        exercise_steps=_steps(args.exercise_dates))
     t0 = time.perf_counter()
-    res = price_grid(n_steps=args.n_steps, capacity=args.capacity,
+    res = price_grid(n_steps=args.n_steps, engine=args.engine,
+                     capacity=args.capacity,
                      greeks=args.greeks, backend=args.backend,
                      levels=args.levels, block=args.block,
+                     n_paths=args.paths, seed=args.mc_seed,
+                     basis=args.basis, degree=args.degree,
                      devices=args.devices, **grid_kwargs)
     n = res.grid.n_scenarios
     dt = time.perf_counter() - t0
@@ -64,18 +86,23 @@ def run_grid(args) -> None:
               f"{si.plan.lanes} lanes/shard, rows {si.plan.sizes}, "
               f"predicted work spread {si.plan.work_spread:.1%}]")
     ask, bid = res.ask.ravel(), res.bid.ravel()
+    se = None if res.stderr is None else res.stderr.ravel()
     g = res.grid
     for i in range(n):
         line = (f"{g.payoff[i]:>11s} K={g.strike[i]:6.1f} "
                 f"S0={g.s0[i]:6.1f} sig={g.sigma[i]:.2f} "
                 f"lam={g.cost_rate[i]:.3f}  ask={ask[i]:9.6f} "
                 f"bid={bid[i]:9.6f}")
+        if se is not None:
+            line += f"  se={se[i]:.6f}"
         if args.greeks:
             line += (f"  delta={res.delta_ask.ravel()[i]:+.4f} "
                      f"vega={res.vega_ask.ravel()[i]:8.4f}")
         print(line)
-    print(f"\n{n} scenarios, N={args.n_steps}: {dt:.2f}s incl. compile "
-          f"({n / dt:.1f} contracts/s; re-run hits the compile cache)")
+    extra = (f", engine={res.engine}" if res.engine else "")
+    print(f"\n{n} scenarios, N={args.n_steps}{extra}: {dt:.2f}s incl. "
+          f"compile ({n / dt:.1f} contracts/s; re-run hits the compile "
+          "cache)")
 
 
 def main():
@@ -111,6 +138,24 @@ def main():
     ap.add_argument("--devices", type=int, default=None,
                     help="shard the scenario batch over a 1-D mesh of this "
                          "many devices (grid mode; cost-model shard plan)")
+    ap.add_argument("--engine", default="auto",
+                    choices=["auto", "notc", "rz", "lsmc"],
+                    help="grid engine (auto routes by contract shape then "
+                         "cost rate; lsmc = least-squares Monte Carlo)")
+    ap.add_argument("--paths", type=int, default=4096,
+                    help="Monte Carlo paths per scenario (lsmc engine)")
+    ap.add_argument("--exercise-dates", default=None,
+                    help="comma list of Bermudan exercise step indices "
+                         "(must include --n-steps; routes to lsmc)")
+    ap.add_argument("--n-assets", type=int, default=1,
+                    help="basket size per scenario (>1 routes to lsmc)")
+    ap.add_argument("--mc-seed", type=int, default=0,
+                    help="PRNG seed for the lsmc engine (deterministic)")
+    ap.add_argument("--basis", default="poly",
+                    choices=["poly", "laguerre"],
+                    help="lsmc regression basis")
+    ap.add_argument("--degree", type=int, default=3,
+                    help="lsmc regression basis degree")
     args = ap.parse_args()
 
     if args.grid:

@@ -61,8 +61,8 @@ from .core.payoff import param_payoff
 from .core.rz import RZ_BACKENDS, rz_backward, rz_backward_pallas
 
 __all__ = ["ScenarioGrid", "GridResult", "ShardExecInfo",
-           "price_grid_rz", "price_grid_notc",
-           "PAYOFF_FAMILIES", "payoff_params"]
+           "price_grid_rz", "price_grid_notc", "price_grid_lsmc",
+           "route_engine", "PAYOFF_FAMILIES", "payoff_params"]
 
 PAYOFF_FAMILIES = ("put", "call", "bull_spread")
 
@@ -95,6 +95,15 @@ class ScenarioGrid:
     ``n_scenarios``; ``shape`` is the logical (cartesian) grid shape the
     result surfaces are reshaped to (``(n_scenarios,)`` for explicit
     grids).  Build with :meth:`cartesian` or :meth:`explicit`.
+
+    ``n_assets`` and ``exercise_steps`` are grid-wide contract-shape
+    knobs (static like ``n_steps``): ``n_assets > 1`` means each row is
+    a basket of that many i.i.d. GBM underlyings sharing the row's
+    parameters, and ``exercise_steps`` (a tuple of lattice step indices,
+    terminal step included) restricts exercise to a Bermudan schedule.
+    ``exercise_steps=None`` means American.  Either departure from the
+    1-D American default routes the grid to the ``lsmc`` engine — the
+    lattice engines reject it (see :func:`route_engine`).
     """
     s0: np.ndarray
     sigma: np.ndarray
@@ -107,6 +116,16 @@ class ScenarioGrid:
     n_steps: int
     shape: tuple             # logical grid shape, prod == n_scenarios
     axes: tuple = ()         # (name, values) pairs for cartesian grids
+    n_assets: int = 1        # basket size (1 = the lattice engines' model)
+    exercise_steps: Optional[tuple] = None   # Bermudan schedule, None=American
+
+    def __post_init__(self):
+        if self.exercise_steps is not None:
+            from .core.lsmc import exercise_schedule
+            object.__setattr__(self, "exercise_steps", exercise_schedule(
+                self.n_steps, self.exercise_steps))
+        if int(self.n_assets) < 1:
+            raise ValueError(f"need n_assets >= 1, got {self.n_assets}")
 
     @property
     def n_scenarios(self) -> int:
@@ -122,12 +141,14 @@ class ScenarioGrid:
     @classmethod
     def cartesian(cls, *, s0=100.0, sigma=0.2, rate=0.1, maturity=0.25,
                   cost_rate=0.0, payoff="put", strike=100.0,
-                  strike2=None, n_steps: int = 100) -> "ScenarioGrid":
+                  strike2=None, n_steps: int = 100, n_assets: int = 1,
+                  exercise_steps=None) -> "ScenarioGrid":
         """Cartesian product of the given axes (scalars = length-1 axes).
 
         ``payoff`` entries are family names from ``PAYOFF_FAMILIES``;
         ``strike2`` (second strike of ``bull_spread``) defaults to
-        ``strike + 10``.
+        ``strike + 10``.  ``n_assets``/``exercise_steps`` are grid-wide,
+        not axes.
         """
         def ax(v, name):
             if isinstance(v, str):
@@ -152,12 +173,14 @@ class ScenarioGrid:
         return cls(s0=f64("s0"), sigma=f64("sigma"), rate=f64("rate"),
                    maturity=f64("maturity"), cost_rate=f64("cost_rate"),
                    strike=k1, strike2=k2, payoff=tuple(cols["payoff"]),
-                   n_steps=int(n_steps), shape=shape, axes=axes)
+                   n_steps=int(n_steps), shape=shape, axes=axes,
+                   n_assets=int(n_assets), exercise_steps=exercise_steps)
 
     @classmethod
     def explicit(cls, *, s0, sigma, rate, maturity, cost_rate=0.0,
                  payoff="put", strike=100.0, strike2=None,
-                 n_steps: int = 100) -> "ScenarioGrid":
+                 n_steps: int = 100, n_assets: int = 1,
+                 exercise_steps=None) -> "ScenarioGrid":
         """Element-wise scenario list; array arguments broadcast together."""
         arrs = [np.atleast_1d(np.asarray(v, np.float64))
                 for v in (s0, sigma, rate, maturity, cost_rate, strike)]
@@ -173,7 +196,8 @@ class ScenarioGrid:
         return cls(s0=s0a.copy(), sigma=siga.copy(), rate=ra.copy(),
                    maturity=ma.copy(), cost_rate=ka.copy(), strike=k1.copy(),
                    strike2=np.asarray(k2, np.float64).copy(),
-                   payoff=tuple(payoff), n_steps=int(n_steps), shape=(n,))
+                   payoff=tuple(payoff), n_steps=int(n_steps), shape=(n,),
+                   n_assets=int(n_assets), exercise_steps=exercise_steps)
 
     def pad_to(self, to: int) -> "ScenarioGrid":
         """Flat copy padded to ``to`` scenarios by repeating the last row.
@@ -197,7 +221,8 @@ class ScenarioGrid:
             maturity=rep(self.maturity), cost_rate=rep(self.cost_rate),
             strike=rep(self.strike), strike2=rep(self.strike2),
             payoff=self.payoff + (self.payoff[-1],) * pad,
-            n_steps=self.n_steps, shape=(to,))
+            n_steps=self.n_steps, shape=(to,),
+            n_assets=self.n_assets, exercise_steps=self.exercise_steps)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -240,6 +265,10 @@ class GridResult:
     priced alone — what lets the serving layer stamp each quote with its
     own count and lets streaming requotes reproduce a full reprice's
     ``max_pieces`` without repricing untouched rows.
+
+    ``engine`` records which engine produced the result; ``stderr`` is
+    the per-scenario Monte Carlo standard error (``lsmc`` only, None
+    from the deterministic lattice engines).
     """
     grid: ScenarioGrid
     ask: np.ndarray
@@ -251,6 +280,8 @@ class GridResult:
     vega_bid: Optional[np.ndarray] = None
     shard_info: Optional[ShardExecInfo] = None
     row_pieces: Optional[np.ndarray] = None
+    stderr: Optional[np.ndarray] = None
+    engine: Optional[str] = None
 
     @property
     def price(self) -> np.ndarray:
@@ -264,6 +295,35 @@ class GridResult:
 # PayoffProcess whose xi/zeta close over traced per-scenario params —
 # now the shared core/payoff.py::param_payoff (kept under the old name).
 _param_payoff = param_payoff
+
+
+def route_engine(*, any_tc: bool, n_assets: int = 1,
+                 exercise_steps=None) -> str:
+    """The ``engine="auto"`` routing rule — single source of truth.
+
+    Contract *shape* decides first: a basket (``n_assets > 1``) or an
+    explicit Bermudan schedule is outside the lattice engines' domain
+    and must go to ``lsmc``.  Otherwise the cost rate decides between
+    the two lattice engines exactly as before this engine existed:
+    ``rz`` when any row carries transaction costs, else ``notc``.  Used
+    by ``api.price_grid``, the serving bucket router
+    (``serve/core.py::SchedulerCore.submit``) and ``PricingService`` —
+    all three dispatch through this one function.
+    """
+    if int(n_assets) > 1 or exercise_steps is not None:
+        return "lsmc"
+    return "rz" if any_tc else "notc"
+
+
+def _require_lattice(grid: ScenarioGrid, engine: str):
+    """Lattice engines only price 1-D American contracts — fail loudly
+    (not wrongly) on a grid shaped for the MC engine."""
+    if grid.n_assets > 1 or grid.exercise_steps is not None:
+        raise ValueError(
+            f"engine {engine!r} prices single-asset American contracts "
+            f"only (got n_assets={grid.n_assets}, "
+            f"exercise_steps={grid.exercise_steps!r}); use the 'lsmc' "
+            "engine (price_grid_lsmc) for baskets/Bermudan schedules")
 
 
 # --------------------------------------------------------------------- #
@@ -376,21 +436,23 @@ def _sharded_jit(rows_fn, mesh, **static):
 
 def _resolve_shard(grid: ScenarioGrid, n_rows: int, copies: int, *,
                    capacity: int, mesh, devices,
-                   shard_plan: Optional[ShardPlan]):
+                   shard_plan: Optional[ShardPlan], costs=None):
     """Normalise sharding knobs to ``(mesh_or_None, plan_or_None)``.
 
     A caller-supplied ``shard_plan`` (the serving layer's rebalanced
     plan) must cover the *bumped* flat batch; otherwise a fresh
-    cost-model plan is made here.  ``(None, None)`` means take the
-    single-device path.
+    cost-model plan is made here (``costs``, when given, overrides the
+    default lattice cost model — the lsmc engine passes its own).
+    ``(None, None)`` means take the single-device path.
     """
     from .core.distributed import resolve_grid_mesh
     mesh, n_shards = resolve_grid_mesh(devices, mesh)
     if shard_plan is None and n_shards <= 1:
         return None, None
     if shard_plan is None:
-        costs = np.tile(scenario_costs(grid.n_steps, grid.cost_rate,
-                                       capacity=capacity), copies)
+        if costs is None:
+            costs = np.tile(scenario_costs(grid.n_steps, grid.cost_rate,
+                                           capacity=capacity), copies)
         shard_plan = plan_shards(costs, n_shards)
     elif n_shards > 1 and shard_plan.n_shards != n_shards:
         # also on the simulated path: a mismatch must fail identically
@@ -469,6 +531,7 @@ def price_grid_rz(grid: ScenarioGrid, *, capacity: int = 48,
     rebalanced plan); results, ``max_pieces`` and the OverflowError
     check are identical to the single-device call.
     """
+    _require_lattice(grid, "rz")
     inputs, copies = _with_bumps(_grid_inputs(grid), greeks)
     if backend == "jnp":
         rows_fn, jit_fn = _rz_rows, _rz_grid_jit
@@ -501,7 +564,8 @@ def price_grid_rz(grid: ScenarioGrid, *, capacity: int = 48,
     row_pieces = np.asarray(pieces)[:n].reshape(grid.shape).astype(int)
     return GridResult(grid=grid, ask=a, bid=b, max_pieces=max_pieces,
                       delta_ask=da, delta_bid=db, vega_ask=va, vega_bid=vb,
-                      shard_info=shard_info, row_pieces=row_pieces)
+                      shard_info=shard_info, row_pieces=row_pieces,
+                      engine="rz")
 
 
 # --------------------------------------------------------------------- #
@@ -597,6 +661,7 @@ def price_grid_notc(grid: ScenarioGrid, *, backend: str = "jnp",
     :func:`price_grid_rz` (friction-free rows all cost the same, so the
     default plan is the even split).
     """
+    _require_lattice(grid, "notc")
     inputs, copies = _with_bumps(_grid_inputs(grid), greeks)
     # drop the cost-rate column (index 4) — this engine is friction-free
     args = inputs[:4] + inputs[5:]
@@ -623,4 +688,71 @@ def price_grid_notc(grid: ScenarioGrid, *, backend: str = "jnp",
     return GridResult(grid=grid, ask=p, bid=p.copy(), max_pieces=0,
                       delta_ask=dp, delta_bid=cp(dp),
                       vega_ask=vp, vega_bid=cp(vp), shard_info=shard_info,
-                      row_pieces=np.zeros(grid.shape, dtype=int))
+                      row_pieces=np.zeros(grid.shape, dtype=int),
+                      engine="notc")
+
+
+# --------------------------------------------------------------------- #
+# least-squares Monte Carlo grid engine (baskets / Bermudan schedules)
+# --------------------------------------------------------------------- #
+def price_grid_lsmc(grid: ScenarioGrid, *, n_paths: int = 4096,
+                    seed: int = 0, basis: str = "poly", degree: int = 3,
+                    antithetic: bool = True, greeks: bool = False,
+                    mesh=None, devices: Optional[int] = None,
+                    shard_plan: Optional[ShardPlan] = None) -> GridResult:
+    """Longstaff–Schwartz Monte Carlo prices for every scenario of ``grid``.
+
+    The engine for the contracts the lattice cannot shape: ``d =
+    grid.n_assets`` underlyings per row (arithmetic basket payoff) and
+    Bermudan ``grid.exercise_steps`` schedules — but it also prices the
+    plain 1-D American grid, which is how the oracle tests lock it
+    against ``rz_ref``/``notc`` (see ``tests/test_lsmc.py``).
+
+    Deterministic for a given ``seed``: scenario row ``i`` draws from
+    ``fold_in(PRNGKey(seed), i)`` (``core/lsmc.py::path_keys``), so
+    results are bitwise reproducible and independent of padding or of
+    the ``mesh``/``devices``/``shard_plan`` layout — the same
+    shard-vs-single-device guarantee as the lattice engines, here by
+    per-row key construction.  ``GridResult.stderr`` carries each
+    scenario's Monte Carlo standard error.
+
+    ``greeks`` reuses the fused central-difference bumps with **common
+    random numbers** (bumped copies of a row share its key), the MC
+    analogue of the lattice engines' fused FD Greeks.
+    """
+    from .core.lsmc import (LSMC_BASES, exercise_schedule, lsmc_rows,
+                            lsmc_rows_jit, path_keys)
+    if basis not in LSMC_BASES:
+        raise ValueError(f"unknown basis {basis!r}; use one of {LSMC_BASES}")
+    steps = exercise_schedule(grid.n_steps, grid.exercise_steps)
+    inputs, copies = _with_bumps(_grid_inputs(grid), greeks)
+    n = grid.n_scenarios
+    # one key per scenario row, tiled over bump copies (common random
+    # numbers: the FD difference cancels the MC noise, not adds to it)
+    keys = jnp.tile(path_keys(seed, n), (copies, 1))
+    inputs = inputs + (keys,)
+    static = dict(n_steps=grid.n_steps, steps=steps, n_paths=int(n_paths),
+                  n_assets=grid.n_assets, degree=int(degree), basis=basis,
+                  antithetic=bool(antithetic))
+    costs = np.tile(scenario_costs(grid.n_steps, grid.cost_rate,
+                                   engine="lsmc", n_paths=n_paths,
+                                   n_exercise=len(steps),
+                                   n_assets=grid.n_assets), copies)
+    mesh, plan = _resolve_shard(grid, inputs[0].shape[0], copies,
+                                capacity=1, mesh=mesh, devices=devices,
+                                shard_plan=shard_plan, costs=costs)
+    (ask, bid, se), positions = _run_rows(lsmc_rows, lsmc_rows_jit, static,
+                                          inputs, mesh, plan)
+    shard_info = None
+    if plan is not None:
+        ask, bid = np.asarray(ask)[positions], np.asarray(bid)[positions]
+        se = np.asarray(se)[positions]
+        shard_info = _shard_exec_info(plan, mesh, grid, copies, None)
+    a, da, va = _split_bumps(ask, n, copies, grid.s0, grid.shape)
+    b, db, vb = _split_bumps(bid, n, copies, grid.s0, grid.shape)
+    stderr = np.asarray(se)[:n].reshape(grid.shape)
+    return GridResult(grid=grid, ask=a, bid=b, max_pieces=0,
+                      delta_ask=da, delta_bid=db, vega_ask=va, vega_bid=vb,
+                      shard_info=shard_info,
+                      row_pieces=np.zeros(grid.shape, dtype=int),
+                      stderr=stderr, engine="lsmc")

@@ -38,7 +38,7 @@ from typing import Any, Callable, Dict, List, Optional
 import numpy as np
 
 from ..core.partition import _next_pow2
-from ..scenarios import PAYOFF_FAMILIES
+from ..scenarios import PAYOFF_FAMILIES, route_engine
 
 __all__ = ["ServiceMetrics", "SchedulerCore", "ChunkSpec", "ChunkResult",
            "execute_chunk"]
@@ -68,7 +68,7 @@ class ServiceMetrics:
     compile_misses: int = 0      # batch shapes compiled fresh
     engine_seconds: float = 0.0  # time inside the compiled engines
     engine_batches: Dict[str, int] = dataclasses.field(
-        default_factory=lambda: {"notc": 0, "rz": 0})
+        default_factory=lambda: {"notc": 0, "rz": 0, "lsmc": 0})
     grids: int = 0               # GridRequests priced
     grid_scenarios: int = 0
     shard_batches: int = 0       # flushes routed onto the device mesh
@@ -159,7 +159,9 @@ class ChunkSpec:
     payoff, strike, strike2 — the :func:`repro.api.price_flat`
     signature) so it can cross a worker boundary without touching the
     scheduler's queues.  ``mesh``/``shard_plan`` are set by transports
-    that route chunks onto a device mesh.
+    that route chunks onto a device mesh.  ``n_assets``/
+    ``exercise_steps``/``n_paths``/``mc_seed`` configure the ``lsmc``
+    engine (harmless defaults for the lattice engines).
     """
     bucket: tuple
     requests: List[_Pending]
@@ -171,6 +173,10 @@ class ChunkSpec:
     cols: tuple
     mesh: Any = None
     shard_plan: Any = None
+    n_assets: int = 1
+    exercise_steps: Optional[tuple] = None
+    n_paths: int = 4096
+    mc_seed: int = 0
 
     @property
     def n(self) -> int:
@@ -185,7 +191,9 @@ class ChunkResult:
     (``GridResult.row_pieces``) over the padded batch — all zero on the
     friction-free path — so every delivered quote carries its *own*
     ``max_pieces``, matching ``price_american`` exactly.  ``seconds`` is
-    the executor-measured wall time inside the engine call.
+    the executor-measured wall time inside the engine call.  ``stderr``
+    is the per-lane Monte Carlo standard error (zeros from the
+    deterministic lattice engines).
     """
     ask: np.ndarray
     bid: np.ndarray
@@ -193,6 +201,7 @@ class ChunkResult:
     row_pieces: np.ndarray
     seconds: float
     shard_info: Any = None
+    stderr: Optional[np.ndarray] = None
 
 
 def execute_chunk(chunk: ChunkSpec) -> ChunkResult:
@@ -206,25 +215,32 @@ def execute_chunk(chunk: ChunkSpec) -> ChunkResult:
         rate=np.asarray(cols[2]), maturity=np.asarray(cols[3]),
         cost_rate=np.asarray(cols[4]), payoff=tuple(cols[5]),
         strike=np.asarray(cols[6]), strike2=np.asarray(cols[7]),
-        n_steps=chunk.n_steps, engine=chunk.engine,
+        n_steps=chunk.n_steps, n_assets=chunk.n_assets,
+        exercise_steps=chunk.exercise_steps, engine=chunk.engine,
         capacity=chunk.capacity, backend=chunk.backend,
+        n_paths=chunk.n_paths, seed=chunk.mc_seed,
         pad_to=chunk.padded, mesh=chunk.mesh, shard_plan=chunk.shard_plan)
     seconds = time.perf_counter() - t0
     rp = res.row_pieces
     rp = (np.zeros(chunk.padded, dtype=int) if rp is None
           else np.asarray(rp).ravel().astype(int))
+    se = (np.zeros(chunk.padded) if res.stderr is None
+          else np.asarray(res.stderr).ravel())
     return ChunkResult(ask=np.asarray(res.ask).ravel(),
                        bid=np.asarray(res.bid).ravel(),
                        max_pieces=int(res.max_pieces), row_pieces=rp,
-                       seconds=seconds, shard_info=res.shard_info)
+                       seconds=seconds, shard_info=res.shard_info,
+                       stderr=se)
 
 
 class SchedulerCore:
     """Coalescing/bucketing/caching core, with no flush policy attached.
 
     Owns: request-id allocation, scenario normalisation, the bucket
-    queues keyed ``(n_steps, cost_rate > 0)``, the result LRU, the
-    bounded completed-result store, the compile-key accounting and the
+    queues keyed ``(n_steps, engine)`` — plus the lsmc static config
+    for MC buckets, so an lsmc bucket can never coalesce with a lattice
+    bucket of the same depth — the result LRU, the bounded
+    completed-result store, the compile-key accounting and the
     shared :class:`ServiceMetrics`.  Transports decide *when* to call
     :meth:`take_chunk` (size trigger, deadline timer) and *where* the
     chunk executes (inline, a replica worker); they hand results back
@@ -236,6 +252,7 @@ class SchedulerCore:
                  default_n_steps: int = 100, default_payoff: str = "put",
                  default_strike: float = 100.0,
                  result_cache_size: int = 1024, max_results: int = 65536,
+                 n_paths: int = 4096, mc_seed: int = 0,
                  clock: Callable[[], float] = time.monotonic,
                  metrics: Optional[ServiceMetrics] = None):
         if max_batch < 1:
@@ -247,6 +264,8 @@ class SchedulerCore:
         self.default_n_steps = int(default_n_steps)
         self.default_payoff = default_payoff
         self.default_strike = float(default_strike)
+        self.n_paths = int(n_paths)
+        self.mc_seed = int(mc_seed)
         self._clock = clock
         self.max_results = int(max_results)
         self.buckets: Dict[tuple, List[_Pending]] = {}
@@ -277,9 +296,14 @@ class SchedulerCore:
                    else float(req.strike2))
         n_steps = (self.default_n_steps if req.n_steps is None
                    else int(req.n_steps))
+        n_assets = int(getattr(req, "n_assets", None) or 1)
+        ex = getattr(req, "exercise_steps", None)
+        if ex is not None:
+            from ..core.lsmc import exercise_schedule
+            ex = exercise_schedule(n_steps, ex)
         return (float(req.s0), float(req.sigma), float(req.rate),
                 float(req.maturity), float(req.cost_rate), payoff,
-                strike, strike2, n_steps)
+                strike, strike2, n_steps, n_assets, ex)
 
     def submit(self, req):
         """Enqueue one contract.
@@ -301,7 +325,13 @@ class SchedulerCore:
             self.metrics_.bump(cache_hits=1, completed=1)
             self.metrics_.add_latency(self._clock() - now)
             return rid, None, quote
-        bucket = (key[8], key[4] > 0.0)          # (n_steps, needs TC engine)
+        engine = route_engine(any_tc=key[4] > 0.0, n_assets=key[9],
+                              exercise_steps=key[10])
+        # (n_steps, engine) — the engine NAME, not a bool: an lsmc bucket
+        # must never coalesce with a lattice bucket of the same depth,
+        # and lsmc chunks additionally key on their static MC shape
+        bucket = ((key[8], engine) if engine != "lsmc"
+                  else (key[8], "lsmc", key[9], key[10]))
         self.buckets.setdefault(bucket, []).append(
             _Pending(rid=rid, key=key, t_submit=now))
         return rid, bucket, None
@@ -322,13 +352,19 @@ class SchedulerCore:
             self.buckets[bucket] = rest
         else:
             self.buckets.pop(bucket, None)
-        n_steps, has_tc = bucket
-        cols = tuple(zip(*(p.key for p in chunk_reqs)))
+        n_steps, engine = bucket[0], bucket[1]
+        # only the 8 price_flat columns cross the worker boundary — the
+        # bucket-constant tail (n_steps, n_assets, schedule) rides as
+        # chunk fields
+        cols = tuple(zip(*(p.key[:8] for p in chunk_reqs)))
         return ChunkSpec(bucket=bucket, requests=chunk_reqs,
-                         n_steps=n_steps,
-                         engine="rz" if has_tc else "notc",
+                         n_steps=n_steps, engine=engine,
                          capacity=self.capacity, backend=self.backend,
-                         padded=_next_pow2(len(chunk_reqs)), cols=cols)
+                         padded=_next_pow2(len(chunk_reqs)), cols=cols,
+                         n_assets=bucket[2] if engine == "lsmc" else 1,
+                         exercise_steps=(bucket[3] if engine == "lsmc"
+                                         else None),
+                         n_paths=self.n_paths, mc_seed=self.mc_seed)
 
     def requeue(self, chunk: ChunkSpec) -> None:
         """Return a chunk's requests to the *front* of their bucket (no
@@ -348,9 +384,11 @@ class SchedulerCore:
         seconds = res.seconds if engine_seconds is None else engine_seconds
         done: Dict[int, Any] = {}
         lats = []
+        se = res.stderr
         for i, p in enumerate(chunk.requests):
             quote = PriceQuote(ask=float(res.ask[i]), bid=float(res.bid[i]),
-                               max_pieces=int(res.row_pieces[i]))
+                               max_pieces=int(res.row_pieces[i]),
+                               stderr=float(se[i]) if se is not None else 0.0)
             self.store_result(p.rid, quote)
             done[p.rid] = quote
             self.remember(p.key, quote)
@@ -362,12 +400,23 @@ class SchedulerCore:
         self.compile_key_seen(chunk.padded, chunk.n_steps, chunk.engine,
                               False, backend=chunk.backend,
                               shard=(plan.n_shards, plan.lanes)
-                              if plan is not None else None)
+                              if plan is not None else None,
+                              extra=self.chunk_compile_extra(chunk))
         return done
+
+    @staticmethod
+    def chunk_compile_extra(chunk: ChunkSpec) -> Optional[tuple]:
+        """The lsmc static config that shapes its compiled program —
+        appended to the compile key so two MC chunks differing only in
+        path count or schedule never count as one program."""
+        if chunk.engine != "lsmc":
+            return None
+        return (chunk.n_paths, chunk.n_assets, chunk.exercise_steps)
 
     def compile_key_seen(self, padded: int, n_steps: int, engine: str,
                          greeks: bool, backend: Optional[str] = None,
-                         shard: Optional[tuple] = None) -> None:
+                         shard: Optional[tuple] = None,
+                         extra: Optional[tuple] = None) -> None:
         """Count a *successful* engine call against its compiled-program
         key.  Called only after the call returns: a failed call (e.g. a
         capacity overflow) compiled nothing worth counting, and raising
@@ -375,10 +424,11 @@ class SchedulerCore:
         retrying is a genuine fresh compile, not a hit.  ``shard`` is
         ``(n_shards, lanes)`` when the call ran on the device mesh —
         both change the compiled program's shape, so they are part of
-        the key."""
+        the key; ``extra`` carries engine-specific static config (the
+        lsmc path/schedule shape, see :meth:`chunk_compile_extra`)."""
         ck = (padded, n_steps, engine,
               self.backend if backend is None else backend, greeks,
-              self.capacity, shard)
+              self.capacity, shard, extra)
         if ck in self._compiled:
             self._compiled[ck] += 1
             self.metrics_.bump(compile_hits=1)

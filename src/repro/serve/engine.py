@@ -38,7 +38,12 @@ class PriceRequest:
     """One contract.  ``payoff``/``strike``/``n_steps`` left at ``None``
     take the service defaults; set per request they are *honoured* — the
     scheduler batches them as payoff-family data, so a heterogeneous
-    stream still coalesces into one compiled call per bucket."""
+    stream still coalesces into one compiled call per bucket.
+
+    ``n_assets > 1`` (a basket) or an explicit ``exercise_steps``
+    Bermudan schedule routes the request to the ``lsmc`` Monte Carlo
+    engine — such requests land in their own buckets keyed by the MC
+    contract shape (see ``SchedulerCore.submit``)."""
     s0: float
     sigma: float
     rate: float
@@ -48,6 +53,8 @@ class PriceRequest:
     strike: Optional[float] = None
     strike2: Optional[float] = None
     n_steps: Optional[int] = None
+    n_assets: Optional[int] = None
+    exercise_steps: Optional[tuple] = None
 
 
 @dataclasses.dataclass
@@ -69,6 +76,8 @@ class GridRequest:
     n_steps: int = 100
     greeks: bool = False
     backend: str = "jnp"     # TC engine implementation: "jnp" | "pallas"
+    n_assets: int = 1        # > 1 routes the grid to the lsmc engine
+    exercise_steps: Any = None   # Bermudan schedule -> lsmc engine
 
 
 class PricingEngine:

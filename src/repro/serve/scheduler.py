@@ -8,17 +8,21 @@ family and strike — payoff-as-data (``core/payoff.py::param_payoff``)
 makes a heterogeneous batch one compiled call — and flushes micro-batches
 through ``repro.api.price_flat`` on a **size-or-deadline** trigger:
 
-    submit() ──► bucket queues (n_steps, frictionless?) ──► pad to 2^k
-        ──► engine="auto" (no-TC lattice | Roux–Zastawniak) ──► unpad
-        ──► per-request PriceQuote + latency sample
+    submit() ──► bucket queues (n_steps, engine) ──► pad to 2^k
+        ──► engine="auto" (no-TC lattice | Roux–Zastawniak | LSMC) ──►
+        unpad ──► per-request PriceQuote + latency sample
 
 Design points (see ``docs/SERVING.md`` for the operator's guide):
 
-* **Buckets.**  Requests are queued by ``(n_steps, cost_rate > 0)`` —
-  the two things that force a different compiled program (tree depth is
-  shape-static; the frictionless and transaction-cost engines are
-  different programs).  Everything else (payoff family, strike, spot,
-  vol, rate, maturity, λ value) is *data* and batches freely.
+* **Buckets.**  Requests are queued by ``(n_steps, engine)`` — the
+  things that force a different compiled program (tree depth is
+  shape-static; the frictionless, transaction-cost and Monte Carlo
+  engines are different programs).  The engine is routed per request by
+  contract shape (``repro.scenarios.route_engine``): multi-asset or
+  Bermudan requests go to ``lsmc`` and additionally key their bucket on
+  ``(n_assets, exercise_steps)`` — the MC contract shape is static.
+  Everything else (payoff family, strike, spot, vol, rate, maturity,
+  λ value) is *data* and batches freely.
 * **Padding.**  A flushed batch is padded up to the next power of two
   (by repeating its last row) so arbitrary traffic sizes hit at most
   ``log2(max_batch)+1`` compiled shapes per bucket.
@@ -76,6 +80,7 @@ class PricingService:
                  default_strike: float = 100.0,
                  result_cache_size: int = 1024, max_results: int = 65536,
                  min_grid_bucket: Optional[int] = None,
+                 n_paths: int = 4096, mc_seed: int = 0,
                  devices: Optional[int] = None, mesh=None,
                  rebalance_ema: float = 0.5,
                  clock: Callable[[], float] = time.monotonic):
@@ -84,7 +89,7 @@ class PricingService:
             backend=backend, default_n_steps=default_n_steps,
             default_payoff=default_payoff, default_strike=default_strike,
             result_cache_size=result_cache_size, max_results=max_results,
-            clock=clock)
+            n_paths=n_paths, mc_seed=mc_seed, clock=clock)
         # device-mesh routing (lazy imports: the jax-touching modules load
         # only when sharding is actually requested)
         if devices is not None or mesh is not None:
@@ -177,9 +182,10 @@ class PricingService:
     # ------------------------------------------------------------------ #
     def _compile_key_seen(self, padded: int, n_steps: int, engine: str,
                           greeks: bool, backend: Optional[str] = None,
-                          shard: Optional[tuple] = None) -> None:
+                          shard: Optional[tuple] = None,
+                          extra: Optional[tuple] = None) -> None:
         self.core.compile_key_seen(padded, n_steps, engine, greeks,
-                                   backend=backend, shard=shard)
+                                   backend=backend, shard=shard, extra=extra)
 
     # ------------------------------------------------------------------ #
     # device-mesh shard planning / rebalance hook
@@ -194,15 +200,28 @@ class PricingService:
             return None
         cr = np.asarray(cost_rates, np.float64)
         cr = np.concatenate([cr, np.repeat(cr[-1:], padded - cr.shape[0])])
-        return self._shard_plan_from_costs(bucket, n_steps, cr)
+        return self._shard_plan_from_costs(bucket, n_steps, cr,
+                                           engine=bucket[1],
+                                           n_assets=(bucket[2]
+                                                     if bucket[1] == "lsmc"
+                                                     else 1),
+                                           exercise_steps=(bucket[3]
+                                                           if bucket[1]
+                                                           == "lsmc"
+                                                           else None))
 
     def _shard_plan_from_costs(self, key, n_steps: int, cost_rates_padded,
-                               *, copies: int = 1):
+                               *, copies: int = 1, engine: str = "notc",
+                               n_assets: int = 1, exercise_steps=None):
         """Rebalancer-steered plan over a padded batch's cost-model costs
         (``copies`` > 1 tiles for the greeks bump blocks)."""
         from ..core.partition import scenario_costs
+        n_ex = (None if exercise_steps is None else len(exercise_steps))
         costs = scenario_costs(n_steps, cost_rates_padded,
-                               capacity=self.capacity)
+                               capacity=self.capacity,
+                               engine=engine if engine == "lsmc" else None,
+                               n_paths=self.core.n_paths, n_exercise=n_ex,
+                               n_assets=n_assets)
         if copies > 1:
             costs = np.tile(costs, copies)
         return self._rebalancer.plan(key, costs, self._n_shards,
@@ -335,15 +354,18 @@ class PricingService:
         with a positive ``cost_rate`` the Roux–Zastawniak engine.
         """
         from ..api import price_grid
-        from ..scenarios import GridResult, ScenarioGrid
+        from ..scenarios import GridResult, ScenarioGrid, route_engine
         grid = ScenarioGrid.cartesian(
             s0=req.s0, sigma=req.sigma, rate=req.rate,
             maturity=req.maturity, cost_rate=req.cost_rate,
             payoff=req.payoff, strike=req.strike, strike2=req.strike2,
-            n_steps=req.n_steps)
+            n_steps=req.n_steps, n_assets=getattr(req, "n_assets", 1),
+            exercise_steps=getattr(req, "exercise_steps", None))
         n = grid.n_scenarios
         bucket = max(self.min_grid_bucket, _next_pow2(n))
-        engine = "rz" if np.any(grid.cost_rate > 0.0) else "notc"
+        engine = route_engine(any_tc=bool(np.any(grid.cost_rate > 0.0)),
+                              n_assets=grid.n_assets,
+                              exercise_steps=grid.exercise_steps)
         # grids rebalance under their own stream key: plan through the
         # rebalancer (greeks bump the batch 5x — the plan must cover the
         # bumped rows) so measured-seconds feedback actually steers the
@@ -355,11 +377,14 @@ class PricingService:
                                  np.repeat(grid.cost_rate[-1:],
                                            bucket - n)])
             plan = self._shard_plan_from_costs(
-                gkey, grid.n_steps, cr, copies=5 if req.greeks else 1)
+                gkey, grid.n_steps, cr, copies=5 if req.greeks else 1,
+                engine=engine, n_assets=grid.n_assets,
+                exercise_steps=grid.exercise_steps)
         t0 = self._clock()
         res = price_grid(grid.pad_to(bucket), engine=engine,
                          capacity=self.capacity, greeks=req.greeks,
-                         backend=req.backend, mesh=self._mesh,
+                         backend=req.backend, n_paths=self.core.n_paths,
+                         seed=self.core.mc_seed, mesh=self._mesh,
                          shard_plan=plan)
         elapsed = self._clock() - t0
         self.metrics_.bump(engine_seconds=elapsed, grids=1,
@@ -369,15 +394,21 @@ class PricingService:
         self._compile_key_seen(bucket, grid.n_steps, engine, req.greeks,
                                backend=req.backend,
                                shard=(info.plan.n_shards, info.plan.lanes)
-                               if info else None)
+                               if info else None,
+                               extra=((self.core.n_paths, grid.n_assets,
+                                       grid.exercise_steps)
+                                      if engine == "lsmc" else None))
         self.metrics_.count_engine(engine)
         cut = lambda a: (None if a is None
                          else a.ravel()[:n].reshape(grid.shape))
         rp = getattr(res, "row_pieces", None)
+        se = getattr(res, "stderr", None)
         return GridResult(
             grid=grid, ask=cut(res.ask), bid=cut(res.bid),
             max_pieces=res.max_pieces,
             delta_ask=cut(res.delta_ask), delta_bid=cut(res.delta_bid),
             vega_ask=cut(res.vega_ask), vega_bid=cut(res.vega_bid),
             shard_info=res.shard_info,
-            row_pieces=None if rp is None else cut(np.asarray(rp)))
+            row_pieces=None if rp is None else cut(np.asarray(rp)),
+            stderr=None if se is None else cut(np.asarray(se)),
+            engine=getattr(res, "engine", engine))

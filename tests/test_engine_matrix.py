@@ -1,0 +1,198 @@
+"""Cross-engine conformance matrix: engine x backend x mesh width.
+
+The contract under test: ``engine="auto"`` is a *router*, not a fourth
+engine — for every lattice bucket it must be bit-equal to the explicit
+engine it routes to, across backends and mesh widths, and multi-asset /
+Bermudan contracts must land on the ``lsmc`` Monte Carlo engine.  The
+same guarantee is asserted through every entry point: ``api.price_grid``,
+``PricingService`` (continuous batching) and the raw ``ChunkSpec`` /
+``execute_chunk`` path the gateway replicas use.
+
+shard-marked: under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(the CI shard lane) the ``devices=2/8`` cells exercise the real
+``shard_map`` path; on one device they run the bit-identical simulated
+layout (docs/KNOWN_ISSUES.md).
+"""
+import numpy as np
+import pytest
+
+from repro.api import price_flat, price_grid
+from repro.scenarios import (ScenarioGrid, price_grid_lsmc, price_grid_notc,
+                             price_grid_rz)
+from repro.serve.core import ChunkSpec, SchedulerCore, execute_chunk
+from repro.serve.engine import GridRequest, PriceRequest
+from repro.serve.scheduler import PricingService
+
+pytestmark = pytest.mark.shard
+
+BACKENDS = ("jnp", "pallas")
+MESHES = (None, 2, 8)      # None = plain jit; 2/8 = (simulated) mesh widths
+
+AXES = dict(s0=(90.0, 100.0, 110.0), sigma=(0.15, 0.25), rate=0.1,
+            maturity=0.25, strike=100.0, payoff="put", n_steps=16)
+
+
+def _bit_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------ lattice buckets: auto==explicit
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("devices", MESHES)
+def test_auto_bit_equal_to_rz_lattice(backend, devices):
+    kw = dict(cost_rate=(0.0, 0.01), capacity=24, backend=backend,
+              devices=devices, **AXES)
+    auto = price_grid(engine="auto", **kw)
+    explicit = price_grid(engine="rz", **kw)
+    assert auto.engine == "rz"
+    _bit_equal(auto.ask, explicit.ask)
+    _bit_equal(auto.bid, explicit.bid)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("devices", MESHES)
+def test_auto_bit_equal_to_notc_lattice(backend, devices):
+    kw = dict(cost_rate=0.0, backend=backend, devices=devices, **AXES)
+    auto = price_grid(engine="auto", **kw)
+    explicit = price_grid(engine="notc", **kw)
+    assert auto.engine == "notc"
+    _bit_equal(auto.ask, explicit.ask)
+    assert auto.stderr is None
+
+
+@pytest.mark.parametrize("devices", MESHES)
+def test_auto_routes_mc_contracts_to_lsmc(devices):
+    for kw in (dict(n_assets=2), dict(exercise_steps=(8, 16))):
+        res = price_grid(engine="auto", n_paths=512, seed=0,
+                         devices=devices, **AXES, **kw)
+        assert res.engine == "lsmc"
+        assert res.stderr is not None and np.all(res.stderr > 0.0)
+        grid = ScenarioGrid.cartesian(**AXES, **kw)
+        explicit = price_grid_lsmc(grid, n_paths=512, seed=0,
+                                   devices=devices)
+        _bit_equal(res.ask, explicit.ask)
+        _bit_equal(res.stderr, explicit.stderr)
+
+
+@pytest.mark.parametrize("devices", MESHES)
+def test_lsmc_mesh_width_invariance(devices):
+    """Shard layout must not change MC draws: every mesh width bit-equal
+    to the single-device result (keys are per-row data)."""
+    grid = ScenarioGrid.cartesian(n_assets=2, **AXES)
+    base = price_grid_lsmc(grid, n_paths=512, seed=0)
+    res = price_grid_lsmc(grid, n_paths=512, seed=0, devices=devices)
+    _bit_equal(base.ask, res.ask)
+    _bit_equal(base.stderr, res.stderr)
+
+
+# ------------------------------------------------------- service path
+
+def _mixed_requests():
+    return [
+        PriceRequest(s0=100.0, sigma=0.2, rate=0.1, maturity=0.25,
+                     cost_rate=0.0),
+        PriceRequest(s0=100.0, sigma=0.2, rate=0.1, maturity=0.25,
+                     cost_rate=0.01),
+        PriceRequest(s0=100.0, sigma=0.2, rate=0.1, maturity=0.25,
+                     cost_rate=0.0, n_assets=3),
+        PriceRequest(s0=100.0, sigma=0.2, rate=0.1, maturity=0.25,
+                     cost_rate=0.0, exercise_steps=(4, 8)),
+    ]
+
+
+def test_service_buckets_split_by_engine():
+    svc = PricingService(max_batch=8, default_n_steps=8, n_paths=512,
+                        mc_seed=5)
+    rids = [svc.submit(r) for r in _mixed_requests()]
+    svc.flush()
+    quotes = [svc.result(r) for r in rids]
+    assert all(q is not None for q in quotes)
+    assert svc.metrics()["engine_batches"] == {
+        "notc": 1, "rz": 1, "lsmc": 2}
+    # MC quotes carry a standard error; lattice quotes report 0
+    assert quotes[0].stderr == 0.0 and quotes[1].stderr == 0.0
+    assert quotes[2].stderr > 0.0 and quotes[3].stderr > 0.0
+
+
+def test_service_lsmc_quote_bit_equal_to_explicit():
+    svc = PricingService(max_batch=8, default_n_steps=8, n_paths=512,
+                        mc_seed=5)
+    rid = svc.submit(PriceRequest(s0=100.0, sigma=0.2, rate=0.1,
+                                  maturity=0.25, cost_rate=0.0,
+                                  exercise_steps=(4, 8)))
+    svc.flush()
+    q = svc.result(rid)
+    ref = price_flat(s0=(100.0,), sigma=0.2, rate=0.1, maturity=0.25,
+                     cost_rate=0.0, strike=100.0, n_steps=8,
+                     exercise_steps=(4, 8), engine="lsmc", n_paths=512,
+                     seed=5)
+    assert q.ask == float(np.asarray(ref.ask).ravel()[0])
+    assert q.stderr == float(np.asarray(ref.stderr).ravel()[0])
+
+
+def test_service_grid_request_routes_to_lsmc():
+    svc = PricingService(max_batch=8, default_n_steps=8, n_paths=512)
+    res = svc.price_grid(GridRequest(s0=(95.0, 105.0), n_steps=8,
+                                     n_assets=2))
+    assert res.engine == "lsmc"
+    assert res.stderr is not None and res.stderr.shape == res.ask.shape
+    explicit = price_grid_lsmc(
+        ScenarioGrid.cartesian(s0=(95.0, 105.0), n_steps=8, n_assets=2),
+        n_paths=512, seed=0)
+    _bit_equal(res.ask, explicit.ask)
+
+
+# ------------------------------------------- gateway ChunkSpec executor path
+
+def test_execute_chunk_lsmc_matches_scenarios_path():
+    core = SchedulerCore(max_batch=8, default_n_steps=8, n_paths=512,
+                         mc_seed=9)
+    for r in _mixed_requests():
+        core.submit(r)
+    chunks = [core.take_chunk(b) for b in list(core.buckets)]
+    lsmc_chunks = [c for c in chunks if c.engine == "lsmc"]
+    assert len(lsmc_chunks) == 2
+    for chunk in lsmc_chunks:
+        assert chunk.n_paths == 512 and chunk.mc_seed == 9
+        res = execute_chunk(chunk)       # the replica executor
+        assert np.all(res.stderr[:chunk.n] > 0.0)
+        grid = ScenarioGrid.explicit(
+            s0=np.asarray(chunk.cols[0]), sigma=np.asarray(chunk.cols[1]),
+            rate=np.asarray(chunk.cols[2]),
+            maturity=np.asarray(chunk.cols[3]),
+            cost_rate=np.asarray(chunk.cols[4]),
+            payoff=tuple(chunk.cols[5]),
+            strike=np.asarray(chunk.cols[6]),
+            strike2=np.asarray(chunk.cols[7]), n_steps=chunk.n_steps,
+            n_assets=chunk.n_assets, exercise_steps=chunk.exercise_steps)
+        ref = price_grid_lsmc(grid.pad_to(chunk.padded), n_paths=512,
+                              seed=9)
+        _bit_equal(res.ask, ref.ask.ravel())
+        _bit_equal(res.stderr, ref.stderr.ravel())
+
+
+def test_bucket_keys_never_collide_across_engines():
+    """Regression for the tentpole bugfix: an lsmc request must never
+    coalesce into a lattice bucket of the same depth (pre-fix the bucket
+    key was ``(n_steps, bool(tc))`` and a frictionless Bermudan request
+    landed in the notc bucket)."""
+    core = SchedulerCore(max_batch=64, default_n_steps=8)
+    for r in _mixed_requests():
+        core.submit(r)
+    buckets = list(core.buckets)
+    assert len(buckets) == 4
+    lattice = {b for b in buckets if b[1] in ("notc", "rz")}
+    mc = {b for b in buckets if b[1] == "lsmc"}
+    assert len(lattice) == 2 and len(mc) == 2
+    assert all(len(b) == 2 for b in lattice)
+    # MC buckets carry the contract shape: same depth, distinct buckets
+    assert {b[0] for b in mc} == {8}
+    assert len({b[2:] for b in mc}) == 2
+    # distinct compile keys too (engine + MC extras are key components)
+    core2 = SchedulerCore(max_batch=64, default_n_steps=8)
+    core2.compile_key_seen(8, 8, "notc", False)
+    core2.compile_key_seen(8, 8, "lsmc", False, extra=(4096, 1, (4, 8)))
+    core2.compile_key_seen(8, 8, "lsmc", False, extra=(4096, 1, (4, 8)))
+    m = core2.metrics_.snapshot()
+    assert m["compile_misses"] == 2 and m["compile_hits"] == 1

@@ -1,0 +1,187 @@
+"""Least-squares Monte Carlo engine: seeded oracle locks + determinism.
+
+The lattice engines are the repo's exact oracles for 1-D American
+contracts, so the LSMC engine is *locked* against them under fixed PRNG
+seeds: the deterministic keys make the k-standard-error asserts
+reproducible (see tests/_stats.py).  The remaining gap between LSMC (an
+exact-GBM simulator) and a CRR tree is the tree's own discretisation
+error, which shrinks like 1/n_steps — the locks use a deep tree so the
+MC standard error dominates.
+"""
+import numpy as np
+import pytest
+
+from _stats import assert_within_se, rmse
+
+from repro.core import LatticeModel, american_put, price_notc_np, price_ref
+from repro.core.lsmc import (LSMC_BASES, basis_matrix, exercise_schedule,
+                             path_keys)
+from repro.scenarios import (ScenarioGrid, price_grid_lsmc, price_grid_notc,
+                             price_grid_rz, route_engine)
+
+pytestmark = pytest.mark.mc
+
+N_DEEP = 200          # oracle tree depth: CRR bias ~0.015 << 3*SE here
+PATHS = 8192
+MKT = dict(s0=100.0, sigma=0.2, rate=0.1, maturity=0.25)
+
+
+def _american_grid(n_steps=N_DEEP, **kw):
+    merged = {**MKT, **kw}
+    return ScenarioGrid.cartesian(n_steps=n_steps, strike=100.0,
+                                  payoff="put", **merged)
+
+
+def _oracle_put(n_steps=N_DEEP):
+    m = LatticeModel(n_steps=n_steps, cost_rate=0.0, **MKT)
+    return price_notc_np(m, american_put(100.0))
+
+
+# ---------------------------------------------------------------- oracles
+
+def test_lsmc_locks_to_notc_oracle_within_3se():
+    res = price_grid_lsmc(_american_grid(), n_paths=PATHS, seed=0)
+    se = float(res.stderr.ravel()[0])
+    assert se > 0.0
+    assert_within_se(res.ask.ravel()[0], _oracle_put(), se,
+                     k=3.0, label="lsmc vs notc american put")
+
+
+def test_lsmc_locks_to_rz_reference_at_zero_costs():
+    """At cost_rate=0 the RZ reference collapses to the classic binomial
+    price, giving a second, independent oracle for the same lock."""
+    m = LatticeModel(n_steps=64, cost_rate=0.0, **MKT)
+    ref = price_ref(m, american_put(100.0))
+    assert ref.ask == pytest.approx(ref.bid, abs=1e-10)
+    res = price_grid_lsmc(_american_grid(n_steps=64), n_paths=PATHS, seed=0)
+    se = float(res.stderr.ravel()[0])
+    # shallower tree -> allow its CRR discretisation gap explicitly
+    assert_within_se(res.ask.ravel()[0], ref.ask, se, k=3.0, extra=0.06,
+                     label="lsmc vs rz_ref (lambda=0)")
+
+
+@pytest.mark.parametrize("basis", LSMC_BASES)
+def test_both_bases_lock_to_oracle(basis):
+    res = price_grid_lsmc(_american_grid(), n_paths=PATHS, seed=0,
+                          basis=basis)
+    assert_within_se(res.ask.ravel()[0], _oracle_put(),
+                     float(res.stderr.ravel()[0]), k=3.0,
+                     label=f"lsmc[{basis}] vs notc")
+
+
+def test_convergence_in_paths_monotone():
+    """RMSE over 3 seeds shrinks from 1k to 16k paths (~4x in theory)."""
+    target = _oracle_put()
+    errs = []
+    for paths in (1024, 4096, 16384):
+        vals = [float(price_grid_lsmc(_american_grid(), n_paths=paths,
+                                      seed=s).ask.ravel()[0])
+                for s in (0, 1, 2)]
+        errs.append(rmse(vals, target))
+    assert errs[-1] < errs[0]
+
+
+# ------------------------------------------------- determinism / sharding
+
+def test_repeat_and_shard_and_pad_bit_equal():
+    grid = ScenarioGrid.cartesian(s0=(90.0, 100.0, 110.0), sigma=0.2,
+                                  rate=0.1, maturity=0.25, n_steps=50,
+                                  strike=100.0, exercise_steps=(10, 25, 50))
+    a = price_grid_lsmc(grid, n_paths=1024, seed=3)
+    b = price_grid_lsmc(grid, n_paths=1024, seed=3)
+    np.testing.assert_array_equal(a.ask, b.ask)
+    np.testing.assert_array_equal(a.stderr, b.stderr)
+    # simulated mesh: identical layout, bit-equal results
+    c = price_grid_lsmc(grid, n_paths=1024, seed=3, devices=4)
+    np.testing.assert_array_equal(a.ask, c.ask)
+    # padding repeats the last row; real rows keep their index-derived keys
+    d = price_grid_lsmc(grid.pad_to(8), n_paths=1024, seed=3)
+    np.testing.assert_array_equal(a.ask.ravel(), d.ask.ravel()[:3])
+
+
+def test_seed_changes_price_but_stays_in_band():
+    target = _oracle_put()
+    r0 = price_grid_lsmc(_american_grid(), n_paths=PATHS, seed=0)
+    r1 = price_grid_lsmc(_american_grid(), n_paths=PATHS, seed=1)
+    assert float(r0.ask.ravel()[0]) != float(r1.ask.ravel()[0])
+    for r, s in ((r0, 0), (r1, 1)):
+        assert_within_se(r.ask.ravel()[0], target,
+                         float(r.stderr.ravel()[0]), k=4.0,
+                         label=f"seed={s}")
+
+
+def test_path_keys_are_fold_in_per_row():
+    import jax
+    keys = np.asarray(path_keys(7, 4))
+    assert keys.shape == (4, 2)
+    expect = np.asarray(jax.random.fold_in(jax.random.PRNGKey(7), 2))
+    np.testing.assert_array_equal(keys[2], expect)
+
+
+# ---------------------------------------------------- conventions / guards
+
+def test_tc_premium_convention_and_spread():
+    grid = _american_grid(n_steps=50, cost_rate=0.01)
+    res = price_grid_lsmc(grid, n_paths=2048, seed=0)
+    ask, bid = float(res.ask.ravel()[0]), float(res.bid.ravel()[0])
+    mid = 0.5 * (ask + bid)
+    assert bid < mid < ask
+    assert ask == pytest.approx(mid * 1.01, rel=1e-12)
+    assert bid == pytest.approx(mid * 0.99, rel=1e-12)
+
+
+def test_basket_bermudan_prices_and_se_finite():
+    grid = ScenarioGrid.cartesian(s0=(95.0, 105.0), n_steps=40,
+                                  strike=100.0, n_assets=3,
+                                  exercise_steps=(10, 20, 40))
+    res = price_grid_lsmc(grid, n_paths=1024, seed=0)
+    assert res.engine == "lsmc"
+    assert np.all(np.isfinite(res.ask)) and np.all(res.ask >= 0.0)
+    assert np.all(res.stderr > 0.0)
+    # basket-mean put is worth less than the 1-D put (diversification)
+    one = price_grid_lsmc(
+        ScenarioGrid.cartesian(s0=(95.0, 105.0), n_steps=40, strike=100.0,
+                               exercise_steps=(10, 20, 40)),
+        n_paths=1024, seed=0)
+    assert np.all(res.ask < one.ask)
+
+
+def test_schedule_validation():
+    assert exercise_schedule(10, None) == tuple(range(11))
+    assert exercise_schedule(10, (10, 3)) == (3, 10)
+    with pytest.raises(ValueError):
+        exercise_schedule(10, (3, 5))        # missing terminal step
+    with pytest.raises(ValueError):
+        exercise_schedule(10, (0, 11, 10))   # out of range
+    with pytest.raises(ValueError):
+        exercise_schedule(10, ())
+
+
+def test_lattice_engines_reject_mc_contracts():
+    basket = ScenarioGrid.cartesian(n_steps=20, n_assets=2)
+    bermudan = ScenarioGrid.cartesian(n_steps=20, exercise_steps=(5, 20))
+    for grid in (basket, bermudan):
+        with pytest.raises(ValueError, match="lsmc"):
+            price_grid_notc(grid)
+        with pytest.raises(ValueError, match="lsmc"):
+            price_grid_rz(grid)
+
+
+def test_route_engine_table():
+    assert route_engine(any_tc=False) == "notc"
+    assert route_engine(any_tc=True) == "rz"
+    assert route_engine(any_tc=False, n_assets=2) == "lsmc"
+    assert route_engine(any_tc=True, n_assets=2) == "lsmc"
+    assert route_engine(any_tc=True, exercise_steps=(5, 10)) == "lsmc"
+
+
+def test_basis_matrix_shapes_and_laguerre_values():
+    x = np.asarray([0.5, 1.0, 2.0])
+    poly = np.asarray(basis_matrix(x, 2, "poly"))
+    np.testing.assert_allclose(poly[:, 1], x)
+    np.testing.assert_allclose(poly[:, 2], x * x)
+    lag = np.asarray(basis_matrix(x, 2, "laguerre"))
+    np.testing.assert_allclose(lag[:, 1], 1.0 - x)
+    np.testing.assert_allclose(lag[:, 2], 1.0 - 2.0 * x + 0.5 * x * x)
+    with pytest.raises(ValueError):
+        basis_matrix(x, 2, "hermite")

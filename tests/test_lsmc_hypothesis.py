@@ -1,0 +1,99 @@
+"""Property-based tests of the LSMC engine over random Bermudan schedules.
+
+Derandomised (fixed example database seed) so the Monte Carlo asserts
+inherit the determinism of the engine's per-row keys: each drawn
+(schedule, seed) pair prices bit-identically on every CI run, making
+the k-standard-error bounds repeatable rather than flaky.
+
+Degeneracy properties from the contract algebra:
+  * a single terminal exercise date IS a European option — the LSMC
+    backward induction must reproduce the plain European MC estimate on
+    the same draws *exactly* (no regression steps remain);
+  * the every-step schedule IS the American contract — locked to the
+    lattice oracle within standard error (plus the tree's own
+    discretisation allowance);
+  * fewer exercise rights are never worth more (modulo MC noise);
+  * the transaction-cost premium convention preserves bid <= ask and
+    collapses the spread at zero costs.
+"""
+import numpy as np
+import pytest
+
+from _stats import assert_within_se
+
+pytestmark = pytest.mark.mc
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this environment")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.core import LatticeModel, american_put, price_notc_np  # noqa: E402
+from repro.core.lsmc import path_keys, simulate_basket  # noqa: E402
+from repro.scenarios import ScenarioGrid, price_grid_lsmc  # noqa: E402
+
+N = 24
+MKT = dict(sigma=0.2, rate=0.1, maturity=0.25)
+_settings = settings(max_examples=6, deadline=None, derandomize=True)
+
+schedules = st.sets(st.integers(1, N - 1), max_size=6).map(
+    lambda s: tuple(sorted(s | {N})))
+
+
+def _price(schedule, *, s0=100.0, cost_rate=0.0, paths=1024, seed=0):
+    grid = ScenarioGrid.cartesian(s0=s0, cost_rate=cost_rate, strike=100.0,
+                                  payoff="put", n_steps=N,
+                                  exercise_steps=schedule, **MKT)
+    return price_grid_lsmc(grid, n_paths=paths, seed=seed)
+
+
+@given(schedules, st.sampled_from([0.0, 0.005, 0.02]))
+@_settings
+def test_bid_ask_ordering_under_both_cost_conventions(schedule, lam):
+    res = _price(schedule, cost_rate=lam)
+    ask, bid = float(res.ask.ravel()[0]), float(res.bid.ravel()[0])
+    assert 0.0 <= bid <= ask
+    if lam == 0.0:
+        assert ask == bid          # frictionless: the spread collapses
+    else:
+        assert ask > bid           # premium convention: (1 +/- lam) * p
+
+
+@given(st.integers(0, 5), st.sampled_from([90.0, 100.0, 110.0]))
+@_settings
+def test_single_terminal_date_is_european_mc(seed, s0):
+    """With only the expiry exercisable there is nothing to regress:
+    LSMC must equal the plain European MC estimate on the same draws."""
+    res = _price((N,), s0=s0, seed=seed)
+    key = np.asarray(path_keys(seed, 1))[0]
+    b, t = simulate_basket(s0, MKT["sigma"], MKT["rate"], MKT["maturity"],
+                           jax.numpy.asarray(key), n_steps=N, steps=(N,),
+                           n_paths=1024, n_assets=1, antithetic=True)
+    v = np.maximum(100.0 - np.asarray(b)[:, 0], 0.0) * np.exp(
+        -MKT["rate"] * float(t[0]))
+    euro = float(np.mean(0.5 * (v[:512] + v[512:])))
+    assert float(res.ask.ravel()[0]) == pytest.approx(euro, abs=1e-10)
+
+
+@given(st.integers(0, 5))
+@_settings
+def test_every_step_schedule_locks_to_american_oracle(seed):
+    res = _price(tuple(range(1, N + 1)), paths=4096, seed=seed)
+    oracle = price_notc_np(
+        LatticeModel(s0=100.0, n_steps=N, cost_rate=0.0, **MKT),
+        american_put(100.0))
+    # extra: CRR discretisation gap of the N=24 oracle tree itself
+    assert_within_se(res.ask.ravel()[0], oracle,
+                     float(res.stderr.ravel()[0]), k=4.0, extra=0.12,
+                     label=f"all-dates lsmc vs lattice (seed={seed})")
+
+
+@given(schedules, st.integers(0, 3))
+@_settings
+def test_more_exercise_rights_never_cheaper(schedule, seed):
+    sub = _price(schedule, paths=2048, seed=seed)
+    dense = _price(None, paths=2048, seed=seed)
+    noise = float(sub.stderr.ravel()[0]) + float(dense.stderr.ravel()[0])
+    assert (float(sub.ask.ravel()[0])
+            <= float(dense.ask.ravel()[0]) + 5.0 * noise)

@@ -130,7 +130,8 @@ def test_scheduler_pad_unpad_heterogeneous_vs_oracle():
     ids = [svc.submit(r) for r in reqs]
     svc.flush()
     m = svc.metrics()
-    assert m["batches"] == 1 and m["engine_batches"] == {"notc": 1, "rz": 0}
+    assert m["batches"] == 1 and m["engine_batches"] == {"notc": 1, "rz": 0,
+                                                         "lsmc": 0}
     assert m["padded"] == 8 and m["contracts"] == 5
     for req, rid in zip(reqs, ids):
         q = svc.result(rid)
@@ -149,7 +150,7 @@ def test_scheduler_tc_bucket_vs_oracle():
     ids = [svc.submit(r) for r in tc + free]
     svc.flush()
     m = svc.metrics()
-    assert m["engine_batches"] == {"notc": 1, "rz": 1}
+    assert m["engine_batches"] == {"notc": 1, "rz": 1, "lsmc": 0}
     for req, rid in zip(tc + free, ids):
         q = svc.result(rid)
         ref = _oracle(req, n_steps=8, capacity=16)
@@ -238,7 +239,8 @@ def test_grid_request_engine_auto_routing(monkeypatch):
     eng.price_grid(GridRequest(s0=(95.0, 100.0), cost_rate=(0.0, 0.01),
                                n_steps=8))
     assert calls == ["notc", "rz"]
-    assert eng.service.metrics()["engine_batches"] == {"notc": 1, "rz": 1}
+    assert eng.service.metrics()["engine_batches"] == {"notc": 1, "rz": 1,
+                                                       "lsmc": 0}
 
     monkeypatch.undo()
     res = eng.price_grid(GridRequest(s0=(95.0, 100.0), cost_rate=0.0,

@@ -225,11 +225,12 @@ def test_service_sharded_quotes_match_unsharded():
     assert m["shard_batches"] >= 1 and m["rebalances"] >= 1
     assert plain.metrics()["shard_batches"] == 0
     # the rebalance loop produced per-device speed estimates ...
-    bucket = (8, True)
+    bucket = (8, "rz")
     assert sharded.shard_speed(bucket) is not None
-    # ... and the compile cache is keyed on the mesh shape (shard tuple)
-    assert any(k[-1] is not None for k in sharded._compiled)
-    assert all(k[-1] is None for k in plain._compiled)
+    # ... and the compile cache is keyed on the mesh shape (shard tuple,
+    # second-to-last slot — the last is the lsmc static-config extra)
+    assert any(k[-2] is not None for k in sharded._compiled)
+    assert all(k[-2] is None for k in plain._compiled)
 
 
 @pytest.mark.shard
@@ -240,7 +241,7 @@ def test_service_rebalance_feedback_steers_next_plan():
     svc = PricingService(max_batch=8, deadline_ms=0.0, capacity=16,
                          default_n_steps=8, result_cache_size=0, devices=2,
                          rebalance_ema=1.0)
-    bucket = (8, False)
+    bucket = (8, "notc")
     costs = scenario_costs(8, np.zeros(8), capacity=16)
     plan = svc._shard_plan(bucket, np.zeros(8), 8, 8)
     assert plan.work_spread < 1e-9

@@ -64,6 +64,12 @@ _BENCHES = {
                        "level_step.ops_per_sec"),
         "ratios": (),
     },
+    "lsmc_paths": {
+        "config": ("contracts", "n_steps", "paths", "n_exercise",
+                   "repeats", "device"),
+        "throughput": ("single.paths_per_sec", "mesh8.paths_per_sec"),
+        "ratios": ("mesh8_over_single",),
+    },
 }
 
 
