@@ -97,13 +97,35 @@ def bench(lanes: int = DEFAULT_LANES, capacity: int = DEFAULT_CAPACITY,
     print(f"level step  : {t_step * 1e3:8.2f} ms  "
           f"({lanes / t_step:12.0f} ops/s)")
 
+    # roofline matrix: the three jitted closures are the compiled
+    # programs themselves — exact XLA flop/byte counts vs. platform peak
+    from repro.core.platform import platform_summary
+    from repro.roofline.pricing import compiled_cost, matrix_entry
+    matrix = []
+    for op, fn, args, secs in (("envelope2", env, (f, g), t_env),
+                               ("cone_infconv", cone, (f,), t_cone),
+                               ("level_step", step, (f,), t_step)):
+        cell = matrix_entry(op=op, backend="jnp", dtype="float64",
+                            seconds=secs,
+                            cost=compiled_cost(fn, *args))
+        if cell is not None:
+            matrix.append(cell)
+            print(f"roofline {op:12s}: "
+                  f"{cell['achieved_flops_per_sec']:.3g} flop/s "
+                  f"({(cell['frac_peak_flops'] or 0) * 100:.2f}% peak), "
+                  f"{cell['achieved_bytes_per_sec']:.3g} B/s "
+                  f"({(cell['frac_peak_bw'] or 0) * 100:.2f}% peak), "
+                  f"{cell['bound']}-bound")
+
     report = {
         "bench": "pwl_envelope_ops",
         "lanes": lanes, "capacity": capacity, "repeats": repeats,
         "device": jax.devices()[0].platform,
+        "platform": platform_summary(),
         "envelope": {"seconds": t_env, "ops_per_sec": lanes / t_env},
         "cone": {"seconds": t_cone, "ops_per_sec": lanes / t_cone},
         "level_step": {"seconds": t_step, "ops_per_sec": lanes / t_step},
+        "roofline": {"matrix": matrix},
     }
     Path(out).write_text(json.dumps(report, indent=2) + "\n")
     print(f"wrote {out}")

@@ -28,7 +28,7 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.scenarios import ScenarioGrid, price_grid_rz
+from repro.scenarios import ScenarioGrid, price_grid_rz, rz_grid_cost
 
 # harness (benchmarks.run) defaults: sized for the 1-core CPU budget;
 # the acceptance configuration is the CLI default --n-steps 512.
@@ -72,18 +72,40 @@ def bench(n_steps: int = DEFAULT_N_STEPS, contracts: int = 2,
           f"max|diff| ask {gap_ask:.2e} bid {gap_bid:.2e}   "
           f"max_pieces {r_pal.max_pieces}/{capacity}")
 
+    # per-backend/per-platform roofline matrix: exact XLA flop/byte
+    # counts of the compiled rows programs vs. nominal platform peaks
+    from repro.core.platform import platform_summary, resolve_interpret
+    from repro.roofline.pricing import matrix_entry
+    matrix = []
+    for bk, secs, kw in (("jnp", t_jnp, {}),
+                         ("pallas", t_pal,
+                          dict(levels=levels, block=block))):
+        cell = matrix_entry(
+            op="rz_grid", backend=bk, dtype="float64", seconds=secs,
+            cost=rz_grid_cost(grid, capacity=capacity, backend=bk, **kw))
+        if cell is not None:
+            matrix.append(cell)
+            print(f"roofline {bk:6s}: {cell['achieved_flops_per_sec']:.3g} "
+                  f"flop/s ({(cell['frac_peak_flops'] or 0) * 100:.2f}% "
+                  f"peak), {cell['achieved_bytes_per_sec']:.3g} B/s "
+                  f"({(cell['frac_peak_bw'] or 0) * 100:.2f}% peak), "
+                  f"{cell['bound']}-bound")
+
     report = {
         "bench": "rz_grid_backends",
         "n_steps": n_steps, "contracts": n, "capacity": capacity,
         "payoff": "put", "cost_rate": cost_rate, "repeats": repeats,
-        "levels": levels, "block": block, "interpret": True,
+        "levels": levels, "block": block,
+        "interpret": resolve_interpret(None),
         "device": jax.devices()[0].platform,
+        "platform": platform_summary(),
         "jnp": {"seconds": t_jnp, "contracts_per_sec": n / t_jnp},
         "pallas": {"seconds": t_pal, "contracts_per_sec": n / t_pal},
         "pallas_over_jnp": ratio,
         "max_abs_diff_ask": gap_ask, "max_abs_diff_bid": gap_bid,
         "max_pieces": int(r_pal.max_pieces),
         "max_pieces_jnp": int(r_jnp.max_pieces),
+        "roofline": {"matrix": matrix},
     }
     Path(out).write_text(json.dumps(report, indent=2) + "\n")
     print(f"wrote {out}")

@@ -41,6 +41,7 @@ import numpy as np
 from .core.lattice import LatticeModel
 from .core.payoff import (PayoffProcess, american_call, american_put,
                           bull_spread, cash_settled)
+from .core.platform import resolve_interpret
 from .scenarios import (PAYOFF_FAMILIES, GridResult, ScenarioGrid,
                         price_grid_lsmc, price_grid_notc, price_grid_rz,
                         route_engine)
@@ -122,7 +123,9 @@ def price_grid(grid: Optional[ScenarioGrid] = None, *,
                greeks: bool = False, backend: str = "jnp",
                n_steps: Union[int, Sequence[int], None] = None,
                levels: Optional[int] = None, block: Optional[int] = None,
-               interpret: bool = True, n_paths: int = 4096, seed: int = 0,
+               interpret: Optional[bool] = None,
+               platform: Optional[str] = None,
+               n_paths: int = 4096, seed: int = 0,
                basis: str = "poly", degree: int = 3, antithetic: bool = True,
                mesh=None, devices: Optional[int] = None, shard_plan=None,
                **axes) -> Union[GridResult, list]:
@@ -144,9 +147,13 @@ def price_grid(grid: Optional[ScenarioGrid] = None, *,
     ("jnp" or "pallas" — for the TC engine the blocked PWL rounds of
     ``kernels/rz_step.py``, for the friction-free one
     ``kernels/binomial_step.py``); ``levels``/``block``/``interpret``
-    tune the Pallas kernels (set ``interpret=False`` on real TPU
-    hardware; TC ``block``/``levels`` default to the
-    ``core/partition.py`` schedule).  ``n_paths``/``seed``/``basis``/
+    tune the Pallas kernels.  ``interpret=None`` resolves from the
+    platform policy of ``core/platform.py`` — interpret mode on CPU
+    (no compiled Pallas lowering there), real compiled lowerings on
+    GPU/TPU — and ``platform`` overrides which policy applies without
+    touching the process-wide default (see ``docs/PLATFORMS.md``; TC
+    ``block``/``levels`` default to the ``core/partition.py``
+    schedule).  ``n_paths``/``seed``/``basis``/
     ``degree``/``antithetic`` tune the MC engine
     (:func:`repro.scenarios.price_grid_lsmc` — seeded, bitwise
     deterministic).  The tree depth is compile-time static: passing a
@@ -159,6 +166,7 @@ def price_grid(grid: Optional[ScenarioGrid] = None, *,
     override).  Results are identical to the single-device call — see
     ``docs/ARCHITECTURE.md`` "Sharded grid engine".
     """
+    interpret = resolve_interpret(interpret, platform)
     if grid is None:
         if isinstance(n_steps, (list, tuple)):
             if shard_plan is not None:
@@ -206,6 +214,9 @@ def price_flat(*, s0, sigma, rate, maturity, cost_rate=0.0, payoff="put",
                n_assets: int = 1, exercise_steps=None,
                engine: str = "auto", capacity: int = 48,
                greeks: bool = False, backend: str = "jnp",
+               levels: Optional[int] = None, block: Optional[int] = None,
+               interpret: Optional[bool] = None,
+               platform: Optional[str] = None,
                n_paths: int = 4096, seed: int = 0, basis: str = "poly",
                degree: int = 3, antithetic: bool = True,
                pad_to: Optional[int] = None, mesh=None,
@@ -225,6 +236,10 @@ def price_flat(*, s0, sigma, rate, maturity, cost_rate=0.0, payoff="put",
     are independent vmap lanes, so row ``i``'s count is exactly what
     pricing contract ``i`` alone would report, which is how the serving
     layer attaches an exact ``max_pieces`` to each quote it unpads.
+    ``levels``/``block``/``interpret``/``platform`` tune the Pallas
+    kernels exactly as in :func:`price_grid` (``interpret=None`` =
+    platform policy), so the serving layer's execution mode threads
+    end-to-end.
 
         >>> from repro.api import price_flat
         >>> res = price_flat(s0=(95.0, 100.0), payoff=("put", "call"),
@@ -242,6 +257,8 @@ def price_flat(*, s0, sigma, rate, maturity, cost_rate=0.0, payoff="put",
     if pad_to is not None:
         grid = grid.pad_to(pad_to)
     return price_grid(grid, engine=engine, capacity=capacity, greeks=greeks,
-                      backend=backend, n_paths=n_paths, seed=seed,
+                      backend=backend, levels=levels, block=block,
+                      interpret=interpret, platform=platform,
+                      n_paths=n_paths, seed=seed,
                       basis=basis, degree=degree, antithetic=antithetic,
                       mesh=mesh, devices=devices, shard_plan=shard_plan)

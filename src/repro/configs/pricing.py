@@ -3,8 +3,16 @@
 These are not LM architectures; they parameterise the lattice engines and
 the production pricing-service meshes.  Kept in the same registry module
 tree so launchers can list every runnable config in one place.
+
+``platform``/``interpret``/``dtype`` select the execution policy
+(``repro.core.platform``): ``platform=None`` auto-detects; ``interpret``
+and ``dtype`` ``None`` defer to that platform's policy (interpret +
+float64 on CPU, compiled Pallas + float32 on GPU/TPU).  The module
+deliberately imports no jax so configs stay listable without touching an
+accelerator; :meth:`PricingConfig.resolve_execution` does the lookup.
 """
 import dataclasses
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -22,6 +30,23 @@ class PricingConfig:
     sigma: float = 0.2
     rate: float = 0.1
     maturity: float = 0.25
+    # execution policy (None = resolve from core/platform.py at run time)
+    platform: Optional[str] = None   # "cpu" | "gpu" | "tpu"
+    interpret: Optional[bool] = None  # Pallas interpret vs compiled
+    dtype: Optional[str] = None      # "float64" | "float32"
+
+    def resolve_execution(self) -> dict:
+        """Resolve the execution knobs against the platform policy.
+
+        Returns ``{"platform", "interpret", "dtype"}`` with every
+        ``None`` replaced by the active policy's value — the dict the
+        launchers pass to ``price_grid``/``price_flat``.
+        """
+        from ..core import platform as plat
+        p = self.platform or plat.active_platform()
+        interpret = plat.resolve_interpret(self.interpret, p)
+        dtype = self.dtype or plat.default_dtype(p).name
+        return {"platform": p, "interpret": interpret, "dtype": dtype}
 
 
 PAPER_PUT = PricingConfig(name="paper-put-tc", n_steps=1500, round_depth=5)

@@ -59,6 +59,30 @@ _REL = 1e-9
 _TINY = 1e-300
 
 
+def _tiny(dtype) -> float:
+    """Positive-width guard threshold for ``dtype``.
+
+    float64 keeps the historical 1e-300 (bit-compatible with every
+    committed oracle/golden number); narrower dtypes get their own
+    ``finfo.tiny`` — 1e-300 underflows to 0.0 in float32 and the guard
+    would stop guarding.
+    """
+    if jnp.dtype(dtype) == jnp.float64:
+        return _TINY
+    return float(jnp.finfo(dtype).tiny)
+
+
+def _iota32(n: int) -> jax.Array:
+    """0..n-1 as int32 — index bookkeeping stays int32 regardless of x64.
+
+    Every index vector in this module is bounded by the knot capacity
+    (tens), so int32 is exact; keeping the traced dtype pinned is part of
+    the kernels' lowering contract (Mosaic/Triton compiled paths carry no
+    int64 — asserted by ``tests/test_lowering_contract.py``).
+    """
+    return jnp.arange(n, dtype=jnp.int32)
+
+
 class PWL(NamedTuple):
     xs: jax.Array   # (..., K)
     ys: jax.Array   # (..., K)
@@ -114,8 +138,23 @@ def _searchsorted(a: jax.Array, v: jax.Array, side: str) -> jax.Array:
     log2(len(a)) gathers per query — ~4x cheaper at K=24..97 on CPU (the
     counting matrices were the memory-traffic hot spot, not the sorts
     alone) and free of ``sort``/``scan`` primitives.
+
+    Hand-rolled rather than ``jnp.searchsorted``: the stock lowering
+    carries int64 rank bookkeeping under x64, and the compiled-path
+    lowering contract pins every index dtype in the kernels to int32
+    (capacities are tens of knots, so int32 is exact).
     """
-    return jnp.searchsorted(a, v, side=side, method="scan_unrolled")
+    n = a.shape[-1]
+    lo = jnp.zeros(v.shape, jnp.int32)
+    hi = jnp.full(v.shape, n, jnp.int32)
+    for _ in range(max(1, int(n).bit_length())):       # ceil(log2(n+1))
+        active = lo < hi
+        mid = (lo + hi) >> 1
+        am = a[jnp.clip(mid, 0, n - 1)]
+        go_right = (am <= v) if side == "right" else (am < v)
+        lo = jnp.where(active & go_right, mid + 1, lo)
+        hi = jnp.where(active & ~go_right, mid, hi)
+    return lo
 
 
 def _merge_take(a: jax.Array, b: jax.Array, *payloads):
@@ -141,8 +180,8 @@ def _merge_take(a: jax.Array, b: jax.Array, *payloads):
     ``tests/test_pwl_merge.py``, not at runtime).
     """
     na, nb = a.shape[-1], b.shape[-1]
-    ra = jnp.arange(na) + _searchsorted(b, a, "left")
-    k = jnp.arange(na + nb)
+    ra = _iota32(na) + _searchsorted(b, a, "left")
+    k = _iota32(na + nb)
     cnt_a = _searchsorted(ra, k, "right")    # ra is ascending by construction
     ia = jnp.clip(cnt_a - 1, 0, na - 1)
     ib = jnp.clip(k - cnt_a, 0, nb - 1)
@@ -193,7 +232,7 @@ def _interval_slope(f: PWL, c: jax.Array):
     il = jnp.clip(cnt - 1, 0, K - 1)
     ir = jnp.clip(cnt, 0, K - 1)
     w = f.xs[ir] - f.xs[il]
-    ok_w = w > _TINY
+    ok_w = w > _tiny(f.xs.dtype)
     slope_in = jnp.where(ok_w, f.ys[ir] - f.ys[il], 0.0) \
         / jnp.where(ok_w, w, 1.0)
     return cnt, il, slope_in
@@ -254,9 +293,9 @@ def _compact(xs, ys, keep):
     scatters, while the batched gather vectorises.
     """
     n = xs.shape[0]
-    m2 = jnp.sum(keep).astype(jnp.int32)
-    ps = jnp.cumsum(keep)                            # kept-so-far, 1-based
-    t = jnp.arange(n)
+    m2 = jnp.sum(keep, dtype=jnp.int32)
+    ps = jnp.cumsum(keep, dtype=jnp.int32)           # kept-so-far, 1-based
+    t = _iota32(n)
     src = jnp.clip(_searchsorted(ps, t + 1, "left"), 0, n - 1)
     live = t < m2
     xs2 = jnp.where(live, xs[src], BIG)
@@ -287,14 +326,14 @@ def _compress1(xs, ys, sl, sr, valid, out_cap: int):
     compact-twice pipeline exactly: neighbours are the same elements.
     """
     n = xs.shape[0]
-    idx = jnp.arange(n)
+    idx = _iota32(n)
     # pass 1: merge (near-)duplicate knots, keep the first of each run
     prev_x = jnp.concatenate([jnp.full((1,), -BIG, xs.dtype), xs[:-1]])
     prev_valid = jnp.concatenate([jnp.zeros((1,), bool), valid[:-1]])
     dup = valid & prev_valid & (xs - prev_x <= _REL * (1.0 + jnp.abs(prev_x)))
     keep1 = valid & ~dup
-    m1 = jnp.sum(keep1).astype(jnp.int32)
-    rank = jnp.cumsum(keep1) - 1                 # rank among pass-1 survivors
+    m1 = jnp.sum(keep1, dtype=jnp.int32)
+    rank = jnp.cumsum(keep1, dtype=jnp.int32) - 1  # rank among pass-1 survivors
     # pass 2: drop knots where the slope does not genuinely change.
     # neighbour indices among survivors: next = suffix-min of kept indices
     # (exclusive), prev = prefix-max (exclusive)
@@ -306,10 +345,11 @@ def _compress1(xs, ys, sl, sr, valid, out_cap: int):
         jax.lax.cummax(jnp.where(keep1, idx, -1))[:-1]])
     nig = jnp.clip(ni, 0, n - 1)
     pig = jnp.clip(pi, 0, n - 1)
+    tiny = _tiny(xs.dtype)
     s_right = jnp.where(keep1 & (rank < m1 - 1),
-                        (ys[nig] - ys) / jnp.maximum(xs[nig] - xs, _TINY), sr)
+                        (ys[nig] - ys) / jnp.maximum(xs[nig] - xs, tiny), sr)
     s_left = jnp.where(keep1 & (rank > 0),
-                       (ys - ys[pig]) / jnp.maximum(xs - xs[pig], _TINY), sl)
+                       (ys - ys[pig]) / jnp.maximum(xs - xs[pig], tiny), sl)
     tol = _REL * (1.0 + jnp.maximum(jnp.abs(s_left), jnp.abs(s_right)))
     kink = jnp.abs(s_right - s_left) > tol
     keep2 = keep1 & kink
@@ -367,7 +407,7 @@ def _envelope_core(f: PWL, g: PWL, merged, vf, vg, mv, out_cap: int,
     """
     M = merged.shape[0]
     # interval i = 0..M is (merged[i-1], merged[i]), unbounded at both ends
-    i_idx = jnp.arange(M + 1)
+    i_idx = _iota32(M + 1)
     lo = jnp.where(i_idx == 0, -BIG, merged[jnp.clip(i_idx - 1, 0, M - 1)])
     hi = jnp.where(i_idx >= mv, BIG, merged[jnp.clip(i_idx, 0, M - 1)])
     # exact per-interval slopes from the merged values (guarded widths:
@@ -375,7 +415,7 @@ def _envelope_core(f: PWL, g: PWL, merged, vf, vg, mv, out_cap: int,
     # is never used — their crossing window (lo+margin, hi-margin) is
     # empty — but must not divide by ~0)
     dx = jnp.diff(merged)
-    ok_dx = dx > _TINY
+    ok_dx = dx > _tiny(merged.dtype)
     inv_dx = 1.0 / jnp.where(ok_dx, dx, 1.0)
     sf_mid = jnp.where(ok_dx, jnp.diff(vf), 0.0) * inv_dx
     sg_mid = jnp.where(ok_dx, jnp.diff(vg), 0.0) * inv_dx
@@ -411,7 +451,7 @@ def _envelope_core(f: PWL, g: PWL, merged, vf, vg, mv, out_cap: int,
     valid = cands < BIG / 2
     # end slopes from probes beyond the outermost *candidates* (crossings
     # can lie outside the span of the input knots)
-    nvc = jnp.sum(valid)
+    nvc = jnp.sum(valid, dtype=jnp.int32)
     pl = cands[0] - 1.0
     pr = cands[jnp.clip(nvc - 1, 0, cands.shape[0] - 1)] + 1.0
     probes = jnp.stack([pl, pr])
@@ -478,7 +518,7 @@ def _cone1(f: PWL, a, b, out_cap: int):
     """v = min(f, lower envelope of the V_j cones); exact (see pwl_ref)."""
     K = f.xs.shape[-1]
     dtype = f.xs.dtype
-    idx = jnp.arange(K)
+    idx = _iota32(K)
     valid = idx < f.m
     A = jnp.where(valid, f.ys + a * f.xs, BIG)
     Bv = jnp.where(valid, f.ys + b * f.xs, BIG)

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from . import pwl as P
 from .lattice import LatticeModel
 from .payoff import PayoffProcess
+from .platform import resolve_interpret
 
 __all__ = ["price_rz", "price_rz_batch", "rz_backward", "rz_level_step",
            "rz_level_step_lanes", "rz_backward_pallas", "RZResult",
@@ -114,7 +115,8 @@ def rz_level_step_lanes(z: P.PWL, lvl, params, *, capacity: int, seller,
     if isinstance(seller, bool):
         sign = 1.0 if seller else -1.0
     else:
-        sign = jnp.where(seller, 1.0, -1.0)            # e.g. (2, 1) -> (2, P)
+        one = jnp.asarray(1.0, dtype)                  # keep the select in
+        sign = jnp.where(seller, one, -one)            # `dtype`, not f64
     # the expense function's batch must match z's (v's) batch even when a
     # static `seller` leaves xi/zeta at the bare (P,) lane shape
     xi = jnp.broadcast_to(sign * payoff.xi(s), z.sl.shape)
@@ -208,7 +210,7 @@ def rz_backward(s0, sigma, rate, maturity, k, *, n_steps: int, capacity: int,
 def rz_backward_pallas(s0, sigma, rate, maturity, k, *, n_steps: int,
                        capacity: int, payoff: PayoffProcess,
                        levels: int | None = None, block: int | None = None,
-                       interpret: bool = True, dtype=jnp.float64):
+                       interpret: bool | None = None, dtype=jnp.float64):
     """Traceable TC backward recursion through the blocked Pallas kernel.
 
     Same contract as :func:`rz_backward` — (ask, bid, max_pieces) — but the
@@ -269,7 +271,7 @@ def rz_backward_pallas(s0, sigma, rate, maturity, k, *, n_steps: int,
 def _price_rz_jit(s0, sigma, rate, maturity, k, *, n_steps: int, capacity: int,
                   payoff: PayoffProcess, dtype=jnp.float64,
                   backend: str = "jnp", levels=None, block=None,
-                  interpret: bool = True):
+                  interpret: bool | None = None):
     if backend == "pallas":
         return rz_backward_pallas(s0, sigma, rate, maturity, k,
                                   n_steps=n_steps, capacity=capacity,
@@ -285,14 +287,17 @@ def _price_rz_jit(s0, sigma, rate, maturity, k, *, n_steps: int, capacity: int,
 def price_rz(model: LatticeModel, payoff: PayoffProcess,
              capacity: int = 48, *, backend: str = "jnp",
              levels: int | None = None, block: int | None = None,
-             interpret: bool = True) -> RZResult:
+             interpret: bool | None = None) -> RZResult:
     """Jitted vectorised ask/bid under proportional transaction costs.
 
     ``backend="jnp"`` walks levels with ``lax.fori_loop`` over the full
     node axis; ``backend="pallas"`` runs the blocked VMEM rounds of
     :func:`rz_backward_pallas`.  Both report overflow identically via
-    ``max_pieces`` / ``OverflowError``.
+    ``max_pieces`` / ``OverflowError``.  ``interpret=None`` resolves
+    from the platform policy *here* — before the jit cache key — so a
+    later ``set_platform`` never serves a stale compiled mode.
     """
+    interpret = resolve_interpret(interpret)
     ask, bid, pieces = _price_rz_jit(
         jnp.float64(model.s0), jnp.float64(model.sigma), jnp.float64(model.rate),
         jnp.float64(model.maturity), jnp.float64(model.cost_rate),

@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..core.platform import resolve_interpret
+
 __all__ = ["lattice_round", "lattice_round_param", "DEFAULT_BLOCK",
            "PARAM_SCALARS"]
 
@@ -126,12 +128,15 @@ def _round_call(kernel, v, scalars, block: int, interpret: bool):
 
 
 def lattice_round_param(v, scalars, *, levels: int,
-                        block: int = DEFAULT_BLOCK, interpret: bool = True):
+                        block: int = DEFAULT_BLOCK,
+                        interpret: bool | None = None):
     """One round of ``levels`` steps with the payoff passed as data.
 
     v: (P,) node values, P a multiple of ``block``; scalars: (11,) array
-    with the ``PARAM_SCALARS`` layout (dtype of v).
+    with the ``PARAM_SCALARS`` layout (dtype of v).  ``interpret=None``
+    resolves from the platform policy (``core/platform.py``).
     """
+    interpret = resolve_interpret(interpret)
     assert v.shape[0] % block == 0 and levels <= block
     kernel = functools.partial(_round_kernel_param, levels=levels,
                                block=block)
@@ -139,12 +144,14 @@ def lattice_round_param(v, scalars, *, levels: int,
 
 
 def lattice_round(v, scalars, *, levels: int, block: int = DEFAULT_BLOCK,
-                  kind: str = "put", interpret: bool = True):
+                  kind: str = "put", interpret: bool | None = None):
     """One round of ``levels`` backward steps over all node blocks.
 
     v: (P,) node values, P a multiple of ``block``;  scalars: (6,) array
     [lvl0, p_up, inv_r, strike, s0, sig_sqrt_dt] (dtype of v).
+    ``interpret=None`` resolves from the platform policy.
     """
+    interpret = resolve_interpret(interpret)
     assert v.shape[0] % block == 0 and levels <= block
     kernel = functools.partial(_round_kernel, levels=levels, block=block,
                                kind=kind)

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..core.platform import resolve_interpret
+
 __all__ = ["flash_attention", "flash_ref"]
 
 _NEG = -1e30
@@ -65,14 +67,22 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_kv: int,
     m0 = jnp.full((block_q, 1), _NEG, jnp.float32)
     l0 = jnp.zeros((block_q, 1), jnp.float32)
     a0 = jnp.zeros((block_q, hd), jnp.float32)
-    m, l, acc = jax.lax.fori_loop(0, nkv, body, (m0, l0, a0))
+    # int32 bounds: python ints canonicalise the loop counter (and the
+    # j * block_kv offsets) to int64 under x64, off the compiled-path
+    # lowering contract
+    m, l, acc = jax.lax.fori_loop(jnp.int32(0), jnp.int32(nkv), body,
+                                  (m0, l0, a0))
     o_ref[...] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)[None]
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window=None,
                     block_q: int = 128, block_kv: int = 128,
-                    interpret: bool = True):
-    """q: (B, T, H, hd); k, v: (B, S, KVH, hd) -> (B, T, H, hd)."""
+                    interpret: bool | None = None):
+    """q: (B, T, H, hd); k, v: (B, S, KVH, hd) -> (B, T, H, hd).
+
+    ``interpret=None`` resolves from the platform policy.
+    """
+    interpret = resolve_interpret(interpret)
     B, T, H, hd = q.shape
     S, KVH = k.shape[1], k.shape[2]
     G = H // KVH

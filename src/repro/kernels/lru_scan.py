@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..core.platform import resolve_interpret
+
 __all__ = ["lru_scan", "lru_scan_ref"]
 
 
@@ -46,9 +48,13 @@ def _lru_kernel(a_ref, b_ref, h0_ref, o_ref, h_scratch, *, chunk: int):
     o_ref[0, 0] = out.astype(o_ref.dtype)
 
 
-def lru_scan(a, b, h0, *, chunk: int = 256, interpret: bool = True,
+def lru_scan(a, b, h0, *, chunk: int = 256, interpret: bool | None = None,
              block_w: int = 128):
-    """a, b: (B, T, W) f32; h0: (B, W) f32 -> (h_seq (B,T,W), h_last)."""
+    """a, b: (B, T, W) f32; h0: (B, W) f32 -> (h_seq (B,T,W), h_last).
+
+    ``interpret=None`` resolves from the platform policy.
+    """
+    interpret = resolve_interpret(interpret)
     B, T, W = a.shape
     chunk = min(chunk, T)
     block_w = min(block_w, W)
@@ -75,7 +81,7 @@ def lru_scan(a, b, h0, *, chunk: int = 256, interpret: bool = True,
         interpret=interpret,
     )(ar, br, h0)
     h_seq = h_seq.reshape(B, T, W)
-    return h_seq, h_seq[:, -1, :]
+    return h_seq, h_seq[:, T - 1, :]
 
 
 def lru_scan_ref(a, b, h0, *, chunk: int = 256):

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.lattice import LatticeModel
+from ..core.platform import default_dtype, resolve_interpret
 from .binomial_step import DEFAULT_BLOCK, lattice_round
 
 __all__ = ["price_notc_kernel", "flash_attention", "lru_scan"]
@@ -53,8 +54,18 @@ def _price_notc_impl(s0, sigma, rate, maturity, strike, *, n_steps: int,
 
 def price_notc_kernel(model: LatticeModel, strike: float, *,
                       kind: str = "put", levels: int = 64,
-                      block: int = DEFAULT_BLOCK, interpret: bool = True,
-                      dtype=jnp.float64) -> float:
+                      block: int = DEFAULT_BLOCK,
+                      interpret: bool | None = None,
+                      dtype=None) -> float:
+    """Price through the blocked lattice kernel.
+
+    ``interpret=None`` / ``dtype=None`` resolve from the platform policy
+    (``core/platform.py``): interpret + float64 on CPU, compiled +
+    float32 on GPU/TPU.
+    """
+    interpret = resolve_interpret(interpret)
+    if dtype is None:
+        dtype = default_dtype()
     out = _price_notc_impl(
         jnp.asarray(model.s0, dtype), jnp.asarray(model.sigma, dtype),
         jnp.asarray(model.rate, dtype), jnp.asarray(model.maturity, dtype),
@@ -65,7 +76,7 @@ def price_notc_kernel(model: LatticeModel, strike: float, *,
 
 def flash_attention(q, k, v, *, causal=True, window=None,
                     block_q: int = 128, block_kv: int = 128,
-                    interpret: bool = True):
+                    interpret: bool | None = None):
     """Pallas causal/windowed GQA flash attention.
 
     q: (B, T, H, hd);  k, v: (B, S, KVH, hd);  returns (B, T, H, hd).
@@ -75,7 +86,7 @@ def flash_attention(q, k, v, *, causal=True, window=None,
                block_kv=block_kv, interpret=interpret)
 
 
-def lru_scan(a, b, h0, *, chunk: int = 256, interpret: bool = True):
+def lru_scan(a, b, h0, *, chunk: int = 256, interpret: bool | None = None):
     """Pallas chunked linear recurrence h_t = a_t h_{t-1} + b_t.
 
     a, b: (B, T, W); h0: (B, W); returns (h_seq (B,T,W), h_last (B,W)).

@@ -37,12 +37,15 @@ envelope algebra: binary-search rank computation + gathers — no
 kernel family was quarantined to interpret mode for.  What remains
 between it and a compiled Mosaic lowering is narrower and mechanical:
 the per-lane dynamic gathers of the binary searches and the int32
-knot-count bookkeeping.  On this CPU-only container the kernels still
-default to **interpret mode** (CPU-exact, float64, used by the parity
-tests and benchmarks — and ~2x faster since the rewrite); pass
-``interpret=False`` to attempt a real lowering on TPU hardware.  The
-BlockSpec / grid structure is unchanged — it was designed to be kept
-once the sorts disappeared, and they now have.
+knot-count bookkeeping — both now *declared* in the kernel's lowering
+contract (``kernels/contracts.py``) and statically asserted against the
+traced jaxpr by ``tests/test_lowering_contract.py``.  The execution
+mode is platform policy (``core/platform.py``): ``interpret=None``
+resolves to interpret on CPU (no compiled Pallas lowering there —
+CPU-exact float64, used by the parity tests and benchmarks) and to a
+real compiled lowering on GPU/TPU.  The BlockSpec / grid structure is
+unchanged — it was designed to be kept once the sorts disappeared, and
+they now have.
 """
 from __future__ import annotations
 
@@ -54,6 +57,7 @@ from jax.experimental import pallas as pl
 
 from ..core import pwl as P
 from ..core.payoff import param_payoff
+from ..core.platform import resolve_interpret
 from ..core.rz import rz_level_step_lanes
 
 __all__ = ["rz_round", "RZ_SCALARS"]
@@ -93,7 +97,7 @@ def _rz_round_kernel(sc_ref, *refs, levels: int, block: int,
     capacity = z.capacity
     lanes = z.sl.shape[-1]
     idx0 = pl.program_id(0) * block
-    owned = jnp.arange(lanes) < block
+    owned = jax.lax.broadcasted_iota(jnp.int32, (lanes,), 0) < block
     # (S, 1) per-side seller flags, broadcast against the lane axis.
     # Built from an iota, not jnp.asarray(sellers): pallas kernels may
     # not capture array constants (scalar literals fold fine).
@@ -113,7 +117,9 @@ def _rz_round_kernel(sc_ref, *refs, levels: int, block: int,
         pieces = jnp.maximum(pieces, jnp.max(jnp.where(owned, pc, 0)))
         return z, pieces
 
-    z, pieces = jax.lax.fori_loop(0, levels, body,
+    # int32 loop bounds keep the carried counter int32 (python ints would
+    # canonicalise to int64 under x64 — a compiled-path contract violation)
+    z, pieces = jax.lax.fori_loop(jnp.int32(0), jnp.int32(levels), body,
                                   (z, jnp.zeros((), jnp.int32)))
     for ref, arr in zip(outs[:ncomp], z):
         ref[...] = arr[:, :block]
@@ -121,7 +127,8 @@ def _rz_round_kernel(sc_ref, *refs, levels: int, block: int,
 
 
 def rz_round(z: P.PWL, scalars, *, levels: int, block: int,
-             sellers: tuple = (True, False), interpret: bool = True):
+             sellers: tuple = (True, False),
+             interpret: bool | None = None):
     """One round of ``levels`` fused TC level-steps over all node blocks.
 
     z: PWL with a leading side axis of ``len(sellers)`` rows (the engine
@@ -132,7 +139,11 @@ def rz_round(z: P.PWL, scalars, *, levels: int, block: int,
     pieces)`` with ``pieces`` the scalar int32 max raw knot count over
     owned live lanes of every side — the overflow signal the engines
     carry.
+
+    ``interpret=None`` resolves from the platform policy
+    (``core/platform.py``: interpret on CPU, compiled on GPU/TPU).
     """
+    interpret = resolve_interpret(interpret)
     S, lanes = z.sl.shape
     # loud ValueErrors, not asserts: these are user-reachable contracts and
     # a violation misprices silently (a short scalars vector clamp-indexes

@@ -73,6 +73,7 @@ def run_grid(args) -> None:
     res = price_grid(n_steps=args.n_steps, engine=args.engine,
                      capacity=args.capacity,
                      greeks=args.greeks, backend=args.backend,
+                     interpret=args.interpret, platform=args.platform,
                      levels=args.levels, block=args.block,
                      n_paths=args.paths, seed=args.mc_seed,
                      basis=args.basis, degree=args.degree,
@@ -130,6 +131,15 @@ def main():
     ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"],
                     help="grid-engine implementation: vectorised jnp "
                          "recursion or the blocked Pallas kernel rounds")
+    ap.add_argument("--platform", default=None,
+                    choices=["cpu", "gpu", "tpu"],
+                    help="pin the platform policy (core/platform.py): "
+                         "interpret mode, default dtype and XLA flags "
+                         "(default: auto-detect)")
+    ap.add_argument("--interpret", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="Pallas execution mode; auto = platform policy "
+                         "(interpret on CPU, compiled on GPU/TPU)")
     ap.add_argument("--levels", type=int, default=None,
                     help="Pallas round depth L (default: partition.py pick)")
     ap.add_argument("--block", type=int, default=None,
@@ -157,6 +167,10 @@ def main():
     ap.add_argument("--degree", type=int, default=3,
                     help="lsmc regression basis degree")
     args = ap.parse_args()
+    args.interpret = {"auto": None, "on": True, "off": False}[args.interpret]
+    if args.platform is not None:
+        from ..core.platform import set_platform
+        set_platform(args.platform)
 
     if args.grid:
         run_grid(args)

@@ -1,0 +1,89 @@
+"""Pricing-kernel roofline: achieved vs. peak bytes/flops per platform.
+
+``analysis.py`` rooflines the LM dry-run artifacts; this module is the
+lattice-engine counterpart the bench lanes embed.  Each benchmark times
+a jitted pricing program, asks XLA for that program's exact operation
+counts (``lowered.compile().cost_analysis()`` — works on every backend,
+CPU included), and emits one **matrix entry** per
+``(platform, backend, op, dtype)`` cell::
+
+    {"op": "rz_grid", "backend": "pallas", "platform": "cpu",
+     "dtype": "float64", "flops": ..., "bytes": ...,
+     "achieved_flops_per_sec": ..., "frac_peak_flops": ...,
+     "achieved_bytes_per_sec": ..., "frac_peak_bw": ...,
+     "intensity_flops_per_byte": ..., "bound": "memory"}
+
+``tools/check_bench.py`` gates the achieved columns of matching cells
+against the committed baselines; the peak denominators below are
+*nominal* per-platform numbers (documented in docs/PLATFORMS.md) — the
+fractions are for trend tracking and bottleneck attribution, not
+marketing.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+__all__ = ["PRICING_PEAKS", "compiled_cost", "matrix_entry"]
+
+# Nominal peaks per platform: {dtype: flop/s} and HBM/DRAM bytes/s.
+#   cpu — one CI core, 4-wide f64 FMA @ ~3 GHz, single-core stream BW;
+#   gpu — A100-40GB datasheet (f64 via FP64 tensor cores);
+#   tpu — v5e per chip (bf16 peak from roofline/analysis.py; f32 half).
+PRICING_PEAKS = {
+    "cpu": {"flops": {"float64": 24e9, "float32": 48e9}, "bw": 20e9},
+    "gpu": {"flops": {"float64": 9.7e12, "float32": 19.5e12}, "bw": 1555e9},
+    "tpu": {"flops": {"float64": 0.0, "float32": 98.5e12}, "bw": 819e9},
+}
+
+
+def compiled_cost(fn, *args, **kwargs) -> Optional[dict]:
+    """Exact ``{"flops", "bytes"}`` of the compiled program for ``fn``.
+
+    ``fn`` must be jit-compatible (it is wrapped in ``jax.jit`` here);
+    ``cost_analysis()`` returns one dict per computation — summed.
+    Returns ``None`` when the backend exposes no cost model (some
+    plugin runtimes) rather than raising: the bench then simply omits
+    the matrix entry.
+    """
+    import jax
+    try:
+        compiled = jax.jit(fn).lower(*args, **kwargs).compile()
+        costs = compiled.cost_analysis()
+    except Exception:
+        return None
+    if costs is None:
+        return None
+    if isinstance(costs, dict):          # newer jax returns a flat dict
+        costs = [costs]
+    flops = sum(float(c.get("flops", 0.0)) for c in costs)
+    nbytes = sum(float(c.get("bytes accessed", 0.0)) for c in costs)
+    return {"flops": flops, "bytes": nbytes}
+
+
+def matrix_entry(*, op: str, backend: str, dtype: str, seconds: float,
+                 cost: Optional[dict], platform: Optional[str] = None,
+                 ) -> Optional[dict]:
+    """One per-backend/per-platform roofline matrix cell (or ``None``
+    when the cost model was unavailable)."""
+    from ..core.platform import active_platform
+    if cost is None or seconds <= 0.0:
+        return None
+    platform = platform or active_platform()
+    peaks = PRICING_PEAKS.get(platform, PRICING_PEAKS["cpu"])
+    peak_flops = peaks["flops"].get(str(dtype), 0.0)
+    peak_bw = peaks["bw"]
+    flops, nbytes = cost["flops"], cost["bytes"]
+    ach_f, ach_b = flops / seconds, nbytes / seconds
+    t_comp = flops / peak_flops if peak_flops else float("inf")
+    t_mem = nbytes / peak_bw if peak_bw else float("inf")
+    return {
+        "op": op, "backend": backend, "platform": platform,
+        "dtype": str(dtype),
+        "flops": flops, "bytes": nbytes, "seconds": seconds,
+        "achieved_flops_per_sec": ach_f,
+        "frac_peak_flops": ach_f / peak_flops if peak_flops else None,
+        "achieved_bytes_per_sec": ach_b,
+        "frac_peak_bw": ach_b / peak_bw if peak_bw else None,
+        "intensity_flops_per_byte": flops / nbytes if nbytes else None,
+        "bound": "compute" if t_comp >= t_mem else "memory",
+    }

@@ -58,6 +58,7 @@ import numpy as np
 from .core.partition import (ShardPlan, plan_shards, scenario_costs,
                              shard_layout)
 from .core.payoff import param_payoff
+from .core.platform import resolve_interpret
 from .core.rz import RZ_BACKENDS, rz_backward, rz_backward_pallas
 
 __all__ = ["ScenarioGrid", "GridResult", "ShardExecInfo",
@@ -509,7 +510,7 @@ def _shard_exec_info(plan: ShardPlan, mesh, grid: ScenarioGrid, copies: int,
 def price_grid_rz(grid: ScenarioGrid, *, capacity: int = 48,
                   greeks: bool = False, backend: str = "jnp",
                   levels: Optional[int] = None, block: Optional[int] = None,
-                  interpret: bool = True, mesh=None,
+                  interpret: Optional[bool] = None, mesh=None,
                   devices: Optional[int] = None,
                   shard_plan: Optional[ShardPlan] = None) -> GridResult:
     """Price every scenario of ``grid`` under transaction costs.
@@ -530,7 +531,11 @@ def price_grid_rz(grid: ScenarioGrid, *, capacity: int = 48,
     (pass ``shard_plan`` to override, e.g. the serving layer's
     rebalanced plan); results, ``max_pieces`` and the OverflowError
     check are identical to the single-device call.
+
+    ``interpret=None`` resolves from the platform policy
+    (``core/platform.py``) before the jit cache key.
     """
+    interpret = resolve_interpret(interpret)
     _require_lattice(grid, "rz")
     inputs, copies = _with_bumps(_grid_inputs(grid), greeks)
     if backend == "jnp":
@@ -566,6 +571,33 @@ def price_grid_rz(grid: ScenarioGrid, *, capacity: int = 48,
                       delta_ask=da, delta_bid=db, vega_ask=va, vega_bid=vb,
                       shard_info=shard_info, row_pieces=row_pieces,
                       engine="rz")
+
+
+def rz_grid_cost(grid: ScenarioGrid, *, capacity: int = 48,
+                 backend: str = "jnp", levels: Optional[int] = None,
+                 block: Optional[int] = None,
+                 interpret: Optional[bool] = None) -> Optional[dict]:
+    """XLA ``cost_analysis`` of the compiled RZ rows program.
+
+    The roofline hook the bench lanes use: exact flops/bytes of the same
+    jitted program :func:`price_grid_rz` runs (single-device path), fed
+    to :func:`repro.roofline.pricing.matrix_entry`.  ``None`` when the
+    backend exposes no cost model.
+    """
+    from .roofline.pricing import compiled_cost
+    interpret = resolve_interpret(interpret)
+    _require_lattice(grid, "rz")
+    inputs, _ = _with_bumps(_grid_inputs(grid), False)
+    if backend == "jnp":
+        fn = partial(_rz_rows, n_steps=grid.n_steps, capacity=capacity)
+    elif backend == "pallas":
+        fn = partial(_rz_rows_pallas, n_steps=grid.n_steps,
+                     capacity=capacity, levels=levels, block=block,
+                     interpret=interpret)
+    else:
+        raise ValueError(f"unknown backend {backend!r}; use one of "
+                         f"{RZ_BACKENDS}")
+    return compiled_cost(fn, *inputs)
 
 
 # --------------------------------------------------------------------- #
@@ -647,7 +679,8 @@ _notc_grid_pallas = partial(jax.jit, static_argnames=(
 
 def price_grid_notc(grid: ScenarioGrid, *, backend: str = "jnp",
                     greeks: bool = False, levels: int = 64,
-                    block: int = 256, interpret: bool = True, mesh=None,
+                    block: int = 256, interpret: Optional[bool] = None,
+                    mesh=None,
                     devices: Optional[int] = None,
                     shard_plan: Optional[ShardPlan] = None) -> GridResult:
     """Friction-free binomial prices for every scenario of ``grid``.
@@ -659,8 +692,10 @@ def price_grid_notc(grid: ScenarioGrid, *, backend: str = "jnp",
     to be meaningful as a two-sided quote).  ``mesh``/``devices``/
     ``shard_plan`` shard the batch over a 1-D device mesh exactly as in
     :func:`price_grid_rz` (friction-free rows all cost the same, so the
-    default plan is the even split).
+    default plan is the even split).  ``interpret=None`` resolves from
+    the platform policy (``core/platform.py``).
     """
+    interpret = resolve_interpret(interpret)
     _require_lattice(grid, "notc")
     inputs, copies = _with_bumps(_grid_inputs(grid), greeks)
     # drop the cost-rate column (index 4) — this engine is friction-free

@@ -38,6 +38,7 @@ from typing import Any, Callable, Dict, List, Optional
 import numpy as np
 
 from ..core.partition import _next_pow2
+from ..core.platform import resolve_interpret
 from ..scenarios import PAYOFF_FAMILIES, route_engine
 
 __all__ = ["ServiceMetrics", "SchedulerCore", "ChunkSpec", "ChunkResult",
@@ -161,7 +162,10 @@ class ChunkSpec:
     scheduler's queues.  ``mesh``/``shard_plan`` are set by transports
     that route chunks onto a device mesh.  ``n_assets``/
     ``exercise_steps``/``n_paths``/``mc_seed`` configure the ``lsmc``
-    engine (harmless defaults for the lattice engines).
+    engine (harmless defaults for the lattice engines).  ``interpret``
+    is the Pallas execution mode the scheduler resolved for this chunk
+    (``None`` = defer to the executing process's platform policy — what
+    a cross-process replica on different hardware wants).
     """
     bucket: tuple
     requests: List[_Pending]
@@ -177,6 +181,7 @@ class ChunkSpec:
     exercise_steps: Optional[tuple] = None
     n_paths: int = 4096
     mc_seed: int = 0
+    interpret: Optional[bool] = None
 
     @property
     def n(self) -> int:
@@ -218,6 +223,7 @@ def execute_chunk(chunk: ChunkSpec) -> ChunkResult:
         n_steps=chunk.n_steps, n_assets=chunk.n_assets,
         exercise_steps=chunk.exercise_steps, engine=chunk.engine,
         capacity=chunk.capacity, backend=chunk.backend,
+        interpret=chunk.interpret,
         n_paths=chunk.n_paths, seed=chunk.mc_seed,
         pad_to=chunk.padded, mesh=chunk.mesh, shard_plan=chunk.shard_plan)
     seconds = time.perf_counter() - t0
@@ -249,6 +255,7 @@ class SchedulerCore:
 
     def __init__(self, *, max_batch: int = 64, deadline_ms: float = 5.0,
                  capacity: int = 48, backend: str = "jnp",
+                 interpret: Optional[bool] = None,
                  default_n_steps: int = 100, default_payoff: str = "put",
                  default_strike: float = 100.0,
                  result_cache_size: int = 1024, max_results: int = 65536,
@@ -261,6 +268,9 @@ class SchedulerCore:
         self.deadline_s = float(deadline_ms) * 1e-3
         self.capacity = int(capacity)
         self.backend = backend
+        # Pallas execution mode for every chunk this core cuts; None =
+        # the executing process's platform policy (core/platform.py)
+        self.interpret = interpret
         self.default_n_steps = int(default_n_steps)
         self.default_payoff = default_payoff
         self.default_strike = float(default_strike)
@@ -364,7 +374,8 @@ class SchedulerCore:
                          n_assets=bucket[2] if engine == "lsmc" else 1,
                          exercise_steps=(bucket[3] if engine == "lsmc"
                                          else None),
-                         n_paths=self.n_paths, mc_seed=self.mc_seed)
+                         n_paths=self.n_paths, mc_seed=self.mc_seed,
+                         interpret=self.interpret)
 
     def requeue(self, chunk: ChunkSpec) -> None:
         """Return a chunk's requests to the *front* of their bucket (no
@@ -399,6 +410,7 @@ class SchedulerCore:
         plan = chunk.shard_plan
         self.compile_key_seen(chunk.padded, chunk.n_steps, chunk.engine,
                               False, backend=chunk.backend,
+                              interpret=chunk.interpret,
                               shard=(plan.n_shards, plan.lanes)
                               if plan is not None else None,
                               extra=self.chunk_compile_extra(chunk))
@@ -415,6 +427,7 @@ class SchedulerCore:
 
     def compile_key_seen(self, padded: int, n_steps: int, engine: str,
                          greeks: bool, backend: Optional[str] = None,
+                         interpret: Optional[bool] = None,
                          shard: Optional[tuple] = None,
                          extra: Optional[tuple] = None) -> None:
         """Count a *successful* engine call against its compiled-program
@@ -426,8 +439,13 @@ class SchedulerCore:
         both change the compiled program's shape, so they are part of
         the key; ``extra`` carries engine-specific static config (the
         lsmc path/schedule shape, see :meth:`chunk_compile_extra`)."""
+        # interpret-mode and compiled Pallas programs are distinct
+        # executables — resolve ``None`` through the platform policy so
+        # "unset" and "explicitly the policy value" key identically
         ck = (padded, n_steps, engine,
-              self.backend if backend is None else backend, greeks,
+              self.backend if backend is None else backend,
+              resolve_interpret(self.interpret if interpret is None
+                                else interpret), greeks,
               self.capacity, shard, extra)
         if ck in self._compiled:
             self._compiled[ck] += 1

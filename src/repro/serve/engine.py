@@ -76,6 +76,7 @@ class GridRequest:
     n_steps: int = 100
     greeks: bool = False
     backend: str = "jnp"     # TC engine implementation: "jnp" | "pallas"
+    interpret: Any = None    # Pallas mode; None = platform policy
     n_assets: int = 1        # > 1 routes the grid to the lsmc engine
     exercise_steps: Any = None   # Bermudan schedule -> lsmc engine
 

@@ -76,6 +76,7 @@ class PricingService:
 
     def __init__(self, *, max_batch: int = 64, deadline_ms: float = 5.0,
                  capacity: int = 48, backend: str = "jnp",
+                 interpret: Optional[bool] = None,
                  default_n_steps: int = 100, default_payoff: str = "put",
                  default_strike: float = 100.0,
                  result_cache_size: int = 1024, max_results: int = 65536,
@@ -86,7 +87,8 @@ class PricingService:
                  clock: Callable[[], float] = time.monotonic):
         self.core = SchedulerCore(
             max_batch=max_batch, deadline_ms=deadline_ms, capacity=capacity,
-            backend=backend, default_n_steps=default_n_steps,
+            backend=backend, interpret=interpret,
+            default_n_steps=default_n_steps,
             default_payoff=default_payoff, default_strike=default_strike,
             result_cache_size=result_cache_size, max_results=max_results,
             n_paths=n_paths, mc_seed=mc_seed, clock=clock)
@@ -182,10 +184,12 @@ class PricingService:
     # ------------------------------------------------------------------ #
     def _compile_key_seen(self, padded: int, n_steps: int, engine: str,
                           greeks: bool, backend: Optional[str] = None,
+                          interpret: Optional[bool] = None,
                           shard: Optional[tuple] = None,
                           extra: Optional[tuple] = None) -> None:
         self.core.compile_key_seen(padded, n_steps, engine, greeks,
-                                   backend=backend, shard=shard, extra=extra)
+                                   backend=backend, interpret=interpret,
+                                   shard=shard, extra=extra)
 
     # ------------------------------------------------------------------ #
     # device-mesh shard planning / rebalance hook
@@ -383,7 +387,11 @@ class PricingService:
         t0 = self._clock()
         res = price_grid(grid.pad_to(bucket), engine=engine,
                          capacity=self.capacity, greeks=req.greeks,
-                         backend=req.backend, n_paths=self.core.n_paths,
+                         backend=req.backend,
+                         interpret=(self.core.interpret
+                                    if getattr(req, "interpret", None) is None
+                                    else req.interpret),
+                         n_paths=self.core.n_paths,
                          seed=self.core.mc_seed, mesh=self._mesh,
                          shard_plan=plan)
         elapsed = self._clock() - t0
@@ -393,6 +401,7 @@ class PricingService:
         info = res.shard_info
         self._compile_key_seen(bucket, grid.n_steps, engine, req.greeks,
                                backend=req.backend,
+                               interpret=getattr(req, "interpret", None),
                                shard=(info.plan.n_shards, info.plan.lanes)
                                if info else None,
                                extra=((self.core.n_paths, grid.n_assets,

@@ -98,6 +98,68 @@ def test_pwl_bench_gate():
     assert len(fails) == 1 and "envelope.ops_per_sec" in fails[0]
 
 
+def _matrix_cell(op="envelope2", backend="jnp", platform="cpu",
+                 flops_rate=5e9, bytes_rate=6e9):
+    return {"op": op, "backend": backend, "platform": platform,
+            "dtype": "float64", "flops": 1e8, "bytes": 1.2e8,
+            "seconds": 0.02, "achieved_flops_per_sec": flops_rate,
+            "frac_peak_flops": flops_rate / 24e9,
+            "achieved_bytes_per_sec": bytes_rate,
+            "frac_peak_bw": bytes_rate / 20e9,
+            "intensity_flops_per_byte": 0.83, "bound": "memory"}
+
+
+def _with_matrix(report, cells):
+    report["roofline"] = {"matrix": cells}
+    return report
+
+
+def test_matrix_cells_gate_like_throughput():
+    base = _with_matrix(_pwl_report(), [_matrix_cell()])
+    ok = _with_matrix(_pwl_report(), [_matrix_cell(flops_rate=4.5e9)])
+    assert check(ok, base, tol=0.25) == []
+    slow = _with_matrix(_pwl_report(), [_matrix_cell(flops_rate=1e9)])
+    fails = check(slow, base, tol=0.25)
+    assert len(fails) == 1
+    assert "roofline[envelope2/jnp/cpu/float64]" in fails[0]
+    assert "achieved_flops_per_sec" in fails[0]
+
+
+def test_matrix_missing_same_platform_cell_fails():
+    base = _with_matrix(_pwl_report(), [_matrix_cell(),
+                                        _matrix_cell(op="cone_infconv")])
+    fresh = _with_matrix(_pwl_report(), [_matrix_cell()])
+    fails = check(fresh, base, tol=0.25)
+    assert len(fails) == 1 and "cone_infconv" in fails[0]
+    assert "missing" in fails[0]
+
+
+def test_matrix_other_platform_cells_are_skipped():
+    """The CPU lane must not fail the GPU/TPU columns of the matrix."""
+    base = _with_matrix(_pwl_report(), [
+        _matrix_cell(),
+        _matrix_cell(platform="gpu", flops_rate=5e12),
+        _matrix_cell(platform="tpu", flops_rate=9e13)])
+    fresh = _with_matrix(_pwl_report(), [_matrix_cell()])
+    assert check(fresh, base, tol=0.25) == []
+
+
+def test_matrix_not_gated_on_config_mismatch():
+    """Machine-dependent cells follow the throughput rule: a different
+    bench config (deeper tree) gates ratios only, never the matrix."""
+    base = _with_matrix(_pwl_report(), [_matrix_cell()])
+    fresh = _with_matrix(_pwl_report(), [_matrix_cell(flops_rate=1e8)])
+    fresh["lanes"] = 9999
+    assert check(fresh, base, tol=0.25) == []
+
+
+def test_matrix_absent_from_old_baseline_is_tolerated():
+    """A fresh artifact with a matrix gates fine against a pre-matrix
+    baseline (rollout path: baseline refresh starts the gating)."""
+    fresh = _with_matrix(_pwl_report(), [_matrix_cell()])
+    assert check(fresh, _pwl_report(), tol=0.25) == []
+
+
 def test_non_finite_metrics_are_rejected():
     """Infinity/NaN in either file must fail the gate, never be compared:
     a ratio against inf passes every tolerance band silently (this is the
@@ -175,6 +237,20 @@ def test_committed_baselines_match_ci_lane_configs():
     assert pwl["lanes"] == 514          # node-axis width of the N=512 tree
     for metric in ("envelope", "cone", "level_step"):
         assert pwl[metric]["ops_per_sec"] > 0
+    # both bench baselines must carry the roofline matrix (per-backend /
+    # per-platform achieved-vs-peak cells) and the platform stamp, so
+    # the matrix gate is armed, not dormant
+    for rep, ops in ((rz, {("rz_grid", "jnp"), ("rz_grid", "pallas")}),
+                     (pwl, {("envelope2", "jnp"), ("cone_infconv", "jnp"),
+                            ("level_step", "jnp")})):
+        assert rep["platform"]["platform"] in ("cpu", "gpu", "tpu")
+        cells = rep["roofline"]["matrix"]
+        assert {(c["op"], c["backend"]) for c in cells} == ops
+        for c in cells:
+            assert c["achieved_flops_per_sec"] > 0
+            assert c["achieved_bytes_per_sec"] > 0
+            assert 0 < c["frac_peak_flops"] <= 1.0
+            assert c["bound"] in ("compute", "memory")
 
 
 # --------------------------------------------------------------------- #

@@ -54,6 +54,36 @@ def test_serving_guide_snippets_execute():
     assert ns["stream_summary"]["staleness_p99_ms"] >= 0.0
 
 
+def test_platforms_guide_snippets_execute():
+    """docs/PLATFORMS.md documents the platform policy with executable
+    assertions — the guide cannot drift from ``core/platform.py``.  The
+    snippets pin the gpu/tpu policy branches via
+    ``configure_jax=False``, so the platform override is restored even
+    on failure."""
+    blocks = _python_blocks(ROOT / "docs" / "PLATFORMS.md")
+    assert blocks, "docs/PLATFORMS.md has no ```python blocks"
+    from repro.core import platform as plat
+    ns: dict = {}
+    try:
+        for block in blocks:
+            exec(compile(block, "docs/PLATFORMS.md", "exec"), ns)
+        # the guide's running example leaves the summary in scope
+        assert ns["summary"]["platform"] == plat.detect_platform()
+    finally:
+        plat.set_platform(None)
+
+
+def test_platforms_doc_mentions_real_paths():
+    """Every repo path PLATFORMS.md references must exist."""
+    text = (ROOT / "docs" / "PLATFORMS.md").read_text()
+    for ref in set(re.findall(
+            r"`((?:src|tests|tools|benchmarks)/[\w./*-]+)`", text)):
+        if "*" in ref:
+            assert list(ROOT.glob(ref)), ref
+        else:
+            assert (ROOT / ref).exists(), ref
+
+
 def test_markdown_links_resolve():
     """Every relative link in README.md and docs/*.md points at a real
     file (same checker the CI docs lane runs standalone)."""

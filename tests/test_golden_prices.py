@@ -1,0 +1,118 @@
+"""Golden-price snapshots: bit-stability of the 108-scenario mixed grid.
+
+``tests/golden/grid108.json`` commits the exact float64 ask/bid surfaces
+(and ``max_pieces``) of a mixed 108-scenario cartesian grid — puts,
+calls and bull spreads across spots, vols, strikes and cost rates,
+lambda = 0 rows included — priced through **both** TC backends (the
+vectorised jnp engine and the blocked Pallas rounds).  The oracle suites
+pin correctness to ~1e-9; this suite pins *bit stability*: any change to
+the summation order, the PWL algebra, dtype handling or the platform
+default that moves even one ULP shows up as a diff of a committed file
+and must be reviewed (and regenerated) deliberately, never absorbed
+silently by a tolerance band.
+
+Regenerate after an intentional numeric change::
+
+    PYTHONPATH=src python tests/test_golden_prices.py --regen
+
+JSON round-trips float64 exactly (Python emits shortest-round-trip
+repr), so equality below is bitwise.
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401  (x64 flag side effect)
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "grid108.json"
+BACKENDS = ("jnp", "pallas")
+
+
+def _grid():
+    from repro.scenarios import ScenarioGrid
+    return ScenarioGrid.cartesian(
+        s0=(95.0, 105.0), sigma=(0.15, 0.25),
+        cost_rate=(0.0, 0.005, 0.01),
+        payoff=("put", "call", "bull_spread"),
+        strike=(95.0, 100.0, 105.0), n_steps=10)
+
+
+def _compute() -> dict:
+    from repro.api import price_grid
+    grid = _grid()
+    out = {"n_scenarios": int(grid.n_scenarios),
+           "n_steps": int(grid.n_steps), "capacity": 16, "engines": {}}
+    for backend in BACKENDS:
+        res = price_grid(grid, capacity=16, backend=backend)
+        out["engines"][backend] = {
+            "engine": res.engine,
+            "ask": np.asarray(res.ask).ravel().tolist(),
+            "bid": np.asarray(res.bid).ravel().tolist(),
+            "max_pieces": int(res.max_pieces),
+        }
+    return out
+
+
+def _golden() -> dict:
+    if not GOLDEN.exists():
+        pytest.fail(f"{GOLDEN} missing — regenerate with "
+                    "PYTHONPATH=src python tests/test_golden_prices.py "
+                    "--regen")
+    return json.loads(GOLDEN.read_text())
+
+
+def test_golden_grid_is_bit_stable():
+    fresh, golden = _compute(), _golden()
+    assert fresh["n_scenarios"] == golden["n_scenarios"] == 108
+    for backend in BACKENDS:
+        f, g = fresh["engines"][backend], golden["engines"][backend]
+        assert f["engine"] == g["engine"]
+        assert f["max_pieces"] == g["max_pieces"]
+        for side in ("ask", "bid"):
+            fa, ga = np.asarray(f[side]), np.asarray(g[side])
+            # bitwise: == on float64, with the indices of any drift named
+            if not np.array_equal(fa, ga):
+                bad = np.flatnonzero(fa != ga)
+                ulps = (fa.view(np.int64) - ga.view(np.int64))[bad]
+                pytest.fail(
+                    f"{backend}/{side} drifted at rows {bad[:8].tolist()} "
+                    f"(ULP deltas {ulps[:8].tolist()}); if intentional, "
+                    "regenerate tests/golden/grid108.json (--regen)")
+
+
+def test_golden_backends_agree_and_prices_sane():
+    """Cross-checks *within* the committed file: the two backends must
+    agree to 1e-9 and satisfy basic no-arbitrage shape (ask >= bid,
+    both finite, non-negative)."""
+    golden = _golden()
+    a_jnp = np.asarray(golden["engines"]["jnp"]["ask"])
+    a_pal = np.asarray(golden["engines"]["pallas"]["ask"])
+    b_jnp = np.asarray(golden["engines"]["jnp"]["bid"])
+    b_pal = np.asarray(golden["engines"]["pallas"]["bid"])
+    np.testing.assert_allclose(a_pal, a_jnp, rtol=0, atol=1e-9)
+    np.testing.assert_allclose(b_pal, b_jnp, rtol=0, atol=1e-9)
+    for a, b in ((a_jnp, b_jnp), (a_pal, b_pal)):
+        assert np.isfinite(a).all() and np.isfinite(b).all()
+        assert (a >= b - 1e-12).all(), "ask below bid"
+        assert (a >= -1e-12).all() and (b >= -1e-12).all()
+
+
+def test_golden_capacity_headroom():
+    """The committed snapshot must not sit at the capacity cliff — a
+    regen that lands max_pieces == capacity would make the snapshot
+    flaky under any future knot-count change."""
+    golden = _golden()
+    for backend in BACKENDS:
+        assert golden["engines"][backend]["max_pieces"] < golden["capacity"]
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" in sys.argv:
+        GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN.write_text(json.dumps(_compute(), indent=1) + "\n")
+        print(f"wrote {GOLDEN}")
+    else:
+        print(__doc__)

@@ -14,6 +14,7 @@ import pytest
 
 from repro.core import (LatticeModel, american_put, bull_spread,
                         cash_settled, price_notc_np, price_ref)
+from repro.core import pwl as P
 from repro.core.partition import kernel_round_plan
 from repro.core.rz import (price_rz, rz_backward, rz_backward_pallas,
                            rz_level_step_lanes, _leaf_level)
@@ -88,21 +89,34 @@ def test_pallas_overflow_reported_identically():
             price_rz(m, pay, capacity=3, backend=backend)
 
 
-def test_rz_round_equals_level_step_chain():
+@pytest.mark.parametrize("dtype", [jnp.float64, jnp.float32],
+                         ids=["float64", "float32"])
+def test_rz_round_equals_level_step_chain(dtype):
     """White-box: one blocked round == ``levels`` full-width level steps
     on the owned live lanes (the region-A/halo construction is exact).
 
-    Values compare at 1e-12, not bitwise: the kernel's fused ``fori_loop``
-    body lets LLVM contract mul-adds into FMAs that the eagerly-executed
-    reference chain doesn't, a ±1-ulp effect.  Knot counts are exact.
+    The comparable observable is dtype-dependent, and the split is the
+    documented per-dtype tolerance story:
+
+    * **float64** — knot arrays compare at 1e-12 (not bitwise: the
+      kernel's fused ``fori_loop`` body lets LLVM contract mul-adds
+      into FMAs that the eagerly-executed reference chain doesn't, a
+      ±1-ulp effect) and knot counts are exact.
+    * **float32** (the compiled GPU/TPU dtype) — only function *values*
+      are stable, at ~1e-4 on values O(500) (a few f32 ulps; measured
+      3e-5).  Knot *structure* is not: near this model's degenerate
+      regions the true continuation is affine, so envelope crossings
+      are ties that f32 rounding resolves differently under the
+      kernel's FMA ordering than under the eager chain, creating
+      *different spurious knots* on each side (and inflating
+      ``max_pieces`` — capacity headroom must be budgeted for f32).
     """
     n_steps, capacity, block, levels = 9, 12, 4, 3
-    dtype = jnp.float64
     pay = american_put(100.0)
     dt = 0.25 / n_steps
-    params = dict(s0=jnp.float64(100.0), k=jnp.float64(0.01),
-                  sig_sqrt_dt=0.2 * jnp.sqrt(jnp.float64(dt)),
-                  r=jnp.exp(jnp.float64(0.1 * dt)))
+    params = dict(s0=jnp.asarray(100.0, dtype), k=jnp.asarray(0.01, dtype),
+                  sig_sqrt_dt=0.2 * jnp.sqrt(jnp.asarray(dt, dtype)),
+                  r=jnp.exp(jnp.asarray(0.1 * dt, dtype)))
     lanes = 12                                   # n_steps+2=11 -> pad to 3 blocks
     z = _leaf_level(n_steps, params, capacity, dtype, lanes=lanes)
 
@@ -125,14 +139,29 @@ def test_rz_round_equals_level_step_chain():
     z_krn, pieces = rz_round(z1, scalars, levels=levels, block=block,
                              sellers=(True,))
     live = np.arange(lanes) <= lvl0 - levels     # live lanes at the new base
-    for a_ref, a_krn, name in zip(z_ref, z_krn, ("xs", "ys", "sl", "sr", "m")):
-        a_ref = np.asarray(a_ref)[live]
-        a_krn = np.asarray(a_krn)[0][live]
-        if name == "m":
-            np.testing.assert_array_equal(a_ref, a_krn)
-        else:
-            np.testing.assert_allclose(a_ref, a_krn, rtol=0, atol=1e-12)
-    assert int(pieces) == int(jnp.max(pieces_ref))
+    if dtype == jnp.float64:
+        for a_ref, a_krn, name in zip(z_ref, z_krn,
+                                      ("xs", "ys", "sl", "sr", "m")):
+            a_ref = np.asarray(a_ref)[live]
+            a_krn = np.asarray(a_krn)[0][live]
+            if name == "m":
+                np.testing.assert_array_equal(a_ref, a_krn)
+            else:
+                np.testing.assert_allclose(a_ref, a_krn, rtol=0, atol=1e-12)
+        assert int(pieces) == int(jnp.max(pieces_ref))
+    else:
+        # f32: compare the functions, not their (unstable) knot arrays
+        ysq = jnp.linspace(-4.0, 4.0, 81).astype(dtype)
+
+        def _values(xs, ys, sl, sr, m):
+            def one(a, b, c, d, e):
+                f = P.PWL(a, b, c, d, e)
+                return jax.vmap(lambda q: P.eval_at(f, q))(ysq)
+            return jax.vmap(one)(xs, ys, sl, sr, m)
+
+        v_ref = np.asarray(_values(*z_ref))[live]
+        v_krn = np.asarray(_values(*(a[0] for a in z_krn)))[live]
+        np.testing.assert_allclose(v_krn, v_ref, rtol=0, atol=2e-4)
 
     # fused (seller, buyer) round: the seller row must be bit-identical
     # to the single-side seller round (side fusion itself changes no

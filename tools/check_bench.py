@@ -23,6 +23,16 @@ Two metric classes per bench:
 Unknown bench kinds fall back to gating every ``*contracts_per_sec``
 path found in both files.
 
+Benches that emit a **roofline matrix** (``roofline.matrix`` — a list of
+per-``(op, backend, platform, dtype)`` cells with achieved-vs-peak
+flops/bytes, see ``repro/roofline/pricing.py``) are additionally gated
+cell-by-cell: cells are matched on their identity key, the achieved
+throughput columns gate like any other machine-dependent metric (config
+must match), and a baseline cell missing from the fresh artifact is a
+coverage failure (a kernel silently dropped out of the matrix).  Cells
+for *other* platforms in the baseline are skipped, not failed — the CPU
+lane cannot regress the GPU column.
+
 Non-finite metric values (``Infinity``/``NaN`` — which ``json`` parses
 happily from a buggy artifact) are rejected as failures rather than
 compared: a ratio against inf passes every gate silently.
@@ -43,6 +53,7 @@ _BENCHES = {
                    "levels", "block", "interpret", "device"),
         "throughput": ("jnp.contracts_per_sec", "pallas.contracts_per_sec"),
         "ratios": ("pallas_over_jnp",),
+        "matrix": True,
     },
     "serve_scheduler_vs_per_request": {
         "config": ("requests", "max_batch", "n_steps", "tc_fraction",
@@ -63,6 +74,7 @@ _BENCHES = {
         "throughput": ("envelope.ops_per_sec", "cone.ops_per_sec",
                        "level_step.ops_per_sec"),
         "ratios": (),
+        "matrix": True,
     },
     "lsmc_paths": {
         "config": ("contracts", "n_steps", "paths", "n_exercise",
@@ -165,7 +177,69 @@ def check(fresh: dict, baseline: dict, tol: float) -> list[str]:
             gate(m, "throughput")
     for m in ratios:
         gate(m, "ratio")
+    if spec is not None and spec.get("matrix"):
+        _gate_matrix(fresh, baseline, tol, config_ok, failures)
     return failures
+
+
+_MATRIX_KEY = ("op", "backend", "platform", "dtype")
+_MATRIX_THROUGHPUT = ("achieved_flops_per_sec", "achieved_bytes_per_sec")
+
+
+def _cells(report: dict) -> dict:
+    cells = _get(report, "roofline.matrix") or []
+    return {tuple(c.get(k) for k in _MATRIX_KEY): c for c in cells
+            if isinstance(c, dict)}
+
+
+def _gate_matrix(fresh: dict, baseline: dict, tol: float, config_ok: bool,
+                 failures: list[str]) -> None:
+    """Cell-by-cell gate of the roofline achieved-vs-peak matrix."""
+    fc, bc = _cells(fresh), _cells(baseline)
+    if not bc:
+        if fc:
+            print(f"  NOTE roofline matrix: {len(fc)} fresh cell(s), no "
+                  "baseline matrix yet — consider --write-baseline")
+        return
+    this_platform = {k[2] for k in fc} or {None}
+    for key, bcell in sorted(bc.items()):
+        label = "/".join(str(k) for k in key)
+        if key not in fc:
+            # a cell for a platform this runner cannot produce is
+            # expected absent; a same-platform cell vanishing is not
+            if key[2] not in this_platform:
+                print(f"  SKIP roofline[{label}]: other platform")
+                continue
+            print(f"  FAIL roofline[{label}]: cell missing from fresh "
+                  "matrix")
+            failures.append(f"roofline[{label}]: cell missing from fresh "
+                            "matrix — kernel dropped out of the roofline")
+            continue
+        if not config_ok:
+            print(f"  SKIP roofline[{label}]: config differs "
+                  "(machine-dependent cells not gated)")
+            continue
+        fcell = fc[key]
+        for metric in _MATRIX_THROUGHPUT:
+            f, b = fcell.get(metric), bcell.get(metric)
+            if not (_finite_number(f) and _finite_number(b)):
+                print(f"  SKIP roofline[{label}].{metric}: non-finite or "
+                      "missing")
+                continue
+            floor = b * (1.0 - tol)
+            status = "PASS" if f >= floor else "FAIL"
+            print(f"  {status} roofline[{label}].{metric}: fresh {f:.4g} "
+                  f"vs baseline {b:.4g} (floor {floor:.4g})")
+            if f < floor:
+                failures.append(
+                    f"roofline[{label}].{metric}: {f:.4g} is "
+                    f"{(1 - f / b):.1%} below baseline {b:.4g} "
+                    f"(tolerance {tol:.0%})")
+    extra = set(fc) - set(bc)
+    if extra:
+        print(f"  NOTE roofline matrix: new cell(s) not in baseline: "
+              f"{sorted('/'.join(map(str, k)) for k in extra)} — refresh "
+              "with --write-baseline to start gating them")
 
 
 def main() -> int:
