@@ -9,7 +9,12 @@ restart after ``--restart-s`` — modelling a pricing process respawn):
   * ``one_replica`` — the crash stalls the whole gateway for the
     restart window (plus retry backoff) before the replay can resume;
   * ``two_replica`` — the in-flight chunk fails over to the healthy
-    replica immediately; the restart window is masked.
+    replica immediately; the restart window is masked;
+  * ``process_pool`` — the same 2-replica replay with every replica a
+    real spawned worker process (``serve/procpool.py``) and the crash a
+    genuine mid-chunk SIGKILL; ``process_over_thread`` is the
+    process-vs-thread throughput ratio (wire-schema pickling + per-
+    process compiles are the honest cost of real isolation).
 
 Each timed replay is followed by a streaming segment (``run_stream``
 over a mixed :class:`~repro.serve.streaming.StreamingBook` and a
@@ -29,7 +34,8 @@ exists to provide, and it is what the baseline gates.
 
     PYTHONPATH=src python -m benchmarks.bench_gateway \
         [--requests 1000] [--max-batch 64] [--n-steps 16,24] \
-        [--crash-at 1] [--restart-s 1.0] [--out BENCH_gateway.json]
+        [--crash-at 1] [--restart-s 1.0] [--pool both|thread|process] \
+        [--out BENCH_gateway.json]
 """
 from __future__ import annotations
 
@@ -42,6 +48,7 @@ from pathlib import Path
 from repro.api import price_american
 from repro.launch.serve_pricing import synth_trace
 from repro.serve.gateway import PricingGateway
+from repro.serve.procpool import ProcessReplica, ReplicaPool, warmup_chunk
 from repro.serve.replica import FaultyReplica, LocalReplica
 from repro.serve.streaming import StreamingBook, synth_ticks
 
@@ -51,9 +58,17 @@ DEADLINE_MS = 25.0
 TICKS = 16
 
 
-def _replicas(n: int, crash_at):
+def _replicas(n: int, crash_at, pool: str = "thread", warmup=None):
     """Replica 0 optionally crashes at its ``crash_at``-th chunk; the
-    rest are clean in-process workers."""
+    rest are clean workers.  ``pool="process"`` backs every worker with
+    a spawned process and makes the crash a real mid-chunk SIGKILL."""
+    if pool == "process":
+        first = ProcessReplica(
+            "replica-0", warmup=warmup,
+            faults=None if crash_at is None
+            else {int(crash_at): "sigkill"})
+        return [first] + [ProcessReplica(f"replica-{i}", warmup=warmup)
+                          for i in range(1, n)]
     first = (LocalReplica(name="replica-0") if crash_at is None else
              FaultyReplica(faults={int(crash_at): "crash"},
                            name="replica-0"))
@@ -67,11 +82,17 @@ def _stream_book(n_steps):
 
 
 async def _replay(trace, *, n_replicas, crash_at, restart_s, max_batch,
-                  capacity, n_steps, ticks):
+                  capacity, n_steps, ticks, pool="thread"):
     """One full replay: unary trace, then a streaming segment.  Returns
     (quotes, unary_seconds, metrics, stream_summary)."""
+    wu = (warmup_chunk(n_steps=min(n_steps), capacity=capacity)
+          if pool == "process" else None)
+    # the factory drives restart_s respawn: a killed worker comes back
+    # healthy and of the same pool kind
+    rp = ReplicaPool(pool, warmup=wu)
     async with PricingGateway(
-            replicas=_replicas(n_replicas, crash_at),
+            replicas=_replicas(n_replicas, crash_at, pool, wu),
+            replica_factory=rp.factory,
             max_batch=max_batch, deadline_ms=DEADLINE_MS,
             capacity=capacity, result_cache_size=0,
             restart_s=restart_s, retry_backoff_s=0.05,
@@ -106,7 +127,7 @@ def _audit(trace, quotes, rids):
 
 def bench(requests: int = DEFAULT_REQUESTS, max_batch: int = 64,
           n_steps=(16, 24), capacity: int = 16, crash_at: int = 1,
-          restart_s: float = 1.0, seed: int = 0,
+          restart_s: float = 1.0, seed: int = 0, pool: str = "both",
           out: str = "BENCH_gateway.json") -> dict:
     import jax
     trace = synth_trace(requests, n_steps=n_steps, seed=seed)
@@ -114,18 +135,26 @@ def bench(requests: int = DEFAULT_REQUESTS, max_batch: int = 64,
     print(f"{n}-request trace, crash at replica chunk #{crash_at}, "
           f"restart after {restart_s}s")
 
-    def replay(n_replicas, crash):
+    def replay(n_replicas, crash, pool_kind="thread"):
         return asyncio.run(_replay(
             trace, n_replicas=n_replicas, crash_at=crash,
             restart_s=restart_s, max_batch=max_batch, capacity=capacity,
-            n_steps=n_steps, ticks=TICKS))
+            n_steps=n_steps, ticks=TICKS, pool=pool_kind))
 
     # warm-up: compile every unary + streaming batch shape, no faults
+    # (process workers warm themselves — each spawns with a warmup chunk)
     replay(2, None)
 
+    configs = [("one_replica", 1, "thread"), ("two_replica", 2, "thread"),
+               ("process_pool", 2, "process")]
+    if pool == "thread":
+        configs = configs[:2]
+    elif pool == "process":
+        configs = configs[2:]
     results = {}
-    for label, n_replicas in (("one_replica", 1), ("two_replica", 2)):
-        quotes, dt, m, m_final, stream = replay(n_replicas, crash_at)
+    for label, n_replicas, pool_kind in configs:
+        quotes, dt, m, m_final, stream = replay(n_replicas, crash_at,
+                                                pool_kind)
         assert len(quotes) == n and m_final["failed"] == 0, \
             f"{label}: dropped/failed quotes despite failover"
         # the crash must land inside the timed unary replay (sticky
@@ -150,23 +179,28 @@ def bench(requests: int = DEFAULT_REQUESTS, max_batch: int = 64,
               f"stale_p99={stream['staleness_p99_ms']:.1f}ms  "
               f"oracle max|err|={worst:.2e} over {distinct} scenarios")
 
-    ratio = (results["two_replica"]["quotes_per_sec"]
-             / results["one_replica"]["quotes_per_sec"])
-    print(f"two_over_one: {ratio:.2f}x (criterion: >= 1.5x — the second "
-          "replica masks the restart outage)")
-
     report = {
         "bench": "gateway_replicas",
         "requests": n, "max_batch": max_batch, "n_steps": list(n_steps),
         "capacity": capacity, "crash_at": crash_at,
         "restart_s": restart_s, "seed": seed, "ticks": TICKS,
         "device": jax.devices()[0].platform,
-        "one_replica": results["one_replica"],
-        "two_replica": results["two_replica"],
-        "two_over_one": ratio,
-        "meets_1p5x_criterion": bool(ratio >= 1.5),
         "oracle": {"tol": 1e-9},
+        **results,
     }
+    if "one_replica" in results and "two_replica" in results:
+        ratio = (results["two_replica"]["quotes_per_sec"]
+                 / results["one_replica"]["quotes_per_sec"])
+        print(f"two_over_one: {ratio:.2f}x (criterion: >= 1.5x — the "
+              "second replica masks the restart outage)")
+        report["two_over_one"] = ratio
+        report["meets_1p5x_criterion"] = bool(ratio >= 1.5)
+    if "process_pool" in results and "two_replica" in results:
+        pratio = (results["process_pool"]["quotes_per_sec"]
+                  / results["two_replica"]["quotes_per_sec"])
+        print(f"process_over_thread: {pratio:.2f}x (wire pickling + "
+              "per-process compiles are the cost of real isolation)")
+        report["process_over_thread"] = pratio
     Path(out).write_text(json.dumps(report, indent=2) + "\n")
     print(f"wrote {out}")
     return report
@@ -179,8 +213,10 @@ def run() -> list[str]:
     return [
         f"gateway,{us:.0f},"
         f"two_over_one={rep['two_over_one']:.2f}x;"
+        f"proc_over_thread={rep['process_over_thread']:.2f}x;"
         f"one_qps={rep['one_replica']['quotes_per_sec']:.0f};"
         f"two_qps={rep['two_replica']['quotes_per_sec']:.0f};"
+        f"proc_qps={rep['process_pool']['quotes_per_sec']:.0f};"
         f"stale_p99={rep['two_replica']['staleness_p99_ms']:.0f}ms",
     ]
 
@@ -194,12 +230,18 @@ def main() -> None:
     ap.add_argument("--crash-at", type=int, default=1)
     ap.add_argument("--restart-s", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--pool", default="both",
+                    choices=["both", "thread", "process"],
+                    help="which replica pools to replay: thread "
+                         "(one_replica/two_replica), process "
+                         "(process_pool — spawned workers, real "
+                         "SIGKILL), or both")
     ap.add_argument("--out", default="BENCH_gateway.json")
     a = ap.parse_args()
     bench(requests=a.requests, max_batch=a.max_batch,
           n_steps=tuple(int(x) for x in a.n_steps.split(",")),
           capacity=a.capacity, crash_at=a.crash_at,
-          restart_s=a.restart_s, seed=a.seed, out=a.out)
+          restart_s=a.restart_s, seed=a.seed, pool=a.pool, out=a.out)
 
 
 if __name__ == "__main__":

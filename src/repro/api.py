@@ -34,24 +34,73 @@ against the sequential oracles (see ``docs/ARCHITECTURE.md``).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Sequence, Union
 
 import numpy as np
 
+from .configs.pricing import ExecutionConfig
 from .core.lattice import LatticeModel
 from .core.payoff import (PayoffProcess, american_call, american_put,
                           bull_spread, cash_settled)
-from .core.platform import resolve_interpret
 from .scenarios import (PAYOFF_FAMILIES, GridResult, ScenarioGrid,
                         price_grid_lsmc, price_grid_notc, price_grid_rz,
                         route_engine)
 
 __all__ = [
     "price_american", "price_grid", "price_flat", "PriceQuote", "GridResult",
-    "ScenarioGrid", "LatticeModel", "PayoffProcess", "PAYOFF_FAMILIES",
-    "american_put", "american_call", "bull_spread", "cash_settled",
-    "route_engine",
+    "ExecutionConfig", "ScenarioGrid", "LatticeModel", "PayoffProcess",
+    "PAYOFF_FAMILIES", "american_put", "american_call", "bull_spread",
+    "cash_settled", "route_engine",
 ]
+
+# the individual execution kwargs warn once per process, then stay quiet
+_legacy_exec_warned = False
+
+
+def _reset_legacy_exec_warning() -> None:
+    """Re-arm the once-per-process deprecation warning (test hook)."""
+    global _legacy_exec_warned
+    _legacy_exec_warned = False
+
+
+def _merge_execution(fn: str, execution: Optional[ExecutionConfig], *,
+                     engine=None, backend=None, platform=None,
+                     interpret=None, devices=None, n_paths=None, seed=None,
+                     basis=None, degree=None,
+                     antithetic=None) -> ExecutionConfig:
+    """Collapse ``execution=`` and the legacy individual kwargs into one
+    resolved :class:`ExecutionConfig`.
+
+    Passing both is an error (no silent precedence); passing only the
+    individual kwargs keeps working through a deprecation shim that
+    warns once per process.
+    """
+    legacy = {name: v for name, v in (
+        ("engine", engine), ("backend", backend), ("platform", platform),
+        ("interpret", interpret), ("devices", devices),
+        ("n_paths", n_paths), ("seed", seed), ("basis", basis),
+        ("degree", degree), ("antithetic", antithetic)) if v is not None}
+    if execution is not None:
+        if legacy:
+            raise TypeError(
+                f"{fn}() got both execution= and the individual kwargs "
+                f"{sorted(legacy)}; set them on the ExecutionConfig instead")
+        return execution.resolved()
+    if legacy:
+        global _legacy_exec_warned
+        if not _legacy_exec_warned:
+            _legacy_exec_warned = True
+            warnings.warn(
+                f"{fn}({', '.join(sorted(legacy))}=...): passing execution "
+                "knobs as individual kwargs is deprecated; pass "
+                "execution=ExecutionConfig(...) (repro.api.ExecutionConfig)",
+                DeprecationWarning, stacklevel=3)
+    return ExecutionConfig(
+        engine=engine, backend=backend, platform=platform,
+        interpret=interpret, devices=devices, n_paths=n_paths,
+        mc_seed=seed, basis=basis, degree=degree,
+        antithetic=antithetic).resolved()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,14 +168,16 @@ def price_american(*, s0: float, sigma: float, rate: float, maturity: float,
 
 
 def price_grid(grid: Optional[ScenarioGrid] = None, *,
-               engine: str = "auto", capacity: int = 48,
-               greeks: bool = False, backend: str = "jnp",
+               execution: Optional[ExecutionConfig] = None,
+               engine: Optional[str] = None, capacity: int = 48,
+               greeks: bool = False, backend: Optional[str] = None,
                n_steps: Union[int, Sequence[int], None] = None,
                levels: Optional[int] = None, block: Optional[int] = None,
                interpret: Optional[bool] = None,
                platform: Optional[str] = None,
-               n_paths: int = 4096, seed: int = 0,
-               basis: str = "poly", degree: int = 3, antithetic: bool = True,
+               n_paths: Optional[int] = None, seed: Optional[int] = None,
+               basis: Optional[str] = None, degree: Optional[int] = None,
+               antithetic: Optional[bool] = None,
                mesh=None, devices: Optional[int] = None, shard_plan=None,
                **axes) -> Union[GridResult, list]:
     """Price a whole grid of scenarios in one compiled call.
@@ -165,8 +216,21 @@ def price_grid(grid: Optional[ScenarioGrid] = None, *,
     (``core/partition.py::plan_shards``; pass ``shard_plan`` to
     override).  Results are identical to the single-device call — see
     ``docs/ARCHITECTURE.md`` "Sharded grid engine".
+
+    The execution knobs (``engine``/``backend``/``platform``/
+    ``interpret``/``devices``/``n_paths``/``seed``/``basis``/``degree``/
+    ``antithetic``) are consolidated in
+    :class:`~repro.configs.pricing.ExecutionConfig` — pass
+    ``execution=ExecutionConfig(...)``.  The individual kwargs keep
+    working through a deprecation shim that warns once per process;
+    passing both is a ``TypeError``.  ``mesh``/``shard_plan`` stay
+    separate kwargs: they carry live/plan objects, not config.
     """
-    interpret = resolve_interpret(interpret, platform)
+    cfg = _merge_execution("price_grid", execution, engine=engine,
+                           backend=backend, platform=platform,
+                           interpret=interpret, devices=devices,
+                           n_paths=n_paths, seed=seed, basis=basis,
+                           degree=degree, antithetic=antithetic)
     if grid is None:
         if isinstance(n_steps, (list, tuple)):
             if shard_plan is not None:
@@ -174,51 +238,52 @@ def price_grid(grid: Optional[ScenarioGrid] = None, *,
                     "shard_plan cannot combine with a sequence of n_steps: "
                     "one plan covers one flat batch (pass mesh=/devices= "
                     "and let each depth plan itself)")
-            return [price_grid(engine=engine, capacity=capacity,
-                               greeks=greeks, backend=backend, n_steps=int(n),
-                               levels=levels, block=block,
-                               interpret=interpret, n_paths=n_paths,
-                               seed=seed, basis=basis, degree=degree,
-                               antithetic=antithetic, mesh=mesh,
-                               devices=devices, **axes) for n in n_steps]
+            return [price_grid(execution=cfg, capacity=capacity,
+                               greeks=greeks, n_steps=int(n),
+                               levels=levels, block=block, mesh=mesh,
+                               **axes) for n in n_steps]
         grid = ScenarioGrid.cartesian(n_steps=int(n_steps or 100), **axes)
     elif axes or n_steps is not None:
         raise TypeError("pass either a ScenarioGrid or cartesian axes, "
                         "not both")
-    if engine == "auto":
-        engine = route_engine(any_tc=bool(np.any(grid.cost_rate > 0.0)),
-                              n_assets=grid.n_assets,
-                              exercise_steps=grid.exercise_steps)
-    if engine == "rz":
+    eng = cfg.engine
+    if eng == "auto":
+        eng = route_engine(any_tc=bool(np.any(grid.cost_rate > 0.0)),
+                           n_assets=grid.n_assets,
+                           exercise_steps=grid.exercise_steps)
+    if eng == "rz":
         return price_grid_rz(grid, capacity=capacity, greeks=greeks,
-                             backend=backend, levels=levels, block=block,
-                             interpret=interpret, mesh=mesh, devices=devices,
-                             shard_plan=shard_plan)
-    if engine == "notc":
-        return price_grid_notc(grid, backend=backend, greeks=greeks,
+                             backend=cfg.backend, levels=levels, block=block,
+                             interpret=cfg.interpret, mesh=mesh,
+                             devices=cfg.devices, shard_plan=shard_plan)
+    if eng == "notc":
+        return price_grid_notc(grid, backend=cfg.backend, greeks=greeks,
                                levels=64 if levels is None else levels,
                                block=256 if block is None else block,
-                               interpret=interpret, mesh=mesh,
-                               devices=devices, shard_plan=shard_plan)
-    if engine == "lsmc":
-        return price_grid_lsmc(grid, n_paths=n_paths, seed=seed, basis=basis,
-                               degree=degree, antithetic=antithetic,
-                               greeks=greeks, mesh=mesh, devices=devices,
+                               interpret=cfg.interpret, mesh=mesh,
+                               devices=cfg.devices, shard_plan=shard_plan)
+    if eng == "lsmc":
+        return price_grid_lsmc(grid, n_paths=cfg.n_paths, seed=cfg.mc_seed,
+                               basis=cfg.basis, degree=cfg.degree,
+                               antithetic=cfg.antithetic,
+                               greeks=greeks, mesh=mesh, devices=cfg.devices,
                                shard_plan=shard_plan)
-    raise ValueError(f"unknown engine {engine!r}; use 'auto', 'rz', 'notc' "
+    raise ValueError(f"unknown engine {eng!r}; use 'auto', 'rz', 'notc' "
                      "or 'lsmc'")
 
 
 def price_flat(*, s0, sigma, rate, maturity, cost_rate=0.0, payoff="put",
                strike=100.0, strike2=None, n_steps: int = 100,
                n_assets: int = 1, exercise_steps=None,
-               engine: str = "auto", capacity: int = 48,
-               greeks: bool = False, backend: str = "jnp",
+               execution: Optional[ExecutionConfig] = None,
+               engine: Optional[str] = None, capacity: int = 48,
+               greeks: bool = False, backend: Optional[str] = None,
                levels: Optional[int] = None, block: Optional[int] = None,
                interpret: Optional[bool] = None,
                platform: Optional[str] = None,
-               n_paths: int = 4096, seed: int = 0, basis: str = "poly",
-               degree: int = 3, antithetic: bool = True,
+               n_paths: Optional[int] = None, seed: Optional[int] = None,
+               basis: Optional[str] = None, degree: Optional[int] = None,
+               antithetic: Optional[bool] = None,
                pad_to: Optional[int] = None, mesh=None,
                devices: Optional[int] = None, shard_plan=None) -> GridResult:
     """Price a *flat* batch of heterogeneous contracts in one compiled call.
@@ -239,7 +304,9 @@ def price_flat(*, s0, sigma, rate, maturity, cost_rate=0.0, payoff="put",
     ``levels``/``block``/``interpret``/``platform`` tune the Pallas
     kernels exactly as in :func:`price_grid` (``interpret=None`` =
     platform policy), so the serving layer's execution mode threads
-    end-to-end.
+    end-to-end.  As in :func:`price_grid`, the execution knobs
+    consolidate into ``execution=ExecutionConfig(...)``; the individual
+    kwargs ride the same once-per-process deprecation shim.
 
         >>> from repro.api import price_flat
         >>> res = price_flat(s0=(95.0, 100.0), payoff=("put", "call"),
@@ -250,15 +317,17 @@ def price_flat(*, s0, sigma, rate, maturity, cost_rate=0.0, payoff="put",
         >>> bool(res.ask[0] > 0)
         True
     """
+    cfg = _merge_execution("price_flat", execution, engine=engine,
+                           backend=backend, platform=platform,
+                           interpret=interpret, devices=devices,
+                           n_paths=n_paths, seed=seed, basis=basis,
+                           degree=degree, antithetic=antithetic)
     grid = ScenarioGrid.explicit(
         s0=s0, sigma=sigma, rate=rate, maturity=maturity,
         cost_rate=cost_rate, payoff=payoff, strike=strike, strike2=strike2,
         n_steps=n_steps, n_assets=n_assets, exercise_steps=exercise_steps)
     if pad_to is not None:
         grid = grid.pad_to(pad_to)
-    return price_grid(grid, engine=engine, capacity=capacity, greeks=greeks,
-                      backend=backend, levels=levels, block=block,
-                      interpret=interpret, platform=platform,
-                      n_paths=n_paths, seed=seed,
-                      basis=basis, degree=degree, antithetic=antithetic,
-                      mesh=mesh, devices=devices, shard_plan=shard_plan)
+    return price_grid(grid, execution=cfg, capacity=capacity, greeks=greeks,
+                      levels=levels, block=block, mesh=mesh,
+                      shard_plan=shard_plan)

@@ -10,9 +10,73 @@ and ``dtype`` ``None`` defer to that platform's policy (interpret +
 float64 on CPU, compiled Pallas + float32 on GPU/TPU).  The module
 deliberately imports no jax so configs stay listable without touching an
 accelerator; :meth:`PricingConfig.resolve_execution` does the lookup.
+
+:class:`ExecutionConfig` is the consolidated execution surface of the
+public pricing API (``repro.api.price_grid``/``price_flat``, the
+serving layer's ``GridRequest``/``PricingService``/``PricingGateway``):
+one frozen dataclass holding every knob that selects *how* a price is
+computed — engine, backend, platform/interpret, device count, MC
+statics — rather than *what* is priced.  Every field defaults to
+``None`` = "resolve from policy"; :meth:`ExecutionConfig.resolved`
+fills the defaults through the same platform lookup as
+:meth:`PricingConfig.resolve_execution`.
 """
 import dataclasses
 from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionConfig:
+    """How a pricing call executes (the consolidated kwarg surface).
+
+    ``None`` anywhere means "resolve the default": ``engine`` routes by
+    contract shape (``"auto"``), ``backend`` falls back to ``"jnp"``,
+    ``platform``/``interpret`` resolve through the platform policy of
+    ``core/platform.py``, ``devices`` stays single-device, and the MC
+    statics take the lsmc engine's defaults.  Frozen and hashable, so a
+    config can key caches and cross process boundaries; it carries no
+    live jax objects (sharding is the ``devices`` *count* — each
+    executor resolves its own mesh, see ``serve/core.py``).
+    """
+    engine: Optional[str] = None       # "auto" | "notc" | "rz" | "lsmc"
+    backend: Optional[str] = None      # "jnp" | "pallas"
+    platform: Optional[str] = None     # "cpu" | "gpu" | "tpu"
+    interpret: Optional[bool] = None   # Pallas interpret vs compiled
+    devices: Optional[int] = None      # 1-D mesh width (count, not a mesh)
+    n_paths: Optional[int] = None      # lsmc paths
+    mc_seed: Optional[int] = None      # lsmc PRNG seed
+    basis: Optional[str] = None        # lsmc regression basis
+    degree: Optional[int] = None       # ... and its degree
+    antithetic: Optional[bool] = None  # lsmc antithetic pairing
+
+    def set_fields(self) -> tuple:
+        """Names of the fields explicitly set (non-``None``)."""
+        return tuple(f.name for f in dataclasses.fields(self)
+                     if getattr(self, f.name) is not None)
+
+    def resolved(self) -> "ExecutionConfig":
+        """Fill every ``None`` with its default.
+
+        ``platform``/``interpret`` resolve through the same
+        ``core/platform.py`` policy lookup as
+        :meth:`PricingConfig.resolve_execution` (lazy import — building
+        configs never touches jax; resolving them does).  ``engine``
+        stays ``"auto"`` — routing needs the contract, not the config.
+        """
+        from ..core import platform as plat
+        p = self.platform or plat.active_platform()
+        return dataclasses.replace(
+            self,
+            engine=self.engine or "auto",
+            backend=self.backend or "jnp",
+            platform=p,
+            interpret=plat.resolve_interpret(self.interpret, p),
+            n_paths=4096 if self.n_paths is None else int(self.n_paths),
+            mc_seed=0 if self.mc_seed is None else int(self.mc_seed),
+            basis=self.basis or "poly",
+            degree=3 if self.degree is None else int(self.degree),
+            antithetic=(True if self.antithetic is None
+                        else bool(self.antithetic)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +111,14 @@ class PricingConfig:
         interpret = plat.resolve_interpret(self.interpret, p)
         dtype = self.dtype or plat.default_dtype(p).name
         return {"platform": p, "interpret": interpret, "dtype": dtype}
+
+    def execution(self) -> ExecutionConfig:
+        """This config's execution knobs as a resolved
+        :class:`ExecutionConfig` (what ``price_grid(execution=...)``
+        takes)."""
+        ex = self.resolve_execution()
+        return ExecutionConfig(platform=ex["platform"],
+                               interpret=ex["interpret"]).resolved()
 
 
 PAPER_PUT = PricingConfig(name="paper-put-tc", n_steps=1500, round_depth=5)

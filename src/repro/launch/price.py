@@ -70,14 +70,16 @@ def run_grid(args) -> None:
         strike=_floats(args.strikes), n_assets=args.n_assets,
         exercise_steps=_steps(args.exercise_dates))
     t0 = time.perf_counter()
-    res = price_grid(n_steps=args.n_steps, engine=args.engine,
-                     capacity=args.capacity,
-                     greeks=args.greeks, backend=args.backend,
-                     interpret=args.interpret, platform=args.platform,
-                     levels=args.levels, block=args.block,
-                     n_paths=args.paths, seed=args.mc_seed,
-                     basis=args.basis, degree=args.degree,
-                     devices=args.devices, **grid_kwargs)
+    from ..configs.pricing import ExecutionConfig
+    res = price_grid(n_steps=args.n_steps,
+                     execution=ExecutionConfig(
+                         engine=args.engine, backend=args.backend,
+                         interpret=args.interpret, platform=args.platform,
+                         devices=args.devices, n_paths=args.paths,
+                         mc_seed=args.mc_seed, basis=args.basis,
+                         degree=args.degree),
+                     capacity=args.capacity, greeks=args.greeks,
+                     levels=args.levels, block=args.block, **grid_kwargs)
     n = res.grid.n_scenarios
     dt = time.perf_counter() - t0
     if res.shard_info is not None:

@@ -3,7 +3,8 @@
     PYTHONPATH=src python -m repro.launch.serve_pricing \
         --qps 500 --requests 1000 --deadline-ms 5 --max-batch 64 \
         [--n-steps 16,24] [--tc-fraction 0.0] [--backend jnp] [--seed 0] \
-        [--devices W] [--gateway [--replicas N] [--crash-at K]]
+        [--devices W] [--gateway [--replicas N] [--pool thread|process]
+                                 [--crash-at K]]
 
 Synthesises a request stream (mixed payoff families, strikes, spots and
 tree depths; an optional transaction-cost slice) arriving at ``--qps``,
@@ -17,7 +18,9 @@ With ``--gateway`` the same trace goes through the asyncio
 worker replicas, a timer-driven deadline flusher (no ``step()`` loop),
 and optionally ``--crash-at K`` to kill replica 0 at its ``K``-th chunk
 mid-replay and watch the failover metrics (requeues, retries,
-restarts).
+restarts).  ``--pool process`` backs each replica with a real spawned
+worker process (``serve/procpool.py``) — the crash becomes a genuine
+mid-chunk SIGKILL and the respawn a fresh process.
 
 Prints the service metrics (batches, p50/p99 latency, pad waste,
 contracts/sec, compile + result-cache counters) at the end.  Tuning
@@ -83,26 +86,49 @@ def drive(service: PricingService, trace, *, qps: float,
 
 def drive_gateway(trace, *, replicas: int, crash_at, max_batch: int,
                   deadline_ms: float, capacity: int, backend: str,
-                  n_steps: int, restart_s: float = 1.0) -> tuple:
+                  n_steps: int, restart_s: float = 1.0,
+                  pool_kind: str = "thread") -> tuple:
     """Replay ``trace`` through the asyncio gateway; returns
     ({rid: quote}, metrics).  ``crash_at`` injects a replica-0 crash at
-    that chunk call (restarted after ``restart_s``)."""
+    that chunk call (restarted after ``restart_s``); with
+    ``pool_kind="process"`` the replicas are spawned worker processes
+    and the crash is a real mid-chunk SIGKILL."""
     import asyncio
 
     from ..serve.gateway import PricingGateway
+    from ..serve.procpool import ProcessReplica, warmup_chunk
     from ..serve.replica import FaultyReplica, LocalReplica
 
-    pool = [LocalReplica(name=f"replica-{i}") for i in range(replicas)]
-    if crash_at is not None:
-        pool[0] = FaultyReplica(faults={int(crash_at): "crash"},
-                                name="replica-0")
+    if pool_kind == "process":
+        wu = warmup_chunk(n_steps=n_steps, backend=backend,
+                          capacity=capacity)
+
+        def respawn(i):
+            return ProcessReplica(f"replica-{i}", warmup=wu)
+
+        def factory(i):
+            faults = ({int(crash_at): "sigkill"}
+                      if crash_at is not None and i == 0 else None)
+            return ProcessReplica(f"replica-{i}", warmup=wu, faults=faults)
+    else:
+        def respawn(i):
+            return LocalReplica(name=f"replica-{i}")
+
+        def factory(i):
+            if crash_at is not None and i == 0:
+                return FaultyReplica(faults={int(crash_at): "crash"},
+                                     name="replica-0")
+            return LocalReplica(name=f"replica-{i}")
+    pool = [factory(i) for i in range(replicas)]
 
     async def run():
+        # replica_factory drives the restart_s respawn path: a crashed
+        # worker comes back *healthy* and of the same pool kind
         async with PricingGateway(
                 replicas=pool, max_batch=max_batch,
                 deadline_ms=deadline_ms, capacity=capacity,
                 backend=backend, default_n_steps=n_steps,
-                restart_s=restart_s) as gw:
+                restart_s=restart_s, replica_factory=respawn) as gw:
             rids = [await gw.submit(r) for r in trace]
             quotes = {rid: await gw.result(rid) for rid in rids}
             return quotes, gw.metrics()
@@ -135,9 +161,17 @@ def main() -> None:
                          "instead of the cooperative service")
     ap.add_argument("--replicas", type=int, default=2,
                     help="gateway replica count (with --gateway)")
+    ap.add_argument("--pool", default="thread",
+                    choices=["thread", "process"],
+                    help="what backs each gateway replica: in-process "
+                         "worker threads, or spawned worker processes "
+                         "(per-process jit caches, warmup chunk on "
+                         "start, SIGKILL-and-respawn on faults; see "
+                         "docs/SERVING.md)")
     ap.add_argument("--crash-at", type=int, default=None,
                     help="inject a replica-0 crash at this chunk call "
-                         "(with --gateway; restarted after 1s)")
+                         "(with --gateway; restarted after 1s; with "
+                         "--pool=process the crash is a real SIGKILL)")
     args = ap.parse_args()
 
     depths = tuple(int(x) for x in args.n_steps.split(","))
@@ -150,11 +184,11 @@ def main() -> None:
             trace, replicas=args.replicas, crash_at=args.crash_at,
             max_batch=args.max_batch, deadline_ms=args.deadline_ms,
             capacity=args.capacity, backend=args.backend,
-            n_steps=depths[0])
+            n_steps=depths[0], pool_kind=args.pool)
         wall = time.perf_counter() - t0
         assert m["completed"] == len(trace) and m["failed"] == 0
         print(f"{len(trace)} requests through the gateway, "
-              f"{args.replicas} replicas"
+              f"{args.replicas} {args.pool} replicas"
               + (f", crash injected at chunk {args.crash_at}"
                  if args.crash_at is not None else ""))
         print(f"  wall            : {wall:8.2f} s "

@@ -14,9 +14,24 @@ transport:
 
 The unit of work handed to a transport is a :class:`ChunkSpec` — one
 micro-batch of one bucket, padded to a power of two, carrying plain
-arrays so it can cross a thread (or, later, process) boundary — and the
-unit coming back is a :class:`ChunkResult`.  :func:`execute_chunk` is
-the reference executor over ``repro.api.price_flat``; replicas wrap it.
+arrays so it can cross a thread *or process* boundary — and the unit
+coming back is a :class:`ChunkResult`.  :func:`execute_chunk` is the
+reference executor over ``repro.api.price_flat``; replicas wrap it.
+
+Both chunk types additionally define an explicit **wire schema**
+(:meth:`ChunkSpec.to_wire` / :meth:`ChunkSpec.from_wire`, and the same
+pair on :class:`ChunkResult`): a versioned dict of plain
+scalars/strings/tuples (numpy arrays on the result side) that a
+process-backed replica (``serve/procpool.py``) ships over its pipe.
+Nothing device-bound crosses the wire — sharding travels as a
+``devices=`` *count* each worker resolves to its own mesh locally
+(``core/distributed.py::resolve_grid_mesh``), and the
+:class:`~repro.core.partition.ShardPlan` is already plain data.  The
+schema carries ``version`` = :data:`WIRE_VERSION`; decoding rejects a
+*newer* version (the sender knows fields this reader does not) and
+ignores unknown fields (additive evolution: bump the version when a new
+field changes meaning, not when one is merely added).  See
+``docs/SERVING.md`` for the versioning rules.
 
 ``ServiceMetrics`` lives here too and is **thread-safe**: gateway
 flushes complete on replica worker threads concurrently, so every
@@ -37,12 +52,83 @@ from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
-from ..core.partition import _next_pow2
+from ..core.partition import ShardPlan, _next_pow2
 from ..core.platform import resolve_interpret
-from ..scenarios import PAYOFF_FAMILIES, route_engine
+from ..scenarios import PAYOFF_FAMILIES, ShardExecInfo, route_engine
 
 __all__ = ["ServiceMetrics", "SchedulerCore", "ChunkSpec", "ChunkResult",
-           "execute_chunk"]
+           "execute_chunk", "WIRE_VERSION"]
+
+# Wire-schema version for ChunkSpec/ChunkResult dicts.  Policy (see the
+# module docstring and docs/SERVING.md): decoding accepts any version
+# 1..WIRE_VERSION, rejects newer, and silently ignores unknown fields —
+# adding a field is NOT a version bump; changing the meaning or type of
+# an existing field is.
+WIRE_VERSION = 1
+
+
+def _as_tuple(x):
+    """Recursively normalise lists to tuples (wire dicts that crossed a
+    JSON hop come back with lists where the scheduler had tuples)."""
+    if isinstance(x, (list, tuple)):
+        return tuple(_as_tuple(v) for v in x)
+    return x
+
+
+def _check_wire(wire, kind: str, required: tuple) -> None:
+    if not isinstance(wire, dict):
+        raise ValueError(f"{kind} wire must be a dict, got {type(wire)}")
+    v = wire.get("version")
+    if not isinstance(v, int) or isinstance(v, bool) or v < 1:
+        raise ValueError(f"{kind} wire has no valid version field: {v!r}")
+    if v > WIRE_VERSION:
+        raise ValueError(
+            f"{kind} wire version {v} is newer than this process supports "
+            f"({WIRE_VERSION}) — upgrade the worker, not the schema")
+    got = wire.get("kind")
+    if got != kind:
+        raise ValueError(f"expected a {kind!r} wire dict, got {got!r}")
+    missing = [k for k in required if k not in wire]
+    if missing:
+        raise ValueError(f"{kind} wire missing required fields {missing}")
+
+
+def _plan_to_wire(plan) -> Optional[dict]:
+    if plan is None:
+        return None
+    return {"n_shards": int(plan.n_shards), "shards": plan.shards,
+            "work": plan.work, "lanes": int(plan.lanes),
+            "n_rows": int(plan.n_rows)}
+
+
+def _plan_from_wire(w) -> Optional[ShardPlan]:
+    if w is None:
+        return None
+    return ShardPlan(n_shards=int(w["n_shards"]),
+                     shards=_as_tuple(w["shards"]),
+                     work=tuple(float(x) for x in w["work"]),
+                     lanes=int(w["lanes"]), n_rows=int(w["n_rows"]))
+
+
+def _shard_info_to_wire(info) -> Optional[dict]:
+    if info is None:
+        return None
+    return {"plan": _plan_to_wire(info.plan),
+            "mesh_shape": info.mesh_shape, "simulated": bool(info.simulated),
+            "per_shard_pieces": info.per_shard_pieces,
+            "per_shard_rows": info.per_shard_rows,
+            "measured_work": info.measured_work}
+
+
+def _shard_info_from_wire(w) -> Optional[ShardExecInfo]:
+    if w is None:
+        return None
+    return ShardExecInfo(plan=_plan_from_wire(w["plan"]),
+                         mesh_shape=_as_tuple(w["mesh_shape"]),
+                         simulated=bool(w["simulated"]),
+                         per_shard_pieces=_as_tuple(w["per_shard_pieces"]),
+                         per_shard_rows=_as_tuple(w["per_shard_rows"]),
+                         measured_work=_as_tuple(w["measured_work"]))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -159,13 +245,17 @@ class ChunkSpec:
     Carries plain numpy columns (s0, sigma, rate, maturity, cost_rate,
     payoff, strike, strike2 — the :func:`repro.api.price_flat`
     signature) so it can cross a worker boundary without touching the
-    scheduler's queues.  ``mesh``/``shard_plan`` are set by transports
-    that route chunks onto a device mesh.  ``n_assets``/
-    ``exercise_steps``/``n_paths``/``mc_seed`` configure the ``lsmc``
-    engine (harmless defaults for the lattice engines).  ``interpret``
-    is the Pallas execution mode the scheduler resolved for this chunk
-    (``None`` = defer to the executing process's platform policy — what
-    a cross-process replica on different hardware wants).
+    scheduler's queues.  ``devices``/``shard_plan`` are set by
+    transports that route chunks onto a device mesh: ``devices`` is a
+    *count*, not a live mesh object — each executor resolves it to its
+    own mesh locally (``resolve_grid_mesh``), so a chunk pickles cleanly
+    across a process boundary and never pins work to the scheduler's
+    devices.  ``n_assets``/``exercise_steps``/``n_paths``/``mc_seed``
+    configure the ``lsmc`` engine (harmless defaults for the lattice
+    engines).  ``interpret`` is the Pallas execution mode the scheduler
+    resolved for this chunk (``None`` = defer to the executing process's
+    platform policy — what a cross-process replica on different
+    hardware wants).
     """
     bucket: tuple
     requests: List[_Pending]
@@ -175,8 +265,8 @@ class ChunkSpec:
     backend: str
     padded: int
     cols: tuple
-    mesh: Any = None
-    shard_plan: Any = None
+    devices: Optional[int] = None
+    shard_plan: Optional[ShardPlan] = None
     n_assets: int = 1
     exercise_steps: Optional[tuple] = None
     n_paths: int = 4096
@@ -186,6 +276,53 @@ class ChunkSpec:
     @property
     def n(self) -> int:
         return len(self.requests)
+
+    _WIRE_REQUIRED = ("bucket", "requests", "n_steps", "engine", "capacity",
+                      "backend", "padded", "cols")
+
+    def to_wire(self) -> dict:
+        """Encode as the versioned wire dict (plain scalars/strings/
+        tuples only — JSON- and pickle-transportable)."""
+        return {
+            "version": WIRE_VERSION, "kind": "chunk_spec",
+            "bucket": self.bucket,
+            "requests": tuple((p.rid, p.key, p.t_submit)
+                              for p in self.requests),
+            "n_steps": int(self.n_steps), "engine": self.engine,
+            "capacity": int(self.capacity), "backend": self.backend,
+            "padded": int(self.padded),
+            "cols": tuple(tuple(c) for c in self.cols),
+            "devices": None if self.devices is None else int(self.devices),
+            "shard_plan": _plan_to_wire(self.shard_plan),
+            "n_assets": int(self.n_assets),
+            "exercise_steps": self.exercise_steps,
+            "n_paths": int(self.n_paths), "mc_seed": int(self.mc_seed),
+            "interpret": self.interpret,
+        }
+
+    @classmethod
+    def from_wire(cls, wire: dict) -> "ChunkSpec":
+        """Decode a wire dict (any version up to :data:`WIRE_VERSION`;
+        unknown fields are ignored, missing required fields raise)."""
+        _check_wire(wire, "chunk_spec", cls._WIRE_REQUIRED)
+        requests = [_Pending(rid=int(r[0]), key=_as_tuple(r[1]),
+                             t_submit=float(r[2]))
+                    for r in wire["requests"]]
+        devices = wire.get("devices")
+        ex = wire.get("exercise_steps")
+        return cls(
+            bucket=_as_tuple(wire["bucket"]), requests=requests,
+            n_steps=int(wire["n_steps"]), engine=str(wire["engine"]),
+            capacity=int(wire["capacity"]), backend=str(wire["backend"]),
+            padded=int(wire["padded"]),
+            cols=tuple(tuple(c) for c in wire["cols"]),
+            devices=None if devices is None else int(devices),
+            shard_plan=_plan_from_wire(wire.get("shard_plan")),
+            n_assets=int(wire.get("n_assets", 1)),
+            exercise_steps=None if ex is None else _as_tuple(ex),
+            n_paths=int(wire.get("n_paths", 4096)),
+            mc_seed=int(wire.get("mc_seed", 0)),
+            interpret=wire.get("interpret"))
 
 
 @dataclasses.dataclass
@@ -208,11 +345,39 @@ class ChunkResult:
     shard_info: Any = None
     stderr: Optional[np.ndarray] = None
 
+    _WIRE_REQUIRED = ("ask", "bid", "max_pieces", "row_pieces", "seconds")
+
+    def to_wire(self) -> dict:
+        """Encode as the versioned wire dict.  Arrays stay numpy (the
+        pipe pickles them efficiently); everything else is plain."""
+        return {
+            "version": WIRE_VERSION, "kind": "chunk_result",
+            "ask": np.asarray(self.ask), "bid": np.asarray(self.bid),
+            "max_pieces": int(self.max_pieces),
+            "row_pieces": np.asarray(self.row_pieces),
+            "seconds": float(self.seconds),
+            "shard_info": _shard_info_to_wire(self.shard_info),
+            "stderr": (None if self.stderr is None
+                       else np.asarray(self.stderr)),
+        }
+
+    @classmethod
+    def from_wire(cls, wire: dict) -> "ChunkResult":
+        _check_wire(wire, "chunk_result", cls._WIRE_REQUIRED)
+        se = wire.get("stderr")
+        return cls(ask=np.asarray(wire["ask"]), bid=np.asarray(wire["bid"]),
+                   max_pieces=int(wire["max_pieces"]),
+                   row_pieces=np.asarray(wire["row_pieces"]),
+                   seconds=float(wire["seconds"]),
+                   shard_info=_shard_info_from_wire(wire.get("shard_info")),
+                   stderr=None if se is None else np.asarray(se))
+
 
 def execute_chunk(chunk: ChunkSpec) -> ChunkResult:
     """Price one chunk through ``repro.api.price_flat`` (the reference
     executor — replicas and the in-process service both route here)."""
     from ..api import price_flat
+    from ..configs.pricing import ExecutionConfig
     cols = chunk.cols
     t0 = time.perf_counter()
     res = price_flat(
@@ -221,11 +386,13 @@ def execute_chunk(chunk: ChunkSpec) -> ChunkResult:
         cost_rate=np.asarray(cols[4]), payoff=tuple(cols[5]),
         strike=np.asarray(cols[6]), strike2=np.asarray(cols[7]),
         n_steps=chunk.n_steps, n_assets=chunk.n_assets,
-        exercise_steps=chunk.exercise_steps, engine=chunk.engine,
-        capacity=chunk.capacity, backend=chunk.backend,
-        interpret=chunk.interpret,
-        n_paths=chunk.n_paths, seed=chunk.mc_seed,
-        pad_to=chunk.padded, mesh=chunk.mesh, shard_plan=chunk.shard_plan)
+        exercise_steps=chunk.exercise_steps,
+        execution=ExecutionConfig(
+            engine=chunk.engine, backend=chunk.backend,
+            interpret=chunk.interpret, devices=chunk.devices,
+            n_paths=chunk.n_paths, mc_seed=chunk.mc_seed),
+        capacity=chunk.capacity,
+        pad_to=chunk.padded, shard_plan=chunk.shard_plan)
     seconds = time.perf_counter() - t0
     rp = res.row_pieces
     rp = (np.zeros(chunk.padded, dtype=int) if rp is None

@@ -79,6 +79,9 @@ class GridRequest:
     interpret: Any = None    # Pallas mode; None = platform policy
     n_assets: int = 1        # > 1 routes the grid to the lsmc engine
     exercise_steps: Any = None   # Bermudan schedule -> lsmc engine
+    # consolidated execution knobs (repro.configs.pricing.ExecutionConfig);
+    # fields set here win over backend/interpret above
+    execution: Any = None
 
 
 class PricingEngine:

@@ -59,7 +59,9 @@ from typing import Callable, Dict, List, Optional, Set
 
 import numpy as np
 
+from ..configs.pricing import ExecutionConfig
 from .core import ChunkSpec, SchedulerCore, ServiceMetrics
+from .procpool import ReplicaPool, warmup_chunk
 from .replica import LocalReplica, ReplicaCrash
 
 __all__ = ["PricingGateway", "GatewayMetrics", "GatewayError",
@@ -152,6 +154,11 @@ class _Slot:
         self.healthy = False
         self.dead_reason = reason
         self.sticky.clear()
+        # a process-backed replica holds a real worker: SIGKILL it first,
+        # which also unblocks the executor thread waiting on its pipe
+        close = getattr(self.replica, "close", None)
+        if close is not None:
+            close()
         # a hung worker thread cannot be interrupted; abandon the
         # executor (its thread unwinds when the replica call returns)
         self.executor.shutdown(wait=False, cancel_futures=True)
@@ -167,30 +174,52 @@ class PricingGateway:
                                                rate=0.1, maturity=0.25))
             quote = await gw.result(rid)
 
-    ``replicas`` is a count (spawning :class:`LocalReplica` workers via
-    ``replica_factory``) or an explicit list of replica objects (the
-    fault harness passes :class:`~repro.serve.replica.FaultyReplica`).
+    ``replicas`` is a count (spawning workers via ``replica_factory``)
+    or an explicit list of replica objects (the fault harness passes
+    :class:`~repro.serve.replica.FaultyReplica`).  ``pool`` selects what
+    a spawned replica *is*: ``"thread"`` (default) keeps the in-process
+    :class:`LocalReplica` workers; ``"process"`` backs every slot with a
+    real spawned process (``serve/procpool.py::ProcessReplica``) —
+    per-process jit caches, warmup chunk on start, SIGKILL-and-respawn
+    on hang — behind the *same* failover machinery.  Pass a
+    :class:`~repro.serve.procpool.ReplicaPool` instance for custom
+    warmup/deadline settings; an explicit ``replica_factory`` wins over
+    ``pool``.  ``execution`` consolidates the engine-selection knobs
+    (fields set on it override ``backend``/``interpret``/``n_paths``/
+    ``mc_seed``).
     """
 
     def __init__(self, *, replicas=2, max_batch: int = 64,
                  deadline_ms: float = 5.0, capacity: int = 48,
-                 backend: str = "jnp", default_n_steps: int = 100,
+                 backend: str = "jnp", interpret: Optional[bool] = None,
+                 default_n_steps: int = 100,
                  default_payoff: str = "put", default_strike: float = 100.0,
                  result_cache_size: int = 1024, max_results: int = 65536,
                  replica_timeout_s: float = 300.0, max_retries: int = 3,
                  retry_backoff_s: float = 0.05,
                  restart_s: Optional[float] = None,
                  replica_factory: Optional[Callable[[int], object]] = None,
+                 pool="thread", n_paths: int = 4096, mc_seed: int = 0,
+                 execution: Optional[ExecutionConfig] = None,
                  overload_factor: Optional[float] = 8.0,
                  overload_grace_s: float = 0.25, shed_factor: float = 4.0,
                  min_batch: int = 1,
                  clock: Callable[[], float] = time.monotonic,
                  sleeper=None):
+        if execution is not None:
+            s = execution.set_fields()
+            backend = execution.backend if "backend" in s else backend
+            interpret = (execution.interpret if "interpret" in s
+                         else interpret)
+            n_paths = execution.n_paths if "n_paths" in s else n_paths
+            mc_seed = execution.mc_seed if "mc_seed" in s else mc_seed
         self.core = SchedulerCore(
             max_batch=max_batch, deadline_ms=deadline_ms, capacity=capacity,
-            backend=backend, default_n_steps=default_n_steps,
+            backend=backend, interpret=interpret,
+            default_n_steps=default_n_steps,
             default_payoff=default_payoff, default_strike=default_strike,
             result_cache_size=result_cache_size, max_results=max_results,
+            n_paths=n_paths, mc_seed=mc_seed,
             clock=clock, metrics=GatewayMetrics())
         self.max_batch = int(max_batch)
         self.effective_max_batch = int(max_batch)
@@ -202,8 +231,28 @@ class PricingGateway:
         self.overload_factor = overload_factor
         self.overload_grace_s = float(overload_grace_s)
         self.shed_factor = float(shed_factor)
-        self._factory = (replica_factory if replica_factory is not None
-                         else (lambda i: LocalReplica(name=f"replica-{i}")))
+        if replica_factory is not None:
+            self._factory = replica_factory
+        else:
+            if isinstance(pool, ReplicaPool):
+                rp = pool
+            elif pool == "process":
+                # per-process warmup pre-compiles the pool's default
+                # bucket; the per-call deadline mirrors the gateway's
+                # hang timeout so a wedged engine call is SIGKILLed
+                rp = ReplicaPool(
+                    "process",
+                    warmup=warmup_chunk(n_steps=default_n_steps,
+                                        backend=backend, capacity=capacity,
+                                        interpret=interpret),
+                    call_timeout_s=replica_timeout_s)
+            elif pool == "thread":
+                rp = ReplicaPool("thread")
+            else:
+                raise ValueError(
+                    f"pool must be 'thread', 'process' or a ReplicaPool, "
+                    f"got {pool!r}")
+            self._factory = rp.factory
         if isinstance(replicas, int):
             self._initial = [self._factory(i) for i in range(replicas)]
         else:
@@ -257,6 +306,9 @@ class PricingGateway:
             if not fut.done():
                 fut.cancel()
         for slot in self._slots:
+            close = getattr(slot.replica, "close", None)
+            if close is not None:
+                close()
             slot.executor.shutdown(wait=False, cancel_futures=True)
 
     async def drain(self) -> None:

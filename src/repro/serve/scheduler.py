@@ -65,6 +65,7 @@ from typing import Callable, Dict, Optional
 
 import numpy as np
 
+from ..configs.pricing import ExecutionConfig
 from ..core.partition import _next_pow2
 from .core import SchedulerCore, ServiceMetrics, execute_chunk
 
@@ -84,7 +85,18 @@ class PricingService:
                  n_paths: int = 4096, mc_seed: int = 0,
                  devices: Optional[int] = None, mesh=None,
                  rebalance_ema: float = 0.5,
+                 execution: Optional[ExecutionConfig] = None,
                  clock: Callable[[], float] = time.monotonic):
+        # execution= is the consolidated knob surface: any field set on it
+        # overrides the corresponding individual kwarg
+        if execution is not None:
+            s = execution.set_fields()
+            backend = execution.backend if "backend" in s else backend
+            interpret = (execution.interpret if "interpret" in s
+                         else interpret)
+            n_paths = execution.n_paths if "n_paths" in s else n_paths
+            mc_seed = execution.mc_seed if "mc_seed" in s else mc_seed
+            devices = execution.devices if "devices" in s else devices
         self.core = SchedulerCore(
             max_batch=max_batch, deadline_ms=deadline_ms, capacity=capacity,
             backend=backend, interpret=interpret,
@@ -268,15 +280,26 @@ class PricingService:
             return None
         return self._rebalancer.speed(bucket, self._n_shards)
 
+    def _prepare_chunk(self, chunk, bucket: tuple) -> None:
+        """Attach the service's sharding to a drained chunk.
+
+        ``devices`` is a plain *count* (the wire-schema spec — whoever
+        executes the chunk resolves its own 1-D mesh locally, see
+        ``serve/core.py``), never the service's live mesh object, so the
+        chunk pickles cleanly and a process-pool worker is free to build
+        the mesh over *its* devices.
+        """
+        chunk.devices = self._n_shards if self._n_shards > 1 else None
+        chunk.shard_plan = self._shard_plan(
+            bucket, chunk.cols[4], chunk.n_steps, chunk.padded)
+
     def _flush_bucket(self, bucket: tuple) -> Dict[int, "PriceQuote"]:
         done: Dict[int, "PriceQuote"] = {}
         while True:
             chunk = self.core.take_chunk(bucket, self.max_batch)
             if chunk is None:
                 break
-            chunk.mesh = self._mesh
-            chunk.shard_plan = self._shard_plan(
-                bucket, chunk.cols[4], chunk.n_steps, chunk.padded)
+            self._prepare_chunk(chunk, bucket)
             t0 = self._clock()
             try:
                 res = execute_chunk(chunk)
@@ -370,6 +393,20 @@ class PricingService:
         engine = route_engine(any_tc=bool(np.any(grid.cost_rate > 0.0)),
                               n_assets=grid.n_assets,
                               exercise_steps=grid.exercise_steps)
+        # a GridRequest may carry its own ExecutionConfig; fields set on
+        # it win over the request's individual knobs and the service's
+        # defaults (engine="auto" still routes by contract shape)
+        ex = getattr(req, "execution", None)
+        exs = ex.set_fields() if ex is not None else ()
+        if "engine" in exs and ex.engine != "auto":
+            engine = ex.engine
+        backend = ex.backend if "backend" in exs else req.backend
+        interpret = (ex.interpret if "interpret" in exs
+                     else (self.core.interpret
+                           if getattr(req, "interpret", None) is None
+                           else req.interpret))
+        n_paths = ex.n_paths if "n_paths" in exs else self.core.n_paths
+        mc_seed = ex.mc_seed if "mc_seed" in exs else self.core.mc_seed
         # grids rebalance under their own stream key: plan through the
         # rebalancer (greeks bump the batch 5x — the plan must cover the
         # bumped rows) so measured-seconds feedback actually steers the
@@ -385,23 +422,22 @@ class PricingService:
                 engine=engine, n_assets=grid.n_assets,
                 exercise_steps=grid.exercise_steps)
         t0 = self._clock()
-        res = price_grid(grid.pad_to(bucket), engine=engine,
+        cfg = ExecutionConfig(
+            engine=engine, backend=backend, interpret=interpret,
+            n_paths=n_paths, mc_seed=mc_seed,
+            basis=ex.basis if "basis" in exs else None,
+            degree=ex.degree if "degree" in exs else None,
+            antithetic=ex.antithetic if "antithetic" in exs else None)
+        res = price_grid(grid.pad_to(bucket), execution=cfg,
                          capacity=self.capacity, greeks=req.greeks,
-                         backend=req.backend,
-                         interpret=(self.core.interpret
-                                    if getattr(req, "interpret", None) is None
-                                    else req.interpret),
-                         n_paths=self.core.n_paths,
-                         seed=self.core.mc_seed, mesh=self._mesh,
-                         shard_plan=plan)
+                         mesh=self._mesh, shard_plan=plan)
         elapsed = self._clock() - t0
         self.metrics_.bump(engine_seconds=elapsed, grids=1,
                            grid_scenarios=n)
         self._observe_flush(gkey, res, elapsed)
         info = res.shard_info
         self._compile_key_seen(bucket, grid.n_steps, engine, req.greeks,
-                               backend=req.backend,
-                               interpret=getattr(req, "interpret", None),
+                               backend=backend, interpret=interpret,
                                shard=(info.plan.n_shards, info.plan.lanes)
                                if info else None,
                                extra=((self.core.n_paths, grid.n_assets,

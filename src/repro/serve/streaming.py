@@ -211,6 +211,7 @@ class StreamingBook:
         if pricer is None:
             from ..api import price_flat
             pricer = price_flat
+        from ..configs.pricing import ExecutionConfig
         idx = np.asarray(idx, dtype=int)
         buckets: dict = {}
         for i in idx:
@@ -226,7 +227,8 @@ class StreamingBook:
                 payoff=tuple(self.payoff[rows]),
                 strike=self.strike[rows], strike2=self.strike2[rows],
                 n_steps=n_steps, capacity=self.capacity,
-                backend=self.backend, pad_to=_next_pow2(len(rows)))
+                execution=ExecutionConfig(backend=self.backend),
+                pad_to=_next_pow2(len(rows)))
             n = len(rows)
             self.ask[rows] = np.asarray(res.ask).ravel()[:n]
             self.bid[rows] = np.asarray(res.bid).ravel()[:n]

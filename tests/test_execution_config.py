@@ -1,0 +1,149 @@
+"""The consolidated execution surface: ExecutionConfig + the shim.
+
+PRs 1-8 accreted execution kwargs (engine/backend/platform/interpret/
+devices/n_paths/seed/basis/degree/antithetic) onto ``price_grid``/
+``price_flat``/``GridRequest``/``PricingService``; this PR consolidates
+them into one frozen :class:`repro.configs.pricing.ExecutionConfig`.
+Covered here:
+
+* ``resolved()`` fills every ``None`` through the platform policy of
+  ``core/platform.py`` (interpret/float64 on CPU) and is idempotent;
+* ``execution=`` produces bitwise-identical prices to the legacy
+  kwargs, for both lattice engines and lsmc;
+* the deprecation shim warns exactly once per process, and passing
+  both surfaces at once is a hard ``TypeError``;
+* the serving layer honours it end to end: ``PricingService``/
+  ``PricingGateway`` constructor overrides, ``GridRequest.execution``,
+  and ``PricingConfig.execution()``.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro.api import ExecutionConfig, price_grid
+from repro.configs.pricing import PAPER_PUT
+from repro.core import platform as plat
+from repro.serve.engine import GridRequest
+from repro.serve.scheduler import PricingService
+
+N_STEPS = 8
+
+
+@pytest.fixture(autouse=True)
+def _fresh_warning_state():
+    api._reset_legacy_exec_warning()
+    yield
+    api._reset_legacy_exec_warning()
+
+
+def _grid_kw():
+    return dict(s0=(95.0, 100.0, 105.0), cost_rate=(0.0, 0.01),
+                n_steps=N_STEPS, capacity=16)
+
+
+# ---------------------------------------------------------------------- #
+# the dataclass itself
+# ---------------------------------------------------------------------- #
+def test_resolved_fills_defaults_from_platform_policy():
+    cfg = ExecutionConfig().resolved()
+    p = plat.active_platform()
+    assert cfg.platform == p
+    assert cfg.interpret == plat.resolve_interpret(None, p)
+    assert cfg.engine == "auto" and cfg.backend == "jnp"
+    assert cfg.n_paths == 4096 and cfg.mc_seed == 0
+    assert cfg.basis == "poly" and cfg.degree == 3
+    assert cfg.antithetic is True
+    # idempotent: resolving a resolved config changes nothing
+    assert cfg.resolved() == cfg
+
+
+def test_set_fields_and_frozen_hashable():
+    cfg = ExecutionConfig(backend="pallas", n_paths=512)
+    assert cfg.set_fields() == ("backend", "n_paths")
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.backend = "jnp"
+    assert hash(cfg) == hash(ExecutionConfig(backend="pallas", n_paths=512))
+
+
+def test_pricing_config_execution_is_resolved():
+    cfg = PAPER_PUT.execution()
+    assert cfg.platform is not None and cfg.interpret is not None
+    assert cfg.resolved() == cfg
+
+
+# ---------------------------------------------------------------------- #
+# api surface: execution= vs the legacy kwargs
+# ---------------------------------------------------------------------- #
+def test_execution_matches_legacy_kwargs_bitwise():
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = price_grid(engine="auto", backend="jnp", **_grid_kw())
+    new = price_grid(execution=ExecutionConfig(engine="auto",
+                                               backend="jnp"),
+                     **_grid_kw())
+    np.testing.assert_array_equal(np.asarray(legacy.ask),
+                                  np.asarray(new.ask))
+    np.testing.assert_array_equal(np.asarray(legacy.bid),
+                                  np.asarray(new.bid))
+    assert legacy.max_pieces == new.max_pieces
+
+
+def test_execution_matches_legacy_kwargs_lsmc():
+    kw = dict(s0=(95.0, 100.0), n_steps=N_STEPS, n_assets=2, capacity=16)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = price_grid(n_paths=256, seed=3, **kw)
+    new = price_grid(execution=ExecutionConfig(n_paths=256, mc_seed=3),
+                     **kw)
+    np.testing.assert_array_equal(np.asarray(legacy.ask),
+                                  np.asarray(new.ask))
+
+
+def test_legacy_kwargs_warn_exactly_once_per_process():
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        price_grid(backend="jnp", **_grid_kw())
+        price_grid(backend="jnp", **_grid_kw())
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert "ExecutionConfig" in str(dep[0].message)
+    assert "backend" in str(dep[0].message)
+
+
+def test_both_surfaces_at_once_is_a_type_error():
+    with pytest.raises(TypeError, match="both execution="):
+        price_grid(execution=ExecutionConfig(), backend="jnp",
+                   **_grid_kw())
+
+
+# ---------------------------------------------------------------------- #
+# serving layer
+# ---------------------------------------------------------------------- #
+def test_pricing_service_constructor_override():
+    svc = PricingService(execution=ExecutionConfig(backend="jnp",
+                                                   n_paths=512, mc_seed=9),
+                         default_n_steps=N_STEPS, capacity=16)
+    assert svc.backend == "jnp"
+    assert svc.core.n_paths == 512 and svc.core.mc_seed == 9
+
+
+def test_gateway_constructor_override():
+    from repro.serve.gateway import PricingGateway
+    gw = PricingGateway(execution=ExecutionConfig(n_paths=128, mc_seed=4),
+                        default_n_steps=N_STEPS, capacity=16)
+    assert gw.core.n_paths == 128 and gw.core.mc_seed == 4
+
+
+def test_grid_request_execution_field_wins():
+    svc = PricingService(default_n_steps=N_STEPS, capacity=16,
+                         min_grid_bucket=4)
+    base = svc.price_grid(GridRequest(s0=(95.0, 100.0), n_steps=N_STEPS,
+                                      backend="jnp"))
+    via_cfg = svc.price_grid(GridRequest(
+        s0=(95.0, 100.0), n_steps=N_STEPS, backend="pallas",
+        execution=ExecutionConfig(backend="jnp")))
+    np.testing.assert_array_equal(np.asarray(base.ask),
+                                  np.asarray(via_cfg.ask))

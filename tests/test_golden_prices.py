@@ -40,12 +40,13 @@ def _grid():
 
 
 def _compute() -> dict:
-    from repro.api import price_grid
+    from repro.api import ExecutionConfig, price_grid
     grid = _grid()
     out = {"n_scenarios": int(grid.n_scenarios),
            "n_steps": int(grid.n_steps), "capacity": 16, "engines": {}}
     for backend in BACKENDS:
-        res = price_grid(grid, capacity=16, backend=backend)
+        res = price_grid(grid, capacity=16,
+                         execution=ExecutionConfig(backend=backend))
         out["engines"][backend] = {
             "engine": res.engine,
             "ask": np.asarray(res.ask).ravel().tolist(),

@@ -1,0 +1,301 @@
+"""Real-process fault suite for the process-backed replica pool.
+
+Mirrors ``test_gateway_faults.py`` with the faults made *real*: the
+replica is a spawned worker process (``serve/procpool.py``), a crash is
+a mid-chunk ``kill -9`` the worker inflicts on itself, a hang is a
+worker that stops answering its pipe, and death is detected by pipe EOF
+or the process sentinel — not by an injected Python exception.  The
+contract under test is unchanged: zero dropped requests, every delivered
+quote at 1e-9 vs ``price_american`` (including ``max_pieces``), and the
+gateway's failover metrics telling the true story.
+
+Marked ``procpool`` (its own CI lane) and skipped where the ``spawn``
+start method is unavailable.  Each test spawns 1-2 real workers; the
+warmup chunk each worker prices on start keeps per-test wall time to a
+few seconds of jax import + one tiny compile.
+"""
+import asyncio
+import multiprocessing
+import os
+
+import pytest
+
+from repro.api import price_american
+from repro.serve.core import ChunkSpec, _Pending
+from repro.serve.engine import PriceRequest
+from repro.serve.gateway import PricingGateway
+from repro.serve.procpool import ProcessReplica, ReplicaPool, warmup_chunk
+from repro.serve.replica import ReplicaCrash
+
+
+def _spawn_available() -> bool:
+    try:
+        multiprocessing.get_context("spawn")
+        return True
+    except ValueError:
+        return False
+
+
+pytestmark = [
+    pytest.mark.procpool,
+    pytest.mark.skipif(not _spawn_available(),
+                       reason="multiprocessing spawn context unavailable"),
+]
+
+TOL = 1e-9
+N_STEPS = 8
+CAPACITY = 16
+WARMUP = None   # built lazily: warmup_chunk imports nothing heavy, but
+                # sharing one wire dict across tests keeps them honest
+                # about warmup being plain data
+
+
+def _warmup() -> dict:
+    global WARMUP
+    if WARMUP is None:
+        WARMUP = warmup_chunk(n_steps=N_STEPS, capacity=CAPACITY)
+    return WARMUP
+
+
+def _req(s0=100.0, cost_rate=0.0, **kw):
+    kw.setdefault("n_steps", N_STEPS)
+    return PriceRequest(s0=s0, sigma=0.2, rate=0.1, maturity=0.25,
+                        cost_rate=cost_rate, **kw)
+
+
+def _mixed_requests():
+    return [
+        _req(s0=95.0, payoff="put", strike=100.0),
+        _req(s0=105.0, payoff="bull_spread", strike=95.0),
+        _req(s0=100.0, payoff="call", strike=95.0),
+        _req(s0=98.0, payoff="put", strike=100.0, cost_rate=0.01),
+        _req(s0=102.0, payoff="call", strike=95.0, cost_rate=0.005),
+        _req(s0=100.0, payoff="put", strike=105.0, cost_rate=0.01),
+    ]
+
+
+def _key(req):
+    return (req.s0, req.sigma, req.rate, req.maturity, req.cost_rate,
+            req.payoff or "put",
+            req.strike if req.strike is not None else 100.0, req.n_steps)
+
+
+def _oracle_refs(reqs):
+    """{scenario key: (ask, bid, max_pieces)} oracle references.
+
+    Frictionless scenarios go through the independent single-contract
+    ``price_american`` (ms each).  TC scenarios batch into ONE
+    ``price_flat`` call: the single-contract rz path recompiles per
+    *distinct* scenario (~10 s each on this CPU — ~50 distinct would be
+    the whole test budget), while payoff-as-data batching pays one
+    compile, and ``row_pieces[i]`` is exactly the single-contract
+    ``max_pieces`` (rows are independent vmap lanes; batch-vs-single
+    parity itself is pinned by the 108-grid oracle suite and the
+    thread-pool fault tests)."""
+    from repro.api import price_flat
+    refs = {}
+    tc_keys = sorted({_key(r) for r in reqs if r.cost_rate > 0})
+    if tc_keys:
+        assert len({k[7] for k in tc_keys}) == 1    # one depth per call
+        cols = list(zip(*tc_keys))
+        res = price_flat(s0=cols[0], sigma=cols[1], rate=cols[2],
+                         maturity=cols[3], cost_rate=cols[4],
+                         payoff=cols[5], strike=cols[6],
+                         n_steps=tc_keys[0][7], capacity=CAPACITY)
+        for i, k in enumerate(tc_keys):
+            refs[k] = (float(res.ask[i]), float(res.bid[i]),
+                       int(res.row_pieces[i]))
+    for k in {_key(r) for r in reqs if r.cost_rate == 0}:
+        ref = price_american(s0=k[0], sigma=k[1], rate=k[2], maturity=k[3],
+                             cost_rate=k[4], payoff=k[5], strike=k[6],
+                             n_steps=k[7], capacity=CAPACITY)
+        refs[k] = (ref.ask, ref.bid, ref.max_pieces)
+    return refs
+
+
+def _assert_oracle_batch(reqs, quotes):
+    refs = _oracle_refs(reqs)
+    for req, quote in zip(reqs, quotes):
+        ask, bid, pieces = refs[_key(req)]
+        assert abs(quote.ask - ask) < TOL
+        assert abs(quote.bid - bid) < TOL
+        assert quote.max_pieces == pieces
+
+
+def _one_row_chunk(s0=95.0):
+    key = (s0, 0.2, 0.1, 0.25, 0.0, "put", 100.0, 110.0, N_STEPS, 1, None)
+    return ChunkSpec(
+        bucket=(N_STEPS, "notc"), requests=[_Pending(0, key, 0.0)],
+        n_steps=N_STEPS, engine="notc", capacity=CAPACITY, backend="jnp",
+        padded=1,
+        cols=((s0,), (0.2,), (0.1,), (0.25,), (0.0,), ("put",),
+              (100.0,), (110.0,)))
+
+
+async def _submit_await_all(gw, reqs):
+    rids = [await gw.submit(r) for r in reqs]
+    return [await gw.result(rid) for rid in rids]
+
+
+# ---------------------------------------------------------------------- #
+# the replica alone
+# ---------------------------------------------------------------------- #
+def test_process_replica_prices_in_another_process_at_oracle():
+    """The baseline: a chunk priced in a *different* pid matches the
+    in-process oracle to 1e-9 (spawn + wire schema change nothing)."""
+    rep = ProcessReplica("p0", warmup=_warmup())
+    try:
+        assert rep.pid is not None and rep.pid != os.getpid()
+        res = rep.price_chunk(_one_row_chunk(s0=95.0))
+        assert rep.warmup_seconds > 0.0      # warmup really priced
+        ref = price_american(s0=95.0, sigma=0.2, rate=0.1, maturity=0.25,
+                             n_steps=N_STEPS, capacity=CAPACITY)
+        assert abs(res.ask[0] - ref.ask) < TOL
+        assert abs(res.bid[0] - ref.bid) < TOL
+        assert rep.alive
+    finally:
+        rep.close()
+    assert not rep.alive
+
+
+def test_hung_worker_is_sigkilled_by_the_call_deadline():
+    """A worker that stops answering is killed with SIGKILL (exitcode
+    -9) once the per-call deadline lapses, and the crash says so."""
+    rep = ProcessReplica("hangy", warmup=_warmup(), faults={0: "hang"},
+                         call_timeout_s=1.0)
+    try:
+        with pytest.raises(ReplicaCrash, match="SIGKILL"):
+            rep.price_chunk(_one_row_chunk())
+        assert rep._proc.exitcode == -9
+        # dead stays dead: the pool factory, not this object, respawns
+        with pytest.raises(ReplicaCrash, match="dead"):
+            rep.price_chunk(_one_row_chunk())
+    finally:
+        rep.close()
+
+
+def test_worker_that_never_acks_the_warmup_is_killed():
+    rep = ProcessReplica("mute", warmup=_warmup(), hang_warmup=True,
+                         warmup_timeout_s=1.0)
+    try:
+        with pytest.raises(ReplicaCrash, match="warmup"):
+            rep.price_chunk(_one_row_chunk())
+        assert rep._proc.exitcode == -9
+    finally:
+        rep.close()
+
+
+def test_pipe_eof_on_result_read_is_a_crash():
+    rep = ProcessReplica("eof", warmup=_warmup(), faults={0: "exit"})
+    try:
+        with pytest.raises(ReplicaCrash, match="EOF|exited"):
+            rep.price_chunk(_one_row_chunk())
+    finally:
+        rep.close()
+
+
+# ---------------------------------------------------------------------- #
+# behind the gateway: the failover machinery on real processes
+# ---------------------------------------------------------------------- #
+def test_sigkill_mid_chunk_fails_over_zero_dropped():
+    """The headline: replica-0's worker is SIGKILLed *while pricing*;
+    the chunk requeues to the surviving process and 100% of quotes
+    arrive at 1e-9 — the thread-pool contract, now against kill -9."""
+    wu = _warmup()
+
+    def factory(i):
+        return ProcessReplica(f"proc-{i}", warmup=wu,
+                              faults={0: "sigkill"} if i == 0 else None)
+
+    async def main():
+        async with PricingGateway(
+                replicas=[factory(0), factory(1)], max_batch=4,
+                deadline_ms=2.0, capacity=CAPACITY,
+                default_n_steps=N_STEPS, retry_backoff_s=0.01,
+                result_cache_size=0) as gw:
+            reqs = _mixed_requests()
+            quotes = await _submit_await_all(gw, reqs)
+            return reqs, quotes, gw.metrics(), gw.replica_states()
+
+    reqs, quotes, m, states = asyncio.run(main())
+    _assert_oracle_batch(reqs, quotes)
+    assert m["completed"] == m["requests"] == len(reqs)
+    assert m["failed"] == 0
+    assert m["replica_crashes"] == 1
+    assert m["requeues"] >= 1
+    assert m["healthy_replicas"] == 1
+    dead = [s for s in states if not s["healthy"]]
+    assert [s["dead_reason"] for s in dead] == ["crashed"]
+
+
+def test_pipe_eof_behind_gateway_fails_over():
+    wu = _warmup()
+    replicas = [ProcessReplica("proc-0", warmup=wu, faults={0: "exit"}),
+                ProcessReplica("proc-1", warmup=wu)]
+
+    async def main():
+        async with PricingGateway(
+                replicas=replicas, max_batch=4, deadline_ms=2.0,
+                capacity=CAPACITY, default_n_steps=N_STEPS,
+                retry_backoff_s=0.01, result_cache_size=0) as gw:
+            reqs = _mixed_requests()[:3]     # one frictionless bucket
+            quotes = await _submit_await_all(gw, reqs)
+            return reqs, quotes, gw.metrics()
+
+    reqs, quotes, m = asyncio.run(main())
+    _assert_oracle_batch(reqs, quotes)
+    assert m["failed"] == 0 and m["completed"] == len(reqs)
+    assert m["replica_crashes"] == 1
+
+
+def test_restart_respawns_a_fresh_process():
+    """restart_s + the pool factory: the SIGKILLed worker is replaced by
+    a brand-new process (fresh pid) that prices the waiting chunk."""
+    wu = _warmup()
+    pool = ReplicaPool("process", warmup=wu)
+    first = ProcessReplica("replica-0", warmup=wu, faults={0: "sigkill"})
+    first_pid = first.pid
+
+    async def main():
+        async with PricingGateway(
+                replicas=[first], max_batch=4, deadline_ms=2.0,
+                capacity=CAPACITY, default_n_steps=N_STEPS,
+                retry_backoff_s=0.01, restart_s=0.05,
+                replica_factory=pool.factory,
+                result_cache_size=0) as gw:
+            reqs = [_req(s0=96.0), _req(s0=104.0, payoff="call",
+                                        strike=95.0)]
+            quotes = await _submit_await_all(gw, reqs)
+            pids = [getattr(s.replica, "pid", None) for s in gw._slots]
+            return reqs, quotes, gw.metrics(), pids
+
+    reqs, quotes, m, pids = asyncio.run(main())
+    _assert_oracle_batch(reqs, quotes)
+    assert m["replica_crashes"] == 1
+    assert m["replica_restarts"] == 1
+    assert m["failed"] == 0
+    assert pids[0] is not None and pids[0] != first_pid
+
+
+@pytest.mark.slow
+def test_thousand_request_trace_survives_sigkill_mid_flight():
+    """The acceptance criterion: 2 process replicas replay the
+    1k-request mixed trace while replica-0's worker takes a real
+    mid-chunk SIGKILL — zero dropped requests, every quote at 1e-9."""
+    from repro.launch.serve_pricing import drive_gateway, synth_trace
+    trace = synth_trace(1000, n_steps=(N_STEPS,), tc_fraction=0.05, seed=7)
+    # deadline_ms is generous on purpose: the replay submits the whole
+    # trace at once, so a tight deadline flushes early partial buckets
+    # at every pow-2 size and each fresh worker pays a compile per
+    # shape.  100 ms lets buckets fill to max_batch first — one shape
+    # per engine per worker, which is what a warm deployment looks like
+    # (deadline *timing* is pinned by test_gateway_deadline.py).
+    quotes, m = drive_gateway(
+        trace, replicas=2, crash_at=2, max_batch=64, deadline_ms=100.0,
+        capacity=CAPACITY, backend="jnp", n_steps=N_STEPS,
+        restart_s=0.5, pool_kind="process")
+    assert m["completed"] == m["requests"] == len(trace)
+    assert m["failed"] == 0
+    assert m["replica_crashes"] == 1
+    by_rid = [quotes[rid] for rid in sorted(quotes)]
+    _assert_oracle_batch(trace, by_rid)

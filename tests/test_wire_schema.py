@@ -1,0 +1,192 @@
+"""Wire-schema round trips for the chunk protocol.
+
+The process-backed replica pool (``serve/procpool.py``) ships every
+chunk across a pipe, so ``ChunkSpec``/``ChunkResult`` carry a versioned
+wire form (``to_wire``/``from_wire``) of plain scalars, tuples and numpy
+arrays — no live mesh objects, no callables.  This suite asserts:
+
+* ``to_wire -> from_wire`` is the identity for every chunk shape the
+  scheduler can emit — all three engines (notc / rz / lsmc), TC and
+  frictionless batches, streaming row-updates, sharded ``devices=8``
+  chunks (the old ``ChunkSpec.mesh`` field held a live mesh and could
+  not cross a pickle boundary — the regression this file pins down);
+* the wire dict survives ``pickle`` (the pipe's codec) and — for
+  ``ChunkSpec`` — strict JSON, so the schema is transport-agnostic;
+* the version policy: newer versions are rejected, unknown fields are
+  ignored (additive evolution), missing required fields raise.
+"""
+import json
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.serve.core import (WIRE_VERSION, ChunkResult, ChunkSpec,
+                              execute_chunk)
+from repro.serve.engine import PriceRequest
+from repro.serve.scheduler import PricingService
+from repro.serve.streaming import StreamingBook, Tick
+
+# the wire schema is the process pool's transport contract, so this
+# suite rides in the procpool CI lane (no processes are spawned here —
+# the round-trips are pure data)
+pytestmark = pytest.mark.procpool
+
+N_STEPS = 8
+CAPACITY = 16
+
+
+def _service(**kw):
+    kw.setdefault("max_batch", 64)
+    kw.setdefault("capacity", CAPACITY)
+    kw.setdefault("default_n_steps", N_STEPS)
+    kw.setdefault("n_paths", 256)
+    return PricingService(**kw)
+
+
+def _req(s0=100.0, cost_rate=0.0, **kw):
+    kw.setdefault("n_steps", N_STEPS)
+    return PriceRequest(s0=s0, sigma=0.2, rate=0.1, maturity=0.25,
+                        cost_rate=cost_rate, **kw)
+
+
+def _drain_chunks(svc, reqs):
+    """Submit ``reqs`` and drain every prepared chunk the scheduler
+    would dispatch (exactly what a transport hands to a replica)."""
+    for r in reqs:
+        svc.submit(r)
+    chunks = []
+    for bucket in list(svc.core.buckets):
+        while True:
+            chunk = svc.core.take_chunk(bucket, svc.max_batch)
+            if chunk is None:
+                break
+            svc._prepare_chunk(chunk, bucket)
+            chunks.append(chunk)
+    return chunks
+
+
+def _scheduler_chunks():
+    """One chunk per engine shape the scheduler can emit."""
+    svc = _service()
+    out = {}
+    out["notc"] = _drain_chunks(svc, [
+        _req(95.0, payoff="put", strike=100.0),
+        _req(105.0, payoff="bull_spread", strike=95.0, strike2=105.0)])[0]
+    out["rz"] = _drain_chunks(svc, [
+        _req(98.0, cost_rate=0.01),
+        _req(102.0, cost_rate=0.005, payoff="call", strike=95.0)])[0]
+    out["lsmc"] = _drain_chunks(svc, [
+        _req(100.0, n_assets=2),
+        _req(97.0, n_assets=2, payoff="call", strike=95.0)])[0]
+    out["lsmc_bermudan"] = _drain_chunks(svc, [
+        _req(100.0, exercise_steps=(2, 4, N_STEPS))])[0]
+    return out
+
+
+def _assert_roundtrip(chunk):
+    wire = chunk.to_wire()
+    assert wire["version"] == WIRE_VERSION
+    assert wire["kind"] == "chunk_spec"
+    assert ChunkSpec.from_wire(wire) == chunk
+    # the pipe's codec
+    assert ChunkSpec.from_wire(pickle.loads(pickle.dumps(wire))) == chunk
+    # strict JSON (tuples decay to lists; from_wire re-normalises)
+    assert ChunkSpec.from_wire(json.loads(json.dumps(wire))) == chunk
+
+
+@pytest.mark.parametrize("shape", ["notc", "rz", "lsmc", "lsmc_bermudan"])
+def test_chunk_spec_roundtrip_every_engine_shape(shape):
+    _assert_roundtrip(_scheduler_chunks()[shape])
+
+
+def test_chunk_spec_pickles_whole_not_just_wire():
+    """The bugfix regression: the dataclass itself (not only its wire
+    form) must pickle — the old live-mesh field broke this."""
+    for chunk in _scheduler_chunks().values():
+        clone = pickle.loads(pickle.dumps(chunk))
+        assert clone == chunk
+
+
+def test_streaming_row_update_chunks_roundtrip():
+    """Chunks born from streaming incremental requotes round-trip too
+    (they reuse the ordinary request path, but pin it anyway)."""
+    svc = _service()
+    book = StreamingBook.mixed(n_underlyings=2, per_underlying=4,
+                               n_steps=(N_STEPS,), capacity=CAPACITY)
+    book.full_reprice()
+    idx = book.apply(Tick(0, "s0", 104.0))
+    chunks = _drain_chunks(svc, list(book.to_requests(idx)))
+    assert chunks
+    for chunk in chunks:
+        _assert_roundtrip(chunk)
+
+
+def test_sharded_chunk_carries_device_count_not_mesh():
+    """A sharded service attaches ``devices`` (a plain int) plus the
+    (pure-data) shard plan — both cross pickle and JSON untouched."""
+    svc = _service(devices=8)
+    chunk = _drain_chunks(svc, [_req(90.0 + i, cost_rate=0.005)
+                                for i in range(4)])[0]
+    assert chunk.devices == 8
+    assert chunk.shard_plan is not None
+    assert chunk.shard_plan.n_shards == 8
+    _assert_roundtrip(chunk)
+    wire = json.loads(json.dumps(chunk.to_wire()))
+    assert wire["devices"] == 8          # a count, never a mesh object
+
+
+@pytest.mark.parametrize("shape", ["notc", "rz", "lsmc"])
+def test_chunk_result_roundtrip_every_engine(shape):
+    chunk = _scheduler_chunks()[shape]
+    res = execute_chunk(chunk)
+    wire = res.to_wire()
+    assert wire["version"] == WIRE_VERSION and wire["kind"] == "chunk_result"
+    clone = ChunkResult.from_wire(pickle.loads(pickle.dumps(wire)))
+    np.testing.assert_array_equal(clone.ask, res.ask)
+    np.testing.assert_array_equal(clone.bid, res.bid)
+    np.testing.assert_array_equal(clone.row_pieces, res.row_pieces)
+    assert clone.max_pieces == res.max_pieces
+    assert clone.seconds == res.seconds
+    if res.stderr is not None:
+        np.testing.assert_array_equal(clone.stderr, res.stderr)
+    if res.shard_info is not None:
+        assert clone.shard_info.plan == res.shard_info.plan
+
+
+# ---------------------------------------------------------------------- #
+# version / unknown-field policy
+# ---------------------------------------------------------------------- #
+def test_newer_version_is_rejected():
+    wire = _scheduler_chunks()["notc"].to_wire()
+    wire["version"] = WIRE_VERSION + 1
+    with pytest.raises(ValueError, match="newer"):
+        ChunkSpec.from_wire(wire)
+
+
+def test_unknown_fields_are_ignored():
+    """Additive evolution: an older process reads a wire dict with extra
+    fields without complaint (adding a field is not a version bump)."""
+    chunk = _scheduler_chunks()["rz"]
+    wire = chunk.to_wire()
+    wire["frobnication_level"] = 11
+    assert ChunkSpec.from_wire(wire) == chunk
+
+
+def test_missing_required_field_raises():
+    wire = _scheduler_chunks()["notc"].to_wire()
+    del wire["cols"]
+    with pytest.raises(ValueError, match="cols"):
+        ChunkSpec.from_wire(wire)
+
+
+def test_wrong_kind_and_bad_version_raise():
+    wire = _scheduler_chunks()["notc"].to_wire()
+    with pytest.raises(ValueError, match="chunk_result"):
+        ChunkResult.from_wire(wire)
+    wire["version"] = 0
+    with pytest.raises(ValueError):
+        ChunkSpec.from_wire(wire)
+    wire["version"] = True               # bool is not a version
+    with pytest.raises(ValueError):
+        ChunkSpec.from_wire(wire)

@@ -66,8 +66,9 @@ _BENCHES = {
         "config": ("requests", "max_batch", "n_steps", "capacity",
                    "crash_at", "restart_s", "seed", "ticks", "device"),
         "throughput": ("one_replica.quotes_per_sec",
-                       "two_replica.quotes_per_sec"),
-        "ratios": ("two_over_one",),
+                       "two_replica.quotes_per_sec",
+                       "process_pool.quotes_per_sec"),
+        "ratios": ("two_over_one", "process_over_thread"),
     },
     "pwl_envelope_ops": {
         "config": ("lanes", "capacity", "repeats", "device"),
