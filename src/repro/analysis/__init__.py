@@ -1,0 +1,53 @@
+"""Repo-wide invariant analyzers.
+
+Four checkers guard the invariants that past PRs broke (or nearly
+broke) and that ordinary unit tests are bad at holding:
+
+* ``source-scan``   — kernel-contract coverage, ``interpret=True``
+  hard-codes outside the platform layer, sort-primitive bans in
+  hot-path modules (one AST engine behind the lowering-contract tests).
+* ``concurrency``   — blocking calls inside ``async def`` bodies in
+  the serving stack, plus a lock-order graph that fails on cycles.
+* ``guarded-by``    — declared shared-mutable attributes must only be
+  written under their declared lock (or stay owner-confined); has a
+  runtime shadow mode (``repro.analysis.shadow``).
+* ``compile-key``   — every ``ChunkSpec``/``ExecutionConfig`` field
+  that can change a traced jaxpr or bucket identity must be folded
+  into the scheduler's compile/bucket keys (the PR 7 bug class),
+  checked by differential probes.
+* ``wire-schema``   — every wire-dataclass field must be covered by
+  ``to_wire``/``from_wire`` and be JSON-safe or codec'd (the PR 9
+  ``mesh`` bug class), plus a round-trip probe.
+
+Run them all via ``tools/analyze.py``; waive individual findings in
+``tools/analysis_waivers.toml`` (a written reason is mandatory).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+from . import compile_key, concurrency, guarded, source_scan, wire
+from .engine import (Finding, Waiver, apply_waivers, load_waivers,
+                     REPO_ROOT)
+
+__all__ = ["CHECKERS", "run_all", "Finding", "Waiver", "apply_waivers",
+           "load_waivers", "REPO_ROOT"]
+
+#: checker name -> zero-arg callable returning its findings on the
+#: real tree.  Order is the report order.
+CHECKERS: Dict[str, Callable[[], List[Finding]]] = {
+    source_scan.CHECKER: source_scan.check_repo,
+    concurrency.CHECKER: concurrency.check_repo,
+    guarded.CHECKER: guarded.check_repo,
+    compile_key.CHECKER: compile_key.check_repo,
+    wire.CHECKER: wire.check_repo,
+}
+
+
+def run_all(checkers=None) -> List[Finding]:
+    """Run the named checkers (default: all) over the repository."""
+    names = list(CHECKERS) if checkers is None else list(checkers)
+    findings: List[Finding] = []
+    for name in names:
+        findings.extend(CHECKERS[name]())
+    return findings

@@ -1,0 +1,295 @@
+"""Compile-key / bucket-key completeness auditor (the PR 7 bug class).
+
+A field is **program** when changing it changes the traced jaxpr, the
+padded shapes, or which compiled executable runs — those fields MUST be
+folded into :meth:`SchedulerCore.chunk_compile_key` (and, where they
+decide queue identity, into :meth:`SchedulerCore.bucket_key`).  A field
+is **data** when it only changes array *values* inside one compiled
+program.  Every field of :class:`ChunkSpec` and
+:class:`~repro.configs.pricing.ExecutionConfig` must be classified here
+— an unclassified field fails the audit, so adding a knob without
+deciding its key-ness is impossible.
+
+Three passes:
+
+* **role audit** (static) — the registries below must match
+  ``dataclasses.fields`` exactly in both directions, and every
+  ``ExecutionConfig`` program field must have a ``ChunkSpec``
+  counterpart (an execution knob the chunk cannot carry is silently
+  dropped at the serving boundary — the basis/degree/antithetic bug).
+* **key probes** (functional) — for every program field, a baseline
+  chunk and a single-field variant must produce *distinct* compile
+  keys through ``key_fn`` (injectable; the negative-control tests pass
+  a key function with the field deliberately dropped and must see the
+  finding).
+* **bucket probes** (functional) — scenario pairs that must live in
+  different buckets (American vs Bermudan frictionless — exactly PR 7's
+  collision — TC vs no-TC, different depths/MC shapes) and pairs that
+  must coalesce (strike/payoff are data).  ``bucket_fn`` is injectable
+  the same way; ``tests/test_analysis.py`` reverts the PR 7 fix
+  in-test and shows the auditor catches it.
+
+The differential side — "keys must differ whenever the jaxprs differ"
+— is the ``analysis``-marked fuzz test in ``tests/test_analysis.py``,
+which traces the lsmc row program under each static variation and
+asserts jaxpr inequality implies key inequality.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+from .engine import Finding, REPO_ROOT, parse_module
+
+CHECKER = "compile-key"
+
+#: ChunkSpec field -> role.  "program": changes the compiled program or
+#: bucket identity → must be in the compile key.  "data": array values
+#: only.  "derived": computed from other fields (bucket = f(n_steps,
+#: engine, n_assets, exercise_steps) — audited via the bucket probes).
+CHUNK_FIELD_ROLES: Dict[str, str] = {
+    "n_steps": "program",        # tree depth is shape-static
+    "engine": "program",         # notc/rz/lsmc are different programs
+    "capacity": "program",       # PWL knot budget is a shape parameter
+    "backend": "program",        # jnp vs pallas lowering
+    "padded": "program",         # batch shape
+    "devices": "program",        # mesh width changes the partitioning
+    "shard_plan": "program",     # (n_shards, lanes) shape the program
+    "n_assets": "program",       # lsmc path-state width
+    "exercise_steps": "program",  # Bermudan schedule is static control flow
+    "n_paths": "program",        # lsmc path-count shape
+    "interpret": "program",      # interpret vs compiled executables
+    "basis": "program",          # lsmc regression design matrix shape/op
+    "degree": "program",         # ... and its column count
+    "antithetic": "program",     # pairing halves the driver shape
+    "requests": "data",          # which contracts ride along
+    "cols": "data",              # scenario columns are payoff-as-data
+    "mc_seed": "data",           # PRNG key values, same program
+    "bucket": "derived",
+}
+
+#: ExecutionConfig field -> role.  "local-policy" fields resolve on the
+#: executing host and must NOT cross the wire (platform identity is the
+#: worker's business — a chunk pinned to the scheduler's platform would
+#: break heterogeneous pools).
+EXECUTION_FIELD_ROLES: Dict[str, str] = {
+    "engine": "program",
+    "backend": "program",
+    "interpret": "program",
+    "devices": "program",
+    "n_paths": "program",
+    "basis": "program",
+    "degree": "program",
+    "antithetic": "program",
+    "mc_seed": "data",
+    "platform": "local-policy",
+}
+
+
+def _field_lines(path, class_name: str) -> Dict[str, int]:
+    tree = parse_module(path)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == class_name:
+            out = {}
+            for item in node.body:
+                if (isinstance(item, ast.AnnAssign)
+                        and isinstance(item.target, ast.Name)):
+                    out[item.target.id] = item.lineno
+            return out
+    return {}
+
+
+def _core_path():
+    return REPO_ROOT / "src" / "repro" / "serve" / "core.py"
+
+
+def _pricing_path():
+    return REPO_ROOT / "src" / "repro" / "configs" / "pricing.py"
+
+
+def check_field_roles() -> List[Finding]:
+    """Registries vs ``dataclasses.fields`` in both directions, and the
+    ExecutionConfig→ChunkSpec carry-through."""
+    from repro.configs.pricing import ExecutionConfig
+    from repro.serve.core import ChunkSpec
+    findings: List[Finding] = []
+    for cls, roles, path in ((ChunkSpec, CHUNK_FIELD_ROLES, _core_path()),
+                             (ExecutionConfig, EXECUTION_FIELD_ROLES,
+                              _pricing_path())):
+        lines = _field_lines(path, cls.__name__)
+        actual = {f.name for f in dataclasses.fields(cls)}
+        for name in sorted(actual - set(roles)):
+            findings.append(Finding(
+                checker=CHECKER, rule="unclassified-field",
+                file=str(path.relative_to(REPO_ROOT).as_posix()),
+                line=lines.get(name, 1),
+                symbol=f"{cls.__name__}.{name}",
+                message=f"{cls.__name__}.{name} has no program/data role "
+                        "in repro.analysis.compile_key — decide whether it "
+                        "changes the compiled program and register it"))
+        for name in sorted(set(roles) - actual):
+            findings.append(Finding(
+                checker=CHECKER, rule="stale-role",
+                file="src/repro/analysis/compile_key.py", line=1,
+                symbol=f"{cls.__name__}.{name}",
+                message=f"role registry names {cls.__name__}.{name} but the "
+                        "dataclass has no such field"))
+    chunk_fields = {f.name for f in dataclasses.fields(ChunkSpec)}
+    exec_lines = _field_lines(_pricing_path(), "ExecutionConfig")
+    for name, role in sorted(EXECUTION_FIELD_ROLES.items()):
+        if role == "program" and name != "engine" and name not in chunk_fields:
+            findings.append(Finding(
+                checker=CHECKER, rule="missing-chunk-field",
+                file=str(_pricing_path().relative_to(REPO_ROOT).as_posix()),
+                line=exec_lines.get(name, 1),
+                symbol=f"ExecutionConfig.{name}",
+                message=f"program-role execution knob '{name}' has no "
+                        "ChunkSpec field — the serving layer drops it at "
+                        "the chunk boundary"))
+    return findings
+
+
+# --------------------------------------------------------------------- #
+# functional probes
+# --------------------------------------------------------------------- #
+def _baseline_chunks():
+    from repro.core.partition import ShardPlan
+    from repro.serve.core import ChunkSpec
+    lattice = ChunkSpec(
+        bucket=(8, "rz"), requests=[], n_steps=8, engine="rz",
+        capacity=16, backend="jnp", padded=4,
+        cols=((100.0,), (0.2,), (0.1,), (0.25,), (0.01,), ("put",),
+              (100.0,), (110.0,)),
+        interpret=True)
+    lsmc = ChunkSpec(
+        bucket=(8, "lsmc", 2, (4, 8)), requests=[], n_steps=8,
+        engine="lsmc", capacity=16, backend="jnp", padded=4,
+        cols=((100.0,), (0.2,), (0.1,), (0.25,), (0.0,), ("put",),
+              (100.0,), (110.0,)),
+        n_assets=2, exercise_steps=(4, 8), n_paths=512, mc_seed=0,
+        interpret=True)
+    plan = ShardPlan(n_shards=2, shards=((0, 2), (2, 4)),
+                     work=(1.0, 1.0), lanes=2, n_rows=4)
+    #: program field -> (baseline chunk, variant value)
+    variants = {
+        "n_steps": (lattice, 10),
+        "engine": (lattice, "notc"),
+        "capacity": (lattice, 32),
+        "backend": (lattice, "pallas"),
+        "padded": (lattice, 8),
+        "devices": (lattice, 2),
+        "shard_plan": (lattice, plan),
+        "interpret": (lattice, False),
+        "n_assets": (lsmc, 3),
+        "exercise_steps": (lsmc, (2, 4, 8)),
+        "n_paths": (lsmc, 1024),
+        "basis": (lsmc, "laguerre"),
+        "degree": (lsmc, 4),
+        "antithetic": (lsmc, False),
+    }
+    return variants
+
+
+def check_key_probes(key_fn: Optional[Callable] = None) -> List[Finding]:
+    """Every program-role ChunkSpec field must perturb the compile key.
+
+    ``key_fn(chunk) -> hashable`` defaults to the scheduler's real
+    :meth:`SchedulerCore.chunk_compile_key`; negative-control tests
+    inject a key function with a field dropped."""
+    from repro.serve.core import SchedulerCore
+    if key_fn is None:
+        key_fn = SchedulerCore.chunk_compile_key
+    lines = _field_lines(_core_path(), "ChunkSpec")
+    rel = str(_core_path().relative_to(REPO_ROOT).as_posix())
+    findings: List[Finding] = []
+    for field, (base, variant) in sorted(_baseline_chunks().items()):
+        if CHUNK_FIELD_ROLES.get(field) != "program":
+            continue
+        changed = dataclasses.replace(base, **{field: variant})
+        if key_fn(base) == key_fn(changed):
+            findings.append(Finding(
+                checker=CHECKER, rule="key-omits-field",
+                file=rel, line=lines.get(field, 1),
+                symbol=f"ChunkSpec.{field}",
+                message=f"program field '{field}' does not perturb the "
+                        f"compile key ({field}={getattr(base, field)!r} vs "
+                        f"{variant!r} keyed identically) — two different "
+                        "compiled programs would share one key"))
+    return findings
+
+
+def _scenario(s0=100.0, sigma=0.2, rate=0.1, maturity=0.25,
+              cost_rate=0.0, payoff="put", strike=100.0, strike2=110.0,
+              n_steps=8, n_assets=1, ex=None) -> tuple:
+    return (s0, sigma, rate, maturity, cost_rate, payoff, strike,
+            strike2, n_steps, n_assets, ex)
+
+
+#: (label, key_a, key_b) pairs that MUST bucket differently — the first
+#: is PR 7's collision: a frictionless Bermudan must not coalesce into
+#: the frictionless-American notc bucket (different engines, different
+#: programs, and the Bermudan's schedule is static control flow).
+DISTINCT_BUCKET_PAIRS = (
+    ("american-vs-bermudan-frictionless",
+     _scenario(cost_rate=0.0, ex=None),
+     _scenario(cost_rate=0.0, ex=(4, 8))),
+    ("tc-vs-no-tc",
+     _scenario(cost_rate=0.0), _scenario(cost_rate=0.01)),
+    ("tree-depth",
+     _scenario(n_steps=8), _scenario(n_steps=16)),
+    ("lsmc-n-assets",
+     _scenario(n_assets=1, ex=(4, 8)), _scenario(n_assets=2, ex=(4, 8))),
+    ("lsmc-schedule",
+     _scenario(ex=(4, 8)), _scenario(ex=(2, 4, 8))),
+)
+
+#: Pairs that MUST coalesce (payoff family and strike are data).
+COALESCE_BUCKET_PAIRS = (
+    ("strike-is-data",
+     _scenario(strike=100.0), _scenario(strike=95.0)),
+    ("payoff-is-data",
+     _scenario(payoff="put"), _scenario(payoff="call")),
+)
+
+
+def check_bucket_probes(bucket_fn: Optional[Callable] = None
+                        ) -> List[Finding]:
+    """Scenario pairs route to the right buckets.  ``bucket_fn(key) ->
+    bucket`` defaults to the scheduler's real :meth:`bucket_key`."""
+    from repro.serve.core import SchedulerCore
+    if bucket_fn is None:
+        bucket_fn = SchedulerCore.bucket_key
+    rel = str(_core_path().relative_to(REPO_ROOT).as_posix())
+    line = _bucket_key_line()
+    findings: List[Finding] = []
+    for label, a, b in DISTINCT_BUCKET_PAIRS:
+        if bucket_fn(a) == bucket_fn(b):
+            findings.append(Finding(
+                checker=CHECKER, rule="bucket-collision",
+                file=rel, line=line, symbol="SchedulerCore.bucket_key",
+                message=f"scenarios that need different compiled programs "
+                        f"share bucket {bucket_fn(a)!r} ({label})"))
+    for label, a, b in COALESCE_BUCKET_PAIRS:
+        if bucket_fn(a) != bucket_fn(b):
+            findings.append(Finding(
+                checker=CHECKER, rule="bucket-split",
+                file=rel, line=line, symbol="SchedulerCore.bucket_key",
+                message=f"data-only scenario difference splits buckets "
+                        f"({label}: {bucket_fn(a)!r} vs {bucket_fn(b)!r}) "
+                        "— coalescing regression"))
+    return findings
+
+
+def _bucket_key_line() -> int:
+    tree = parse_module(_core_path())
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.FunctionDef)
+                and node.name == "bucket_key"):
+            return node.lineno
+    return 1
+
+
+def check_repo() -> List[Finding]:
+    return (check_field_roles() + check_key_probes()
+            + check_bucket_probes())

@@ -1,0 +1,476 @@
+"""Concurrency lint over the serving stack.
+
+Two passes, both pure AST (no imports of the checked code):
+
+**blocking-in-async** — inside every ``async def`` body in ``serve/``,
+flag calls that block the event loop: ``time.sleep``, synchronous
+``Connection.recv``/``poll``, ``Lock.acquire``/``with self._lock``,
+``subprocess`` waits, thread ``join``, executor ``shutdown(wait=True)``
+and direct engine execution (``execute_chunk``/``price_chunk``/
+``price_flat``/``price_grid``/``price_american`` — a jit dispatch is a
+long synchronous call).  A call is exempt when it is ``await``-ed or
+appears inside the arguments of an async wrapper
+(``run_in_executor``, ``to_thread``, ``create_task``, ``gather``,
+``wait_for``, …): routing the blocking work off the loop is exactly the
+sanctioned pattern.
+
+**lock-cycle** — extract every ``with self.<lock>`` region (plus
+helpers annotated ``# locked: <lock>`` on their ``def`` line or named
+``*_locked``, which are treated as running under that lock), resolve
+``self.x()`` / ``super().x()`` / typed-attribute calls
+(``self.metrics_.bump(...)`` → ``ServiceMetrics.bump``) transitively,
+and build the *acquires-while-holding* graph whose nodes are
+``(owning class, lock attr)`` — inherited locks unify to the base class
+that creates them, so ``GatewayMetrics._lock`` *is*
+``ServiceMetrics._lock``.  Any cycle (including a self-edge: these are
+non-reentrant ``threading.Lock``s) is a potential deadlock and fails.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+
+from .engine import Finding, REPO_ROOT, SymbolMap, parse_module, rel_path
+
+CHECKER = "concurrency"
+
+#: ``module.attr`` calls that block the calling thread.
+BLOCKING_MODULE_CALLS = {
+    ("time", "sleep"),
+    ("subprocess", "run"), ("subprocess", "call"),
+    ("subprocess", "check_call"), ("subprocess", "check_output"),
+    ("os", "waitpid"), ("os", "wait"),
+}
+
+#: Method tails that block on the objects serve/ passes around
+#: (multiprocessing.Connection, threading.Lock/Thread/Process).
+BLOCKING_METHOD_NAMES = {"acquire", "recv", "poll", "join"}
+
+#: Direct engine execution — a jit dispatch is a long synchronous call.
+ENGINE_CALL_NAMES = {"execute_chunk", "price_chunk", "price_flat",
+                     "price_grid", "price_american"}
+
+#: Wrappers whose call arguments are the sanctioned off-loop route.
+ASYNC_WRAPPERS = {"run_in_executor", "to_thread", "create_task",
+                  "ensure_future", "gather", "wait", "wait_for", "shield"}
+
+_LOCK_FACTORY = {"Lock", "RLock", "Condition"}
+_LOCKED_COMMENT = re.compile(r"#\s*locked:\s*(\w+)")
+
+
+def _tail(fn) -> Optional[str]:
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return None
+
+
+def _dotted(fn) -> Optional[Tuple[str, str]]:
+    """``mod.attr`` for a ``Name.attr`` callee, else None."""
+    if (isinstance(fn, ast.Attribute) and isinstance(fn.value, ast.Name)):
+        return (fn.value.id, fn.attr)
+    return None
+
+
+def _self_attr(expr) -> Optional[str]:
+    """``self.<attr>`` → attr name."""
+    if (isinstance(expr, ast.Attribute) and isinstance(expr.value, ast.Name)
+            and expr.value.id == "self"):
+        return expr.attr
+    return None
+
+
+def _blocking_reason(call: ast.Call) -> Optional[str]:
+    fn = call.func
+    dotted = _dotted(fn)
+    if dotted in BLOCKING_MODULE_CALLS:
+        return f"blocking call {dotted[0]}.{dotted[1]}()"
+    tail = _tail(fn)
+    if tail in BLOCKING_METHOD_NAMES and isinstance(fn, ast.Attribute):
+        return f"blocking .{tail}() (sync Connection/Lock/Thread API)"
+    if tail in ENGINE_CALL_NAMES:
+        return f"engine execution {tail}() (jit dispatch blocks the loop)"
+    if tail == "shutdown" and isinstance(fn, ast.Attribute):
+        for kw in call.keywords:
+            if (kw.arg == "wait" and isinstance(kw.value, ast.Constant)
+                    and kw.value.value is False):
+                return None
+        return "executor .shutdown() without wait=False joins worker threads"
+    return None
+
+
+def _exempt_calls(async_fn: ast.AsyncFunctionDef) -> Set[int]:
+    """ids of Call nodes that are awaited or ride inside the arguments
+    of an async wrapper call (the executor route)."""
+    exempt: Set[int] = set()
+    for node in ast.walk(async_fn):
+        if isinstance(node, ast.Await):
+            for sub in ast.walk(node.value):
+                if isinstance(sub, ast.Call):
+                    exempt.add(id(sub))
+        if (isinstance(node, ast.Call)
+                and _tail(node.func) in ASYNC_WRAPPERS):
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                for sub in ast.walk(arg):
+                    if isinstance(sub, ast.Call):
+                        exempt.add(id(sub))
+    return exempt
+
+
+def _lock_like(attr: str, known_locks: Set[str]) -> bool:
+    return attr in known_locks or attr.endswith("_lock") or attr == "_lock"
+
+
+def check_blocking_in_async(path, tree=None,
+                            known_locks: Optional[Set[str]] = None,
+                            ) -> List[Finding]:
+    tree = tree if tree is not None else parse_module(path)
+    symbols = SymbolMap(tree)
+    known_locks = known_locks or set()
+    findings = []
+    for fn in [n for n in ast.walk(tree)
+               if isinstance(n, ast.AsyncFunctionDef)]:
+        exempt = _exempt_calls(fn)
+        # nested sync defs are deferred bodies (executor / callback
+        # targets), not code the event loop runs inline — skip them
+        nested = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.FunctionDef):
+                for sub in ast.walk(node):
+                    nested.add(id(sub))
+        for node in ast.walk(fn):
+            if id(node) in nested:
+                continue
+            if isinstance(node, ast.Call) and id(node) not in exempt:
+                reason = _blocking_reason(node)
+                if reason:
+                    findings.append(Finding(
+                        checker=CHECKER, rule="blocking-in-async",
+                        file=rel_path(path), line=node.lineno,
+                        symbol=symbols.at(node.lineno),
+                        message=f"{reason} inside async def {fn.name}; "
+                                "route through run_in_executor/to_thread"))
+            if isinstance(node, ast.With):
+                for item in node.items:
+                    attr = _self_attr(item.context_expr)
+                    if attr and _lock_like(attr, known_locks):
+                        findings.append(Finding(
+                            checker=CHECKER, rule="blocking-in-async",
+                            file=rel_path(path), line=node.lineno,
+                            symbol=symbols.at(node.lineno),
+                            message=f"'with self.{attr}' (threading lock) "
+                                    f"inside async def {fn.name} can stall "
+                                    "the event loop"))
+    return findings
+
+
+# --------------------------------------------------------------------- #
+# lock-order extraction
+# --------------------------------------------------------------------- #
+class _ClassInfo:
+    def __init__(self, node: ast.ClassDef, file: str):
+        self.node = node
+        self.file = file
+        self.name = node.name
+        self.bases = [b.id for b in node.bases if isinstance(b, ast.Name)]
+        self.lock_attrs: Set[str] = set()
+        self.methods: Dict[str, ast.AST] = {}
+        #: method name -> lock attr it is documented to run under
+        self.locked_helpers: Dict[str, str] = {}
+
+
+def _collect_classes(paths, sources) -> Dict[str, _ClassInfo]:
+    classes: Dict[str, _ClassInfo] = {}
+    for path, (tree, text) in zip(paths, sources):
+        lines = text.splitlines()
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            info = _ClassInfo(node, rel_path(path))
+            for item in node.body:
+                if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    info.methods[item.name] = item
+                    defline = lines[item.lineno - 1]
+                    m = _LOCKED_COMMENT.search(defline)
+                    if m:
+                        info.locked_helpers[item.name] = m.group(1)
+                    elif item.name.endswith("_locked"):
+                        info.locked_helpers[item.name] = "_lock"
+                # GUARDED_BY = {"attr": "_lock", ...} class registry
+                if (isinstance(item, ast.Assign)
+                        and any(isinstance(t, ast.Name)
+                                and t.id == "GUARDED_BY"
+                                for t in item.targets)
+                        and isinstance(item.value, ast.Dict)):
+                    for v in item.value.values:
+                        if (isinstance(v, ast.Constant)
+                                and isinstance(v.value, str)
+                                and v.value != "owner"):
+                            info.lock_attrs.add(v.value)
+            # any `self.X = threading.Lock()`-style assignment
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Assign) and isinstance(
+                        sub.value, ast.Call):
+                    tail = _tail(sub.value.func)
+                    if tail in _LOCK_FACTORY:
+                        for t in sub.targets:
+                            attr = _self_attr(t)
+                            if attr:
+                                info.lock_attrs.add(attr)
+            classes[node.name] = classes.get(node.name, info)
+    return classes
+
+
+def _lock_owner(classes: Dict[str, _ClassInfo], cls: str,
+                attr: str) -> str:
+    """Basemost analyzed class that creates ``attr`` — inherited locks
+    unify to their defining class."""
+    info = classes.get(cls)
+    if info is None:
+        return cls
+    for base in info.bases:
+        if base in classes:
+            owner = _lock_owner(classes, base, attr)
+            if owner in classes and attr in classes[owner].lock_attrs:
+                return owner
+    return cls
+
+
+def _all_lock_attrs(classes: Dict[str, _ClassInfo], cls: str) -> Set[str]:
+    out: Set[str] = set()
+    info = classes.get(cls)
+    if info is None:
+        return out
+    out |= info.lock_attrs
+    for base in info.bases:
+        out |= _all_lock_attrs(classes, base)
+    return out
+
+
+def _resolve_callee(classes, cls: str, call: ast.Call,
+                    attr_types: Dict[str, str]) -> Optional[Tuple[str, str]]:
+    """(class, method) for self./super()./typed-attribute calls."""
+    fn = call.func
+    if not isinstance(fn, ast.Attribute):
+        return None
+    base = fn.value
+    # self.m()
+    if isinstance(base, ast.Name) and base.id == "self":
+        target = cls
+        while target in classes:
+            if fn.attr in classes[target].methods:
+                return (target, fn.attr)
+            bases = classes[target].bases
+            target = bases[0] if bases and bases[0] in classes else None
+            if target is None:
+                break
+        return None
+    # super().m()
+    if (isinstance(base, ast.Call) and _tail(base.func) == "super"):
+        info = classes.get(cls)
+        if info:
+            for b in info.bases:
+                target = b
+                while target in classes:
+                    if fn.attr in classes[target].methods:
+                        return (target, fn.attr)
+                    bs = classes[target].bases
+                    target = bs[0] if bs and bs[0] in classes else None
+        return None
+    # self.<typed attr>.m()
+    attr = _self_attr(base)
+    if attr and attr in attr_types and attr_types[attr] in classes:
+        target = attr_types[attr]
+        while target in classes:
+            if fn.attr in classes[target].methods:
+                return (target, fn.attr)
+            bs = classes[target].bases
+            target = bs[0] if bs and bs[0] in classes else None
+        return None
+    return None
+
+
+def _infer_attr_types(classes: Dict[str, _ClassInfo]) -> Dict[str, str]:
+    """``self.x = KnownClass(...)`` assignments → {attr: class}."""
+    out: Dict[str, str] = {}
+    for info in classes.values():
+        for sub in ast.walk(info.node):
+            if (isinstance(sub, ast.Assign)
+                    and isinstance(sub.value, ast.Call)):
+                tail = _tail(sub.value.func)
+                if tail in classes:
+                    for t in sub.targets:
+                        attr = _self_attr(t)
+                        if attr:
+                            out[attr] = tail
+    return out
+
+
+LockNode = Tuple[str, str]       # (owning class, lock attr)
+
+
+def build_lock_graph(paths) -> Tuple[Dict[LockNode, Set[LockNode]],
+                                     Dict[Tuple[LockNode, LockNode],
+                                          Tuple[str, int, str]]]:
+    """Acquires-while-holding graph over the given files, plus one
+    witness ``(file, line, symbol)`` per edge."""
+    sources = [(parse_module(p), pathlib.Path(p).read_text())
+               for p in paths]
+    classes = _collect_classes(paths, sources)
+    attr_types = _infer_attr_types(classes)
+
+    # (class, method) -> [(held locks at call, callee key, line)]
+    held_calls: Dict[Tuple[str, str],
+                     List[Tuple[FrozenSet[LockNode], Tuple[str, str], int]]] = {}
+    # (class, method) -> [(held locks, acquired lock, line)]
+    held_acquires: Dict[Tuple[str, str],
+                        List[Tuple[FrozenSet[LockNode], LockNode, int]]] = {}
+
+    def _walk_with_only(cls, mname, body, held):
+        """Only With statements change the held set below the top level
+        — find them (calls were already collected by ast.walk)."""
+        key = (cls, mname)
+        for node in body:
+            if isinstance(node, ast.With):
+                new_held = set(held)
+                for item in node.items:
+                    attr = _self_attr(item.context_expr)
+                    if attr and attr in _all_lock_attrs(classes, cls):
+                        lock = (_lock_owner(classes, cls, attr), attr)
+                        held_acquires.setdefault(key, []).append(
+                            (frozenset(held), lock, node.lineno))
+                        new_held.add(lock)
+                # re-collect the calls under the *extended* held set
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Call):
+                        callee = _resolve_callee(classes, cls, sub,
+                                                 attr_types)
+                        if callee:
+                            held_calls.setdefault(key, []).append(
+                                (frozenset(new_held), callee, sub.lineno))
+                _walk_with_only(cls, mname, node.body, frozenset(new_held))
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            else:
+                for field in ("body", "orelse", "finalbody"):
+                    sub_body = getattr(node, field, None)
+                    if sub_body:
+                        _walk_with_only(cls, mname, sub_body, held)
+                for h in getattr(node, "handlers", []) or []:
+                    _walk_with_only(cls, mname, h.body, held)
+
+    for cname, info in classes.items():
+        for mname, mnode in info.methods.items():
+            base_held: Set[LockNode] = set()
+            if mname in info.locked_helpers:
+                lattr = info.locked_helpers[mname]
+                base_held.add((_lock_owner(classes, cname, lattr), lattr))
+            held0 = frozenset(base_held)
+            key = (cname, mname)
+            held_calls.setdefault(key, [])
+            held_acquires.setdefault(key, [])
+            # top-level sweep: collect every call at held0, then refine
+            # the ones under With blocks
+            for sub in ast.walk(mnode):
+                if isinstance(sub, ast.Call):
+                    callee = _resolve_callee(classes, cname, sub, attr_types)
+                    if callee:
+                        held_calls[key].append((held0, callee, sub.lineno))
+            _walk_with_only(cname, mname, mnode.body, held0)
+
+    # pass 2: fixpoint — locks each method may acquire (direct + callees)
+    acquires: Dict[Tuple[str, str], Set[LockNode]] = {
+        k: {lock for (_h, lock, _l) in v}
+        for k, v in held_acquires.items()}
+    changed = True
+    while changed:
+        changed = False
+        for key, clist in held_calls.items():
+            for (_held, callee, _line) in clist:
+                extra = acquires.get(callee, set()) - acquires.setdefault(
+                    key, set())
+                if extra:
+                    acquires[key] |= extra
+                    changed = True
+
+    # pass 3: edges lockA -> lockB with a witness site
+    graph: Dict[LockNode, Set[LockNode]] = {}
+    witness: Dict[Tuple[LockNode, LockNode], Tuple[str, int, str]] = {}
+
+    def add_edge(a: LockNode, b: LockNode, cls: str, mname: str, line: int):
+        graph.setdefault(a, set()).add(b)
+        graph.setdefault(b, set())
+        file = classes[cls].file if cls in classes else "?"
+        witness.setdefault((a, b), (file, line, f"{cls}.{mname}"))
+
+    for (cls, mname), alist in held_acquires.items():
+        for (held, lock, line) in alist:
+            for h in held:
+                add_edge(h, lock, cls, mname, line)
+    for (cls, mname), clist in held_calls.items():
+        for (held, callee, line) in clist:
+            if not held:
+                continue
+            for b in acquires.get(callee, set()):
+                for h in held:
+                    add_edge(h, b, cls, mname, line)
+    return graph, witness
+
+
+def find_lock_cycles(graph: Dict[LockNode, Set[LockNode]]
+                     ) -> List[List[LockNode]]:
+    cycles: List[List[LockNode]] = []
+    seen_cycles = set()
+    for start in graph:
+        stack = [(start, [start])]
+        while stack:
+            node, path = stack.pop()
+            for nxt in graph.get(node, ()):
+                if nxt == start:
+                    canon = tuple(sorted(path))
+                    if canon not in seen_cycles:
+                        seen_cycles.add(canon)
+                        cycles.append(path + [start])
+                elif nxt not in path:
+                    stack.append((nxt, path + [nxt]))
+    return cycles
+
+
+SERVE_FILES = ("core.py", "gateway.py", "procpool.py", "replica.py",
+               "scheduler.py", "streaming.py")
+
+
+def serve_paths(serve_root=None) -> List[pathlib.Path]:
+    root = (pathlib.Path(serve_root) if serve_root
+            else REPO_ROOT / "src" / "repro" / "serve")
+    return [root / f for f in SERVE_FILES if (root / f).exists()]
+
+
+def check_files(paths) -> List[Finding]:
+    findings = []
+    sources = [(parse_module(p), pathlib.Path(p).read_text())
+               for p in paths]
+    classes = _collect_classes(paths, sources)
+    known_locks: Set[str] = set()
+    for info in classes.values():
+        known_locks |= info.lock_attrs
+    for p, (tree, _text) in zip(paths, sources):
+        findings += check_blocking_in_async(p, tree, known_locks)
+    graph, witness = build_lock_graph(paths)
+    for cycle in find_lock_cycles(graph):
+        a, b = cycle[0], cycle[1]
+        file, line, sym = witness.get((a, b), ("?", 1, "?"))
+        pretty = " -> ".join(f"{c}.{l}" for c, l in cycle)
+        findings.append(Finding(
+            checker=CHECKER, rule="lock-cycle",
+            file=file, line=line, symbol=sym,
+            message=f"lock acquisition cycle {pretty} (witness edge "
+                    f"in {sym})"))
+    return findings
+
+
+def check_repo(serve_root=None) -> List[Finding]:
+    return check_files(serve_paths(serve_root))

@@ -1,0 +1,188 @@
+"""Shared machinery for the repo's static analyzers.
+
+Every checker in ``repro.analysis`` produces :class:`Finding` records —
+one defect, anchored at ``file:line`` with a stable ``symbol`` — and the
+CLI (``tools/analyze.py``) subtracts the checked-in waivers
+(``tools/analysis_waivers.toml``) before deciding the exit code.  The
+waiver schema is deliberately strict: every entry must carry a
+non-empty ``reason`` string (a waiver without a written justification is
+a config error, not a pass), and waivers that match nothing are reported
+as *stale* so they cannot outlive the code they excused.
+
+This module owns no policy — just findings, waivers, and the AST
+helpers (module parsing, line→qualified-symbol maps) the individual
+checkers share.  It imports neither jax nor the serving stack, so the
+purely syntactic checkers stay runnable in a bare interpreter.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import pathlib
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+try:                                    # 3.11+
+    import tomllib as _toml
+except ImportError:                     # the pinned 3.10 container
+    import tomli as _toml               # vendored by pytest's dep set
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[3]
+
+__all__ = ["Finding", "Waiver", "REPO_ROOT", "load_waivers",
+           "apply_waivers", "parse_module", "rel_path", "SymbolMap",
+           "iter_py_files"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One defect: ``checker/rule`` at ``file:line``, anchored to a
+    stable ``symbol`` (``Class.attr``, ``Class.method`` or a function
+    name) so waivers survive unrelated line churn."""
+    checker: str
+    rule: str
+    file: str          # repo-relative posix path (or a synthetic name)
+    line: int
+    symbol: str
+    message: str
+
+    @property
+    def location(self) -> str:
+        return f"{self.file}:{self.line}"
+
+    def format(self) -> str:
+        return (f"{self.location} [{self.checker}/{self.rule}] "
+                f"{self.symbol}: {self.message}")
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Waiver:
+    """One checked-in exception.  ``file``/``symbol``/``rule`` are
+    fnmatch patterns matched against a finding; ``reason`` is required
+    and must be non-empty — the reviewable justification."""
+    checker: str
+    file: str
+    symbol: str
+    reason: str
+    rule: str = "*"
+
+    def matches(self, f: Finding) -> bool:
+        return (self.checker == f.checker
+                and fnmatch.fnmatchcase(f.file, self.file)
+                and fnmatch.fnmatchcase(f.symbol, self.symbol)
+                and fnmatch.fnmatchcase(f.rule, self.rule))
+
+
+def load_waivers(path) -> List[Waiver]:
+    """Parse ``analysis_waivers.toml``; raises ``ValueError`` on a
+    malformed entry (missing keys, empty reason) so a bad waiver can
+    never silently suppress findings."""
+    path = pathlib.Path(path)
+    if not path.exists():
+        return []
+    data = _toml.loads(path.read_text())
+    waivers = []
+    for i, entry in enumerate(data.get("waiver", [])):
+        missing = [k for k in ("checker", "file", "symbol", "reason")
+                   if k not in entry]
+        if missing:
+            raise ValueError(f"waiver #{i} in {path.name} is missing "
+                             f"required keys {missing}: {entry!r}")
+        if not str(entry["reason"]).strip():
+            raise ValueError(f"waiver #{i} in {path.name} "
+                             f"({entry['checker']}/{entry['symbol']}) has "
+                             "an empty reason — every waiver must say why")
+        waivers.append(Waiver(checker=str(entry["checker"]),
+                              file=str(entry["file"]),
+                              symbol=str(entry["symbol"]),
+                              reason=str(entry["reason"]),
+                              rule=str(entry.get("rule", "*"))))
+    return waivers
+
+
+def apply_waivers(findings: Sequence[Finding],
+                  waivers: Sequence[Waiver],
+                  ) -> Tuple[List[Finding],
+                             List[Tuple[Finding, Waiver]],
+                             List[Waiver]]:
+    """Split findings into ``(unwaived, waived-with-their-waiver,
+    stale-waivers-that-matched-nothing)``."""
+    unwaived: List[Finding] = []
+    waived: List[Tuple[Finding, Waiver]] = []
+    used = set()
+    for f in findings:
+        hit = next((w for w in waivers if w.matches(f)), None)
+        if hit is None:
+            unwaived.append(f)
+        else:
+            waived.append((f, hit))
+            used.add(id(hit))
+    stale = [w for w in waivers if id(w) not in used]
+    return unwaived, waived, stale
+
+
+# --------------------------------------------------------------------- #
+# AST helpers
+# --------------------------------------------------------------------- #
+def rel_path(path) -> str:
+    """Repo-relative posix path (absolute paths outside the repo — the
+    synthetic negative-control modules in tmp dirs — stay absolute)."""
+    p = pathlib.Path(path).resolve()
+    try:
+        return p.relative_to(REPO_ROOT).as_posix()
+    except ValueError:
+        return p.as_posix()
+
+
+def parse_module(path) -> ast.Module:
+    return ast.parse(pathlib.Path(path).read_text(),
+                     filename=str(path))
+
+
+def iter_py_files(root) -> Iterable[pathlib.Path]:
+    root = pathlib.Path(root)
+    if root.is_file():
+        yield root
+        return
+    for p in sorted(root.rglob("*.py")):
+        if "__pycache__" not in p.parts:
+            yield p
+
+
+class SymbolMap:
+    """Line → innermost qualified symbol (``Class.method``) for one
+    module — what anchors a finding to something stabler than a line."""
+
+    def __init__(self, tree: ast.Module):
+        self._spans: List[Tuple[int, int, str]] = []
+        self._walk(tree.body, ())
+
+    def _walk(self, body, stack: tuple) -> None:
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                qual = stack + (node.name,)
+                self._spans.append((node.lineno, node.end_lineno,
+                                    ".".join(qual)))
+                self._walk(node.body, qual)
+
+    def at(self, line: int) -> str:
+        """The innermost enclosing def/class qualname ('<module>' at
+        top level)."""
+        best: Optional[Tuple[int, str]] = None
+        for lo, hi, qual in self._spans:
+            if lo <= line <= hi and (best is None or lo > best[0]):
+                best = (lo, qual)
+        return best[1] if best else "<module>"
+
+
+def class_defs(tree: ast.Module) -> Dict[str, ast.ClassDef]:
+    """Top-level (and one-level nested) class definitions by name."""
+    out: Dict[str, ast.ClassDef] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            out[node.name] = node
+    return out

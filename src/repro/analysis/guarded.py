@@ -1,0 +1,364 @@
+"""Guarded-by checker: declared lock discipline for shared mutable state.
+
+Every serving-stack class declares which lock protects each mutable
+attribute, either in a class-body registry::
+
+    class ServiceMetrics:
+        GUARDED_BY = {"requests": "_lock", "latencies": "_lock"}
+
+or with a trailing comment on the attribute's ``__init__`` assignment::
+
+    self.calls = 0    # guarded-by: _lock
+
+The special guard ``"owner"`` declares *thread confinement* instead of a
+lock: only the owning thread (the asyncio event loop for the gateway,
+the single caller thread for the cooperative service) may write the
+attribute.  Owner confinement is unprovable statically — the runtime
+shadow mode (``repro.analysis.shadow``) pins the first writer thread
+per instance and raises on a cross-thread write, so what the static
+pass cannot check, the gateway/procpool fault suites exercise.
+
+Static rules (``__init__``/``__post_init__``/``__new__`` writes and
+methods annotated ``# locked: <lock>`` on their ``def`` line — or named
+``*_locked`` — are exempt/pre-locked):
+
+* ``undeclared-attr`` — a checked class writes an attribute outside
+  ``__init__`` with no declaration at all (new shared state must say
+  what guards it — the PR 6 unlocked-``ServiceMetrics`` bug class);
+* ``unguarded-write`` — a lock-guarded attribute is written outside a
+  ``with self.<that lock>`` block;
+* ``unguarded-setattr`` — ``setattr(self, ...)`` in a class with
+  lock-guarded attributes, outside the lock (``ServiceMetrics.bump``'s
+  shape, done wrong);
+* ``locked-helper-call`` — a ``# locked:``/``*_locked`` helper called
+  without its lock held;
+* ``cross-object-write`` — a write to *another* object's attribute
+  whose name is lock-guarded in some checked class (the writer cannot
+  be holding the right instance's lock statically).  Owner-guarded
+  names are exempt — cross-object owner writes (the gateway mutating
+  its ``_Slot``s) are the owning thread's business, shadow-checked.
+
+Declarations merge down the AST base-class chain, so
+``GatewayMetrics`` inherits every ``ServiceMetrics`` guard.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .engine import Finding, REPO_ROOT, parse_module, rel_path
+
+CHECKER = "guarded-by"
+
+INIT_METHODS = {"__init__", "__post_init__", "__new__"}
+
+#: Container-method calls that mutate the receiver.
+MUTATORS = {"append", "extend", "insert", "pop", "popitem", "clear",
+            "update", "setdefault", "remove", "discard", "add",
+            "move_to_end", "appendleft", "extendleft", "sort", "reverse"}
+
+#: Serving-stack classes that must declare their shared mutable state
+#: even if they carry no GUARDED_BY registry yet.
+SERVE_REQUIRED = ("ServiceMetrics", "GatewayMetrics", "SchedulerCore",
+                  "PricingGateway", "_Slot", "ProcessReplica",
+                  "LocalReplica", "FaultyReplica", "PricingService",
+                  "StreamingBook")
+
+_GUARDED_COMMENT = re.compile(r"#\s*guarded-by:\s*(\w+)")
+_LOCKED_COMMENT = re.compile(r"#\s*locked:\s*(\w+)")
+
+
+def _self_attr(expr) -> Optional[str]:
+    if (isinstance(expr, ast.Attribute) and isinstance(expr.value, ast.Name)
+            and expr.value.id == "self"):
+        return expr.attr
+    return None
+
+
+class _ClassDecl:
+    def __init__(self, node: ast.ClassDef, file: str):
+        self.node = node
+        self.file = file
+        self.name = node.name
+        self.bases = [b.id for b in node.bases if isinstance(b, ast.Name)]
+        self.guards: Dict[str, str] = {}       # attr -> lock attr | "owner"
+        self.methods: Dict[str, ast.AST] = {}
+        self.locked_helpers: Dict[str, str] = {}  # method -> lock attr
+
+
+def _collect(paths) -> Dict[str, _ClassDecl]:
+    classes: Dict[str, _ClassDecl] = {}
+    for path in paths:
+        text = pathlib.Path(path).read_text()
+        tree = ast.parse(text, filename=str(path))
+        lines = text.splitlines()
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            decl = _ClassDecl(node, rel_path(path))
+            for item in node.body:
+                if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    decl.methods[item.name] = item
+                    m = _LOCKED_COMMENT.search(lines[item.lineno - 1])
+                    if m:
+                        decl.locked_helpers[item.name] = m.group(1)
+                    elif item.name.endswith("_locked"):
+                        decl.locked_helpers[item.name] = "_lock"
+                if (isinstance(item, ast.Assign)
+                        and any(isinstance(t, ast.Name)
+                                and t.id == "GUARDED_BY"
+                                for t in item.targets)
+                        and isinstance(item.value, ast.Dict)):
+                    for k, v in zip(item.value.keys, item.value.values):
+                        if (isinstance(k, ast.Constant)
+                                and isinstance(v, ast.Constant)):
+                            decl.guards[str(k.value)] = str(v.value)
+            # inline `self.x = ...  # guarded-by: _lock` declarations
+            for sub in ast.walk(node):
+                if isinstance(sub, (ast.Assign, ast.AnnAssign)):
+                    targets = (sub.targets if isinstance(sub, ast.Assign)
+                               else [sub.target])
+                    line = lines[sub.lineno - 1]
+                    m = _GUARDED_COMMENT.search(line)
+                    if m:
+                        for t in targets:
+                            attr = _self_attr(t)
+                            if attr:
+                                decl.guards[attr] = m.group(1)
+            classes[node.name] = decl
+    return classes
+
+
+def _merged_guards(classes: Dict[str, _ClassDecl],
+                   name: str) -> Dict[str, str]:
+    decl = classes.get(name)
+    if decl is None:
+        return {}
+    merged: Dict[str, str] = {}
+    for base in decl.bases:
+        merged.update(_merged_guards(classes, base))
+    merged.update(decl.guards)
+    return merged
+
+
+class _Write:
+    __slots__ = ("attr", "line", "held", "kind", "target_is_self")
+
+    def __init__(self, attr, line, held, kind, target_is_self):
+        self.attr = attr
+        self.line = line
+        self.held = held
+        self.kind = kind
+        self.target_is_self = target_is_self
+
+
+def _target_writes(t, line, held, out: List[_Write]) -> None:
+    if isinstance(t, (ast.Tuple, ast.List)):
+        for el in t.elts:
+            _target_writes(el, line, held, out)
+        return
+    if isinstance(t, ast.Starred):
+        _target_writes(t.value, line, held, out)
+        return
+    base = t
+    if isinstance(base, ast.Subscript):
+        base = base.value
+    if isinstance(base, ast.Attribute):
+        attr = base.attr
+        is_self = (isinstance(base.value, ast.Name)
+                   and base.value.id == "self")
+        out.append(_Write(attr, line, held, "assign", is_self))
+
+
+def _expr_writes(node, line, held, out: List[_Write]) -> None:
+    """Mutator/setattr calls anywhere in an expression tree."""
+    for sub in ast.walk(node):
+        if not isinstance(sub, ast.Call):
+            continue
+        fn = sub.func
+        if (isinstance(fn, ast.Name) and fn.id == "setattr"
+                and sub.args and isinstance(sub.args[0], ast.Name)
+                and sub.args[0].id == "self"):
+            out.append(_Write(None, sub.lineno, held, "setattr", True))
+        if isinstance(fn, ast.Attribute) and fn.attr in MUTATORS:
+            base = fn.value
+            if isinstance(base, ast.Subscript):
+                base = base.value
+            if isinstance(base, ast.Attribute):
+                is_self = (isinstance(base.value, ast.Name)
+                           and base.value.id == "self")
+                out.append(_Write(base.attr, sub.lineno, held, "mutate",
+                                  is_self))
+
+
+def _method_writes(decl: _ClassDecl, mname: str,
+                   mnode) -> Tuple[List[_Write],
+                                   List[Tuple[str, int, Set[str]]]]:
+    """All attribute writes in one method with the set of lock attrs
+    held at each, plus ``(helper, line, held)`` for locked-helper call
+    sites."""
+    writes: List[_Write] = []
+    helper_calls: List[Tuple[str, int, Set[str]]] = []
+    base_held: Set[str] = set()
+    if mname in decl.locked_helpers:
+        base_held.add(decl.locked_helpers[mname])
+
+    def stmt(node, held: Set[str]) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return                       # nested defs run elsewhere/later
+        if isinstance(node, ast.With):
+            new_held = set(held)
+            for item in node.items:
+                attr = _self_attr(item.context_expr)
+                if attr:
+                    new_held.add(attr)
+                _expr_writes(item.context_expr, node.lineno, held, writes)
+            for s in node.body:
+                stmt(s, new_held)
+            return
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                _target_writes(t, node.lineno, frozenset(held), writes)
+            _expr_writes(node.value, node.lineno, frozenset(held), writes)
+            _calls(node, held)
+            return
+        if isinstance(node, ast.AugAssign):
+            _target_writes(node.target, node.lineno, frozenset(held), writes)
+            _expr_writes(node.value, node.lineno, frozenset(held), writes)
+            _calls(node, held)
+            return
+        if isinstance(node, ast.AnnAssign) and node.value is not None:
+            _target_writes(node.target, node.lineno, frozenset(held), writes)
+            _expr_writes(node.value, node.lineno, frozenset(held), writes)
+            _calls(node, held)
+            return
+        # compound statements: scan header expressions, recurse bodies
+        for field in ("test", "iter", "value", "exc", "msg", "items"):
+            sub = getattr(node, field, None)
+            if isinstance(sub, ast.AST):
+                _expr_writes(sub, node.lineno, frozenset(held), writes)
+                _calls_in(sub, node.lineno, held)
+        for field in ("body", "orelse", "finalbody"):
+            for s in getattr(node, field, []) or []:
+                stmt(s, held)
+        for h in getattr(node, "handlers", []) or []:
+            for s in h.body:
+                stmt(s, held)
+
+    def _calls_in(expr, line, held: Set[str]) -> None:
+        for sub in ast.walk(expr):
+            if isinstance(sub, ast.Call):
+                attr = _self_attr(sub.func)
+                if attr and attr in decl.locked_helpers:
+                    helper_calls.append((attr, sub.lineno, set(held)))
+
+    def _calls(node, held: Set[str]) -> None:
+        _calls_in(node, node.lineno, held)
+
+    for s in mnode.body:
+        stmt(s, set(base_held))
+    return writes, helper_calls
+
+
+def check_files(paths, require: Sequence[str] = (),
+                require_all: bool = False) -> List[Finding]:
+    classes = _collect(paths)
+    findings: List[Finding] = []
+    # names declared "owner" anywhere are exempt from the cross-object
+    # rule (thread confinement is the runtime shadow mode's job)
+    owner_names: Set[str] = set()
+    lock_guarded_names: Set[str] = set()
+    checked: Set[str] = set()
+    for name, decl in classes.items():
+        guards = _merged_guards(classes, name)
+        if guards or name in require or require_all:
+            checked.add(name)
+        for attr, g in guards.items():
+            (owner_names if g == "owner" else lock_guarded_names).add(attr)
+
+    for name in sorted(checked):
+        decl = classes[name]
+        guards = _merged_guards(classes, name)
+        has_lock_guards = any(g != "owner" for g in guards.values())
+        # merge inherited locked helpers so calls resolve across bases
+        helpers: Dict[str, str] = {}
+        chain = [name]
+        while chain:
+            c = chain.pop()
+            d = classes.get(c)
+            if d is None:
+                continue
+            for h, lk in d.locked_helpers.items():
+                helpers.setdefault(h, lk)
+            chain.extend(d.bases)
+        for mname, mnode in decl.methods.items():
+            if mname in INIT_METHODS:
+                continue
+            writes, helper_calls = _method_writes(decl, mname, mnode)
+            for w in writes:
+                sym = f"{name}.{mname}.{w.attr or 'setattr'}"
+                if w.kind == "setattr":
+                    if has_lock_guards and not (w.held & set(
+                            g for g in guards.values() if g != "owner")):
+                        findings.append(Finding(
+                            checker=CHECKER, rule="unguarded-setattr",
+                            file=decl.file, line=w.line, symbol=sym,
+                            message=f"setattr(self, ...) in {name}."
+                                    f"{mname} outside the instance lock"))
+                    continue
+                if w.target_is_self:
+                    g = guards.get(w.attr)
+                    if g is None:
+                        findings.append(Finding(
+                            checker=CHECKER, rule="undeclared-attr",
+                            file=decl.file, line=w.line, symbol=sym,
+                            message=f"{name}.{mname} writes self.{w.attr} "
+                                    "outside __init__ but no GUARDED_BY/"
+                                    "guarded-by declaration covers it"))
+                    elif g != "owner" and g not in w.held:
+                        findings.append(Finding(
+                            checker=CHECKER, rule="unguarded-write",
+                            file=decl.file, line=w.line, symbol=sym,
+                            message=f"self.{w.attr} is guarded by "
+                                    f"self.{g} but {name}.{mname} writes "
+                                    "it without holding the lock"))
+                else:
+                    if (w.attr in lock_guarded_names
+                            and w.attr not in owner_names):
+                        findings.append(Finding(
+                            checker=CHECKER, rule="cross-object-write",
+                            file=decl.file, line=w.line, symbol=sym,
+                            message=f"{name}.{mname} writes .{w.attr} on "
+                                    "another object; that attribute is "
+                                    "lock-guarded in its owning class"))
+            for (helper, line, held) in helper_calls:
+                lk = helpers.get(helper)
+                if lk is not None and lk not in held:
+                    findings.append(Finding(
+                        checker=CHECKER, rule="locked-helper-call",
+                        file=decl.file, line=line,
+                        symbol=f"{name}.{mname}.{helper}",
+                        message=f"{name}.{mname} calls self.{helper}() "
+                                f"without holding self.{lk} (helper is "
+                                "declared to run under it)"))
+    return findings
+
+
+def serve_paths(serve_root=None) -> List[pathlib.Path]:
+    from .concurrency import SERVE_FILES
+    root = (pathlib.Path(serve_root) if serve_root
+            else REPO_ROOT / "src" / "repro" / "serve")
+    return [root / f for f in SERVE_FILES if (root / f).exists()]
+
+
+def check_repo(serve_root=None) -> List[Finding]:
+    return check_files(serve_paths(serve_root), require=SERVE_REQUIRED)
+
+
+def guard_map(paths=None) -> Dict[str, Dict[str, str]]:
+    """Merged ``{class: {attr: guard}}`` over the serve files — what the
+    runtime shadow mode instruments."""
+    classes = _collect(paths if paths is not None else serve_paths())
+    return {name: _merged_guards(classes, name) for name in classes}

@@ -1,0 +1,179 @@
+"""Runtime shadow mode for the guarded-by contract.
+
+The static checker (``repro.analysis.guarded``) proves lock discipline
+where it can see it; two things it cannot prove are (a) that a method
+documented to run under a lock really does at runtime, and (b) *owner*
+(thread-confinement) declarations.  Shadow mode closes that gap: with
+``REPRO_SHADOW_GUARDS=1`` the gateway/procpool fault suites run with
+every declared class instrumented —
+
+* each lock-guard attribute (``"_lock"``-style guards) is backed by a
+  :class:`ShadowLock` that records its owning thread; any ``setattr``
+  of a guarded attribute while the current thread does NOT hold the
+  lock raises :class:`GuardViolation` at the exact write site;
+* each owner-guard attribute pins the first post-``__init__`` writer
+  thread per instance; a write from any other thread raises.
+
+Instrumentation patches ``__init__`` (to mark construction writes
+exempt and swap declared locks for shadow locks) and ``__setattr__``
+(the check) — plain attribute rebinds and ``setattr`` are caught;
+in-place container mutation (``list.append``) is not, which is exactly
+the granularity at which the gateway's hot counters (``+=`` rebinds)
+race, so the known PR 6 bug class is covered.
+
+The declarations come from the same source as the static pass
+(``GUARDED_BY`` registries parsed by ``guarded.guard_map``), so runtime
+and static can never disagree about what is guarded.
+:data:`SHADOW_EXEMPT` mirrors the checked-in waivers for writes that
+are lock-free by design (``ProcessReplica.close`` setting ``_dead``).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, Iterable, Optional, Tuple
+
+__all__ = ["ShadowLock", "GuardViolation", "install", "DEFAULT_CLASSES",
+           "SHADOW_EXEMPT"]
+
+
+class GuardViolation(AssertionError):
+    """A declared guarded-by contract was broken at runtime."""
+
+
+#: (class name, attr) writes exempt from shadow enforcement — each one
+#: mirrors a reasoned waiver in ``tools/analysis_waivers.toml``.
+SHADOW_EXEMPT: set = {
+    # ProcessReplica.close() is lock-free by design: SIGKILL must
+    # unblock a concurrent price_chunk via the process sentinel (see
+    # the waiver for ProcessReplica.close._dead).
+    ("ProcessReplica", "_dead"),
+    # ProcessReplica.start() runs from __init__ before the replica is
+    # shared (waiver ProcessReplica.start.*).
+    ("ProcessReplica", "_conn"), ("ProcessReplica", "_proc"),
+    ("ProcessReplica", "_ready"), ("ProcessReplica", "_warmup_deadline"),
+}
+
+
+class ShadowLock:
+    """A ``threading.Lock`` work-alike that knows its owner thread."""
+
+    def __init__(self):
+        self._inner = threading.Lock()
+        self._owner: Optional[int] = None
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        got = self._inner.acquire(blocking, timeout)
+        if got:
+            self._owner = threading.get_ident()
+        return got
+
+    def release(self) -> None:
+        self._owner = None
+        self._inner.release()
+
+    def __enter__(self) -> "ShadowLock":
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def locked(self) -> bool:
+        return self._inner.locked()
+
+    def held_by_me(self) -> bool:
+        return (self._inner.locked()
+                and self._owner == threading.get_ident())
+
+
+def _default_classes() -> Dict[str, type]:
+    from repro.serve.core import SchedulerCore, ServiceMetrics
+    from repro.serve.gateway import GatewayMetrics, PricingGateway, _Slot
+    from repro.serve.procpool import ProcessReplica
+    from repro.serve.replica import FaultyReplica, LocalReplica
+    from repro.serve.scheduler import PricingService
+    from repro.serve.streaming import StreamingBook
+    return {c.__name__: c for c in (
+        ServiceMetrics, GatewayMetrics, SchedulerCore, _Slot,
+        LocalReplica, FaultyReplica, ProcessReplica, PricingGateway,
+        PricingService, StreamingBook)}
+
+
+DEFAULT_CLASSES = _default_classes
+
+
+def install(classes: Optional[Iterable[type]] = None) -> Callable[[], None]:
+    """Instrument ``classes`` (default: the serving stack); returns an
+    ``uninstall()`` that restores the originals."""
+    from .guarded import guard_map
+    guards_by_class = guard_map()
+    if classes is None:
+        classes = _default_classes().values()
+    originals = []
+
+    for cls in classes:
+        # merge declarations down the *runtime* MRO so subclasses see
+        # their bases' guards even when only the base is declared
+        guards: Dict[str, str] = {}
+        for klass in reversed(cls.__mro__):
+            guards.update(guards_by_class.get(klass.__name__, {}))
+        if not guards:
+            continue
+        lock_attrs = sorted({g for g in guards.values() if g != "owner"})
+        orig_init = cls.__init__
+        orig_setattr = cls.__setattr__
+        originals.append((cls, orig_init, orig_setattr))
+
+        def make_init(orig_init, lock_attrs):
+            def __init__(self, *args, **kwargs):
+                object.__setattr__(self, "_shadow_in_init", True)
+                try:
+                    orig_init(self, *args, **kwargs)
+                finally:
+                    for lattr in lock_attrs:
+                        if isinstance(getattr(self, lattr, None),
+                                      threading.Lock().__class__):
+                            object.__setattr__(self, lattr, ShadowLock())
+                    object.__setattr__(self, "_shadow_in_init", False)
+            return __init__
+
+        def make_setattr(orig_setattr, guards, cls_name):
+            def __setattr__(self, name, value):
+                guard = guards.get(name)
+                if (guard is not None
+                        and not getattr(self, "_shadow_in_init", True)
+                        and (cls_name, name) not in SHADOW_EXEMPT
+                        and (type(self).__name__, name) not in SHADOW_EXEMPT):
+                    if guard == "owner":
+                        owners = getattr(self, "_shadow_owners", None)
+                        if owners is None:
+                            owners = {}
+                            object.__setattr__(self, "_shadow_owners",
+                                               owners)
+                        me = threading.get_ident()
+                        pinned = owners.setdefault(name, me)
+                        if pinned != me:
+                            raise GuardViolation(
+                                f"{type(self).__name__}.{name} is "
+                                "owner-confined: first written by thread "
+                                f"{pinned}, now written by {me}")
+                    else:
+                        lock = getattr(self, guard, None)
+                        if (isinstance(lock, ShadowLock)
+                                and not lock.held_by_me()):
+                            raise GuardViolation(
+                                f"{type(self).__name__}.{name} is guarded "
+                                f"by self.{guard} but was written without "
+                                "holding it")
+                orig_setattr(self, name, value)
+            return __setattr__
+
+        cls.__init__ = make_init(orig_init, lock_attrs)
+        cls.__setattr__ = make_setattr(orig_setattr, guards, cls.__name__)
+
+    def uninstall() -> None:
+        for cls, orig_init, orig_setattr in originals:
+            cls.__init__ = orig_init
+            cls.__setattr__ = orig_setattr
+
+    return uninstall

@@ -1,0 +1,167 @@
+"""Generic AST source-scan rules (the engine behind the old
+``kernels/contracts.py`` regex sweep).
+
+Three repo policies run through one rule engine:
+
+* **pallas-coverage** — every module containing a ``pl.pallas_call(``
+  site must be declared by a :class:`repro.kernels.contracts.Contract`
+  (and every declared module must still contain one), so a new kernel
+  cannot land without a lowering contract.
+* **interpret-hardcode** — ``interpret=True`` literal call kwargs are
+  banned in ``src/repro`` outside ``core/platform.py``; interpret-mode
+  selection is platform policy, not a per-call-site decision.
+* **sort-ban** — sort-engine primitives (``jnp.sort``/``argsort``/
+  ``lexsort``/``sort_key_val``, ``jax.lax.sort``/``top_k``) are banned
+  in the hot-path modules (``core/pwl.py``, ``core/rz.py``,
+  ``core/notc.py``, ``kernels/``) that PR 5 rewrote sort-free.  The
+  two retained bysort references in ``core/pwl.py`` are waived.
+
+All rules are AST-based (``ast.Call`` nodes), so prose mentions of
+``jnp.sort`` in docstrings/comments never false-positive.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Iterable, List, Optional, Sequence, Set, Tuple
+
+from .engine import (Finding, REPO_ROOT, SymbolMap, iter_py_files,
+                     parse_module, rel_path)
+
+CHECKER = "source-scan"
+
+#: Hot-path modules under src/repro where sort primitives are banned
+#: (jaxpr-asserted sort-free since PR 5).  *_ref.py oracles are exempt.
+SORT_BAN_MODULES = ("core/pwl.py", "core/rz.py", "core/notc.py")
+SORT_BAN_GLOBS = ("kernels/*.py",)
+
+#: Call names (attribute tails) that reach a sort engine.
+SORT_CALL_NAMES = {"sort", "argsort", "lexsort", "sort_key_val",
+                   "top_k", "approx_top_k"}
+
+
+def _call_name(node: ast.Call) -> Optional[str]:
+    """Tail name of the callee: ``jnp.argsort(...)`` → ``argsort``."""
+    fn = node.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return None
+
+
+def find_calls(tree: ast.Module, names: Set[str]) -> List[ast.Call]:
+    return [n for n in ast.walk(tree)
+            if isinstance(n, ast.Call) and _call_name(n) in names]
+
+
+def has_pallas_call(tree: ast.Module) -> bool:
+    return bool(find_calls(tree, {"pallas_call"}))
+
+
+def _interpret_true_kwargs(tree: ast.Module) -> List[ast.Call]:
+    """Calls passing a literal ``interpret=True`` kwarg.  A ``True``
+    *default* on a ``def`` is fine — only call sites hardcode policy."""
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        for kw in node.keywords:
+            if (kw.arg == "interpret"
+                    and isinstance(kw.value, ast.Constant)
+                    and kw.value.value is True):
+                out.append(node)
+    return out
+
+
+def scan_interpret_hardcode(src_root=None) -> List[Finding]:
+    """``interpret=True`` call kwargs anywhere in src/repro except
+    ``core/platform.py`` (which owns the policy) and the analysis
+    package itself (whose differential probes pin interpret to a
+    literal so compile keys are deterministic under test)."""
+    root = pathlib.Path(src_root) if src_root else REPO_ROOT / "src" / "repro"
+    findings = []
+    for path in iter_py_files(root):
+        if path.name == "platform.py" and path.parent.name == "core":
+            continue
+        if path.parent.name == "analysis":
+            continue
+        tree = parse_module(path)
+        symbols = SymbolMap(tree)
+        for call in _interpret_true_kwargs(tree):
+            findings.append(Finding(
+                checker=CHECKER, rule="interpret-hardcode",
+                file=rel_path(path), line=call.lineno,
+                symbol=symbols.at(call.lineno),
+                message="literal interpret=True at a call site; route "
+                        "through core/platform.py resolve_interpret()"))
+    return findings
+
+
+def scan_sort_ban(src_root=None) -> List[Finding]:
+    root = pathlib.Path(src_root) if src_root else REPO_ROOT / "src" / "repro"
+    paths = []
+    for mod in SORT_BAN_MODULES:
+        p = root / mod
+        if p.exists():
+            paths.append(p)
+    for pat in SORT_BAN_GLOBS:
+        paths.extend(sorted(root.glob(pat)))
+    findings = []
+    for path in paths:
+        tree = parse_module(path)
+        symbols = SymbolMap(tree)
+        for call in find_calls(tree, SORT_CALL_NAMES):
+            findings.append(Finding(
+                checker=CHECKER, rule="sort-ban",
+                file=rel_path(path), line=call.lineno,
+                symbol=symbols.at(call.lineno),
+                message=f"sort-engine primitive '{_call_name(call)}' in a "
+                        "hot-path module (sort-free since the merge-path "
+                        "rewrite)"))
+    return findings
+
+
+def pallas_call_modules(src_root=None) -> Set[str]:
+    """Dotted ``repro.*`` module names containing a pallas_call site."""
+    root = pathlib.Path(src_root) if src_root else REPO_ROOT / "src" / "repro"
+    found = set()
+    for path in iter_py_files(root):
+        if has_pallas_call(parse_module(path)):
+            mod = ".".join(("repro",)
+                           + path.relative_to(root).with_suffix("").parts)
+            found.add(mod)
+    return found
+
+
+def scan_pallas_coverage(src_root=None,
+                         declared: Optional[Set[str]] = None,
+                         ) -> List[Finding]:
+    """Both directions: every pallas_call module declared by a kernel
+    contract, every declared module still hosting a pallas_call."""
+    if declared is None:
+        from repro.kernels.contracts import CONTRACTS
+        declared = {c.module for c in CONTRACTS.values()}
+    actual = pallas_call_modules(src_root)
+    findings = []
+    for mod in sorted(actual - declared):
+        findings.append(Finding(
+            checker=CHECKER, rule="pallas-uncovered",
+            file="src/" + mod.replace(".", "/") + ".py", line=1,
+            symbol=mod,
+            message="module contains pl.pallas_call but no "
+                    "kernels.contracts entry declares it"))
+    for mod in sorted(declared - actual):
+        findings.append(Finding(
+            checker=CHECKER, rule="pallas-stale-contract",
+            file="src/repro/kernels/contracts.py", line=1,
+            symbol=mod,
+            message=f"contract declares module '{mod}' but it has no "
+                    "pl.pallas_call site"))
+    return findings
+
+
+def check_repo(src_root=None) -> List[Finding]:
+    return (scan_pallas_coverage(src_root)
+            + scan_interpret_hardcode(src_root)
+            + scan_sort_ban(src_root))

@@ -1,0 +1,218 @@
+"""Wire-schema lint for ``ChunkSpec``/``ChunkResult`` (the PR 9 bug
+class: a dataclass field added without serialization crosses the pipe
+as whatever pickle makes of it — or not at all).
+
+Static half (pure AST over ``serve/core.py``): every dataclass field
+must appear as a key in the ``to_wire`` dict literal AND be read back
+in ``from_wire`` (``wire["f"]`` or ``wire.get("f")``); every field's
+annotation must be plain-data/JSON-safe (``int``/``float``/``str``/
+``bool``/``tuple`` and ``Optional`` of those) unless the field has a
+registered codec in :data:`WIRE_CODECS` (``requests`` travels as rid
+tuples, ``shard_plan``/``shard_info`` through their ``_plan_to_wire``
+helpers, result arrays as numpy).  A field that is neither plain nor
+codec'd is exactly the ``mesh`` bug — an opaque object on the wire.
+
+Runtime half: a populated ``ChunkSpec`` (shard plan and all) must
+survive ``to_wire -> json -> from_wire`` unchanged, and a
+``ChunkResult`` must survive ``to_wire -> from_wire`` with bit-equal
+arrays.  The static pass proves coverage; the round trip proves the
+codecs actually invert.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .engine import Finding, REPO_ROOT, parse_module, rel_path
+
+CHECKER = "wire-schema"
+
+#: Annotation heads that are JSON-safe as-is.
+PLAIN_TYPES = {"int", "float", "str", "bool", "tuple", "Tuple", "None"}
+
+#: (class, field) pairs with an explicit non-plain codec in
+#: ``serve/core.py`` (helpers invert them; the round-trip probe checks).
+WIRE_CODECS: Set[Tuple[str, str]] = {
+    ("ChunkSpec", "requests"),       # List[_Pending] <-> rid tuples
+    ("ChunkSpec", "shard_plan"),     # ShardPlan <-> _plan_to_wire dict
+    ("ChunkResult", "ask"),          # numpy arrays (pipe pickles them)
+    ("ChunkResult", "bid"),
+    ("ChunkResult", "row_pieces"),
+    ("ChunkResult", "stderr"),
+    ("ChunkResult", "shard_info"),   # ShardExecInfo <-> helper dict
+}
+
+WIRE_CLASSES = ("ChunkSpec", "ChunkResult")
+
+#: Wire dict keys that are schema metadata, not fields.
+META_KEYS = {"version", "kind"}
+
+
+def _annotation_head(ann) -> str:
+    """``Optional[int]`` → ``int``, ``List[_Pending]`` → ``List``."""
+    if isinstance(ann, ast.Subscript):
+        head = _annotation_head(ann.value)
+        if head == "Optional":
+            return _annotation_head(ann.slice)
+        return head
+    if isinstance(ann, ast.Name):
+        return ann.id
+    if isinstance(ann, ast.Attribute):
+        return ann.attr
+    if isinstance(ann, ast.Constant):
+        return str(ann.value)
+    return ast.dump(ann)
+
+
+def _class_wire_shape(node: ast.ClassDef):
+    """(fields{name: (line, annotation-head)}, encoded keys, decoded
+    keys) for one wire dataclass."""
+    fields: Dict[str, Tuple[int, str]] = {}
+    encoded: Set[str] = set()
+    decoded: Set[str] = set()
+    for item in node.body:
+        if (isinstance(item, ast.AnnAssign)
+                and isinstance(item.target, ast.Name)
+                and not item.target.id.startswith("_")):
+            fields[item.target.id] = (item.lineno,
+                                      _annotation_head(item.annotation))
+    for item in node.body:
+        if not isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if item.name == "to_wire":
+            for sub in ast.walk(item):
+                if isinstance(sub, ast.Dict):
+                    for k in sub.keys:
+                        if isinstance(k, ast.Constant):
+                            encoded.add(str(k.value))
+        if item.name == "from_wire":
+            for sub in ast.walk(item):
+                if (isinstance(sub, ast.Subscript)
+                        and isinstance(sub.value, ast.Name)
+                        and sub.value.id == "wire"
+                        and isinstance(sub.slice, ast.Constant)):
+                    decoded.add(str(sub.slice.value))
+                if (isinstance(sub, ast.Call)
+                        and isinstance(sub.func, ast.Attribute)
+                        and sub.func.attr == "get"
+                        and isinstance(sub.func.value, ast.Name)
+                        and sub.func.value.id == "wire"
+                        and sub.args
+                        and isinstance(sub.args[0], ast.Constant)):
+                    decoded.add(str(sub.args[0].value))
+    return fields, encoded - META_KEYS, decoded - META_KEYS
+
+
+def check_wire_static(path=None,
+                      classes: Sequence[str] = WIRE_CLASSES,
+                      codecs: Optional[Set[Tuple[str, str]]] = None,
+                      ) -> List[Finding]:
+    path = path if path is not None else (
+        REPO_ROOT / "src" / "repro" / "serve" / "core.py")
+    codecs = WIRE_CODECS if codecs is None else codecs
+    tree = parse_module(path)
+    file = rel_path(path)
+    findings: List[Finding] = []
+    found_classes = {n.name: n for n in ast.walk(tree)
+                     if isinstance(n, ast.ClassDef)}
+    for cname in classes:
+        node = found_classes.get(cname)
+        if node is None:
+            findings.append(Finding(
+                checker=CHECKER, rule="wire-class-missing",
+                file=file, line=1, symbol=cname,
+                message=f"wire class {cname} not found in {file}"))
+            continue
+        fields, encoded, decoded = _class_wire_shape(node)
+        for name, (line, head) in sorted(fields.items()):
+            sym = f"{cname}.{name}"
+            if name not in encoded:
+                findings.append(Finding(
+                    checker=CHECKER, rule="wire-missing-encode",
+                    file=file, line=line, symbol=sym,
+                    message=f"dataclass field {sym} is not written by "
+                            "to_wire — it silently vanishes at the "
+                            "process boundary"))
+            if name not in decoded:
+                findings.append(Finding(
+                    checker=CHECKER, rule="wire-missing-decode",
+                    file=file, line=line, symbol=sym,
+                    message=f"dataclass field {sym} is not read back by "
+                            "from_wire — decoded chunks get the default"))
+            if head not in PLAIN_TYPES and (cname, name) not in codecs:
+                findings.append(Finding(
+                    checker=CHECKER, rule="wire-opaque-type",
+                    file=file, line=line, symbol=sym,
+                    message=f"{sym} is typed '{head}' — not JSON-safe "
+                            "plain data and no codec is registered in "
+                            "repro.analysis.wire.WIRE_CODECS (the "
+                            "ChunkSpec.mesh bug class)"))
+        for name in sorted(encoded - set(fields)):
+            findings.append(Finding(
+                checker=CHECKER, rule="wire-stale-key",
+                file=file, line=node.lineno, symbol=f"{cname}.{name}",
+                message=f"to_wire emits key '{name}' with no matching "
+                        f"dataclass field on {cname}"))
+    return findings
+
+
+def check_roundtrip() -> List[Finding]:
+    """A populated ChunkSpec survives to_wire → json → from_wire; a
+    ChunkResult survives to_wire → from_wire with equal arrays."""
+    import dataclasses
+    import json
+
+    import numpy as np
+
+    from repro.core.partition import ShardPlan
+    from repro.serve.core import ChunkResult, ChunkSpec, _Pending
+    file = "src/repro/serve/core.py"
+    findings: List[Finding] = []
+    plan = ShardPlan(n_shards=2, shards=((0, 2), (2, 4)),
+                     work=(1.0, 1.0), lanes=2, n_rows=4)
+    spec = ChunkSpec(
+        bucket=(8, "lsmc", 2, (4, 8)),
+        requests=[_Pending(7, (100.0, 0.2, 0.1, 0.25, 0.0, "put", 100.0,
+                               110.0, 8, 2, (4, 8)), 1.5)],
+        n_steps=8, engine="lsmc", capacity=16, backend="jnp", padded=4,
+        cols=((100.0,), (0.2,), (0.1,), (0.25,), (0.0,), ("put",),
+              (100.0,), (110.0,)),
+        devices=2, shard_plan=plan, n_assets=2, exercise_steps=(4, 8),
+        n_paths=512, mc_seed=3, interpret=True, basis="poly", degree=2,
+        antithetic=False)
+    try:
+        hopped = json.loads(json.dumps(spec.to_wire()))
+    except TypeError as e:
+        return [Finding(checker=CHECKER, rule="wire-roundtrip", file=file,
+                        line=1, symbol="ChunkSpec.to_wire",
+                        message=f"ChunkSpec wire dict is not JSON "
+                                f"serializable: {e}")]
+    back = ChunkSpec.from_wire(hopped)
+    if back != spec:
+        diffs = [f.name for f in dataclasses.fields(spec)
+                 if getattr(back, f.name) != getattr(spec, f.name)]
+        findings.append(Finding(
+            checker=CHECKER, rule="wire-roundtrip", file=file, line=1,
+            symbol="ChunkSpec.from_wire",
+            message=f"ChunkSpec wire round trip (via JSON) changed "
+                    f"fields {diffs}"))
+    res = ChunkResult(ask=np.array([1.0, 2.0]), bid=np.array([0.5, 1.5]),
+                      max_pieces=7, row_pieces=np.array([3, 7]),
+                      seconds=0.25, stderr=np.array([0.01, 0.02]))
+    rback = ChunkResult.from_wire(res.to_wire())
+    same = (np.array_equal(rback.ask, res.ask)
+            and np.array_equal(rback.bid, res.bid)
+            and rback.max_pieces == res.max_pieces
+            and np.array_equal(rback.row_pieces, res.row_pieces)
+            and rback.seconds == res.seconds
+            and np.array_equal(rback.stderr, res.stderr))
+    if not same:
+        findings.append(Finding(
+            checker=CHECKER, rule="wire-roundtrip", file=file, line=1,
+            symbol="ChunkResult.from_wire",
+            message="ChunkResult wire round trip changed values"))
+    return findings
+
+
+def check_repo() -> List[Finding]:
+    return check_wire_static() + check_roundtrip()

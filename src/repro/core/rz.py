@@ -188,7 +188,7 @@ def rz_backward(s0, sigma, rate, maturity, k, *, n_steps: int, capacity: int,
     pieces = jnp.zeros((), jnp.int32)
 
     for rnd in plan:
-        z = jax.tree.map(lambda a: a[:, :rnd.lanes], z)
+        z = jax.tree.map(lambda a, lanes=rnd.lanes: a[:, :lanes], z)
         lvl0 = jnp.asarray(float(rnd.lvl0), dtype)
 
         def body(j, carry, lvl0=lvl0):
@@ -253,7 +253,7 @@ def rz_backward_pallas(s0, sigma, rate, maturity, k, *, n_steps: int,
           *payoff.params]
     for rnd in plan:
         # re-balance: shrink the lane extent to this round's live tree
-        z = jax.tree.map(lambda a: a[:, :rnd.lanes], z)
+        z = jax.tree.map(lambda a, lanes=rnd.lanes: a[:, :lanes], z)
         scalars = jnp.stack([jnp.asarray(v, dtype)
                              for v in (float(rnd.lvl0), *sc)])
         z, p = rz_round(z, scalars, levels=rnd.depth, block=rnd.block,

@@ -41,6 +41,15 @@ mutation goes through methods that hold the instance lock
 reads under the same lock.  Plain ``metrics.field += 1`` from two
 threads loses updates (a read-modify-write race) — the regression test
 ``tests/test_serve.py::test_service_metrics_thread_safe`` pins this.
+
+The lock discipline is *declared*, not just documented: each class
+carries a ``GUARDED_BY`` registry mapping shared-mutable attributes to
+the lock that guards them (``"owner"`` = single-threaded by design, the
+event-loop/owner thread).  ``tools/analyze.py`` statically verifies
+every write site against these declarations (``repro.analysis.guarded``)
+and the fault-injection suites can enforce them at runtime via shadow
+locks (``repro.analysis.shadow``, ``REPRO_SHADOW_GUARDS=1``).  See
+``docs/ANALYSIS.md``.
 """
 from __future__ import annotations
 
@@ -165,6 +174,18 @@ class ServiceMetrics:
     latencies: List[float] = dataclasses.field(default_factory=list)
     latency_window: int = 4096
 
+    # Checked statically by repro.analysis.guarded and at runtime (shadow
+    # mode) — every write outside __init__ must hold the named lock.
+    GUARDED_BY = {
+        "requests": "_lock", "completed": "_lock", "batches": "_lock",
+        "contracts": "_lock", "padded": "_lock", "cache_hits": "_lock",
+        "compile_hits": "_lock", "compile_misses": "_lock",
+        "engine_seconds": "_lock", "engine_batches": "_lock",
+        "grids": "_lock", "grid_scenarios": "_lock",
+        "shard_batches": "_lock", "rebalances": "_lock",
+        "latencies": "_lock",
+    }
+
     def __post_init__(self):
         self._lock = threading.Lock()
 
@@ -207,35 +228,45 @@ class ServiceMetrics:
     # locked read
     # ------------------------------------------------------------------ #
     def snapshot(self) -> dict:
+        """One atomic, self-consistent view of every counter.
+
+        Subclasses extend :meth:`_snapshot_locked` (NOT this method) so
+        the whole — base and subclass fields alike — is read under a
+        single lock acquisition; overriding ``snapshot`` and taking the
+        lock twice yields a torn read (base counters from one instant,
+        subclass counters from another)."""
         with self._lock:
-            lat = (np.asarray(self.latencies) if self.latencies
-                   else np.zeros(1))
-            waste = (1.0 - self.contracts / self.padded
-                     if self.padded else 0.0)
-            # before any engine flush there is no throughput to report:
-            # 0.0, not inf — json.dumps would emit non-standard
-            # `Infinity` into the BENCH_serve.json artifact (strict JSON
-            # parsers reject it, and tools/check_bench.py refuses
-            # non-finite metrics)
-            cps = (self.contracts / self.engine_seconds
-                   if self.engine_seconds > 0 else 0.0)
-            return {
-                "requests": self.requests, "completed": self.completed,
-                "batches": self.batches, "contracts": self.contracts,
-                "padded": self.padded, "pad_waste": waste,
-                "cache_hits": self.cache_hits,
-                "compile_hits": self.compile_hits,
-                "compile_misses": self.compile_misses,
-                "engine_seconds": self.engine_seconds,
-                "contracts_per_sec": cps,
-                "engine_batches": dict(self.engine_batches),
-                "grids": self.grids,
-                "grid_scenarios": self.grid_scenarios,
-                "shard_batches": self.shard_batches,
-                "rebalances": self.rebalances,
-                "p50_latency_ms": float(np.percentile(lat, 50) * 1e3),
-                "p99_latency_ms": float(np.percentile(lat, 99) * 1e3),
-            }
+            return self._snapshot_locked()
+
+    def _snapshot_locked(self) -> dict:
+        lat = (np.asarray(self.latencies) if self.latencies
+               else np.zeros(1))
+        waste = (1.0 - self.contracts / self.padded
+                 if self.padded else 0.0)
+        # before any engine flush there is no throughput to report:
+        # 0.0, not inf — json.dumps would emit non-standard
+        # `Infinity` into the BENCH_serve.json artifact (strict JSON
+        # parsers reject it, and tools/check_bench.py refuses
+        # non-finite metrics)
+        cps = (self.contracts / self.engine_seconds
+               if self.engine_seconds > 0 else 0.0)
+        return {
+            "requests": self.requests, "completed": self.completed,
+            "batches": self.batches, "contracts": self.contracts,
+            "padded": self.padded, "pad_waste": waste,
+            "cache_hits": self.cache_hits,
+            "compile_hits": self.compile_hits,
+            "compile_misses": self.compile_misses,
+            "engine_seconds": self.engine_seconds,
+            "contracts_per_sec": cps,
+            "engine_batches": dict(self.engine_batches),
+            "grids": self.grids,
+            "grid_scenarios": self.grid_scenarios,
+            "shard_batches": self.shard_batches,
+            "rebalances": self.rebalances,
+            "p50_latency_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_latency_ms": float(np.percentile(lat, 99) * 1e3),
+        }
 
 
 @dataclasses.dataclass
@@ -272,6 +303,12 @@ class ChunkSpec:
     n_paths: int = 4096
     mc_seed: int = 0
     interpret: Optional[bool] = None
+    # lsmc regression design: every one is compile-key material (the
+    # basis/degree decide the design-matrix shape, antithetic halves the
+    # driver) — see repro.analysis.compile_key.CHUNK_FIELD_ROLES
+    basis: str = "poly"
+    degree: int = 3
+    antithetic: bool = True
 
     @property
     def n(self) -> int:
@@ -298,6 +335,8 @@ class ChunkSpec:
             "exercise_steps": self.exercise_steps,
             "n_paths": int(self.n_paths), "mc_seed": int(self.mc_seed),
             "interpret": self.interpret,
+            "basis": str(self.basis), "degree": int(self.degree),
+            "antithetic": bool(self.antithetic),
         }
 
     @classmethod
@@ -322,7 +361,10 @@ class ChunkSpec:
             exercise_steps=None if ex is None else _as_tuple(ex),
             n_paths=int(wire.get("n_paths", 4096)),
             mc_seed=int(wire.get("mc_seed", 0)),
-            interpret=wire.get("interpret"))
+            interpret=wire.get("interpret"),
+            basis=str(wire.get("basis", "poly")),
+            degree=int(wire.get("degree", 3)),
+            antithetic=bool(wire.get("antithetic", True)))
 
 
 @dataclasses.dataclass
@@ -390,7 +432,9 @@ def execute_chunk(chunk: ChunkSpec) -> ChunkResult:
         execution=ExecutionConfig(
             engine=chunk.engine, backend=chunk.backend,
             interpret=chunk.interpret, devices=chunk.devices,
-            n_paths=chunk.n_paths, mc_seed=chunk.mc_seed),
+            n_paths=chunk.n_paths, mc_seed=chunk.mc_seed,
+            basis=chunk.basis, degree=chunk.degree,
+            antithetic=chunk.antithetic),
         capacity=chunk.capacity,
         pad_to=chunk.padded, shard_plan=chunk.shard_plan)
     seconds = time.perf_counter() - t0
@@ -427,6 +471,8 @@ class SchedulerCore:
                  default_strike: float = 100.0,
                  result_cache_size: int = 1024, max_results: int = 65536,
                  n_paths: int = 4096, mc_seed: int = 0,
+                 basis: str = "poly", degree: int = 3,
+                 antithetic: bool = True,
                  clock: Callable[[], float] = time.monotonic,
                  metrics: Optional[ServiceMetrics] = None):
         if max_batch < 1:
@@ -443,6 +489,9 @@ class SchedulerCore:
         self.default_strike = float(default_strike)
         self.n_paths = int(n_paths)
         self.mc_seed = int(mc_seed)
+        self.basis = str(basis)
+        self.degree = int(degree)
+        self.antithetic = bool(antithetic)
         self._clock = clock
         self.max_results = int(max_results)
         self.buckets: Dict[tuple, List[_Pending]] = {}
@@ -452,6 +501,16 @@ class SchedulerCore:
         self._compiled: Dict[tuple, int] = {}
         self._next_id = 0
         self.metrics_ = metrics if metrics is not None else ServiceMetrics()
+
+    # Queue/cache state is owner-confined: every mutation happens on the
+    # transport's driving thread (the asyncio event loop in the gateway,
+    # the caller in PricingService) — replica worker threads never touch
+    # the core directly, they hand results back to the loop.  Checked by
+    # repro.analysis.guarded ("owner" = pin to the first writer thread).
+    GUARDED_BY = {
+        "buckets": "owner", "_results": "owner", "_result_cache": "owner",
+        "_compiled": "owner", "_next_id": "owner",
+    }
 
     # ------------------------------------------------------------------ #
     # request intake
@@ -502,16 +561,27 @@ class SchedulerCore:
             self.metrics_.bump(cache_hits=1, completed=1)
             self.metrics_.add_latency(self._clock() - now)
             return rid, None, quote
-        engine = route_engine(any_tc=key[4] > 0.0, n_assets=key[9],
-                              exercise_steps=key[10])
-        # (n_steps, engine) — the engine NAME, not a bool: an lsmc bucket
-        # must never coalesce with a lattice bucket of the same depth,
-        # and lsmc chunks additionally key on their static MC shape
-        bucket = ((key[8], engine) if engine != "lsmc"
-                  else (key[8], "lsmc", key[9], key[10]))
+        bucket = self.bucket_key(key)
         self.buckets.setdefault(bucket, []).append(
             _Pending(rid=rid, key=key, t_submit=now))
         return rid, bucket, None
+
+    @staticmethod
+    def bucket_key(key: tuple) -> tuple:
+        """Queue identity of a normalised scenario tuple.
+
+        ``(n_steps, engine)`` — the engine NAME, not a bool: an lsmc
+        bucket must never coalesce with a lattice bucket of the same
+        depth, and lsmc buckets additionally key on their static MC
+        shape ``(n_assets, exercise_steps)``.  Anything that changes
+        the compiled program must split the bucket; anything that is
+        array data (strike, payoff family, spot/vol/rate) must NOT —
+        ``repro.analysis.compile_key.check_bucket_probes`` audits both
+        directions (the PR 7 American-vs-Bermudan collision class)."""
+        engine = route_engine(any_tc=key[4] > 0.0, n_assets=key[9],
+                              exercise_steps=key[10])
+        return ((key[8], engine) if engine != "lsmc"
+                else (key[8], "lsmc", key[9], key[10]))
 
     # ------------------------------------------------------------------ #
     # chunk lifecycle
@@ -542,7 +612,8 @@ class SchedulerCore:
                          exercise_steps=(bucket[3] if engine == "lsmc"
                                          else None),
                          n_paths=self.n_paths, mc_seed=self.mc_seed,
-                         interpret=self.interpret)
+                         interpret=self.interpret, basis=self.basis,
+                         degree=self.degree, antithetic=self.antithetic)
 
     def requeue(self, chunk: ChunkSpec) -> None:
         """Return a chunk's requests to the *front* of their bucket (no
@@ -580,40 +651,71 @@ class SchedulerCore:
                               interpret=chunk.interpret,
                               shard=(plan.n_shards, plan.lanes)
                               if plan is not None else None,
-                              extra=self.chunk_compile_extra(chunk))
+                              extra=self.chunk_compile_extra(chunk),
+                              devices=chunk.devices)
         return done
 
     @staticmethod
     def chunk_compile_extra(chunk: ChunkSpec) -> Optional[tuple]:
         """The lsmc static config that shapes its compiled program —
         appended to the compile key so two MC chunks differing only in
-        path count or schedule never count as one program."""
+        path count, schedule or regression design never count as one
+        program."""
         if chunk.engine != "lsmc":
             return None
-        return (chunk.n_paths, chunk.n_assets, chunk.exercise_steps)
+        return (chunk.n_paths, chunk.n_assets, chunk.exercise_steps,
+                chunk.basis, chunk.degree, chunk.antithetic)
+
+    def compile_key(self, padded: int, n_steps: int, engine: str,
+                    greeks: bool, *, backend: Optional[str] = None,
+                    interpret: Optional[bool] = None,
+                    devices: Optional[int] = None,
+                    shard: Optional[tuple] = None,
+                    extra: Optional[tuple] = None) -> tuple:
+        """The compiled-program identity tuple.  Every field that can
+        change the traced jaxpr, the padded shapes or which executable
+        runs is folded in — ``repro.analysis.compile_key`` audits that
+        this stays true as fields are added."""
+        # interpret-mode and compiled Pallas programs are distinct
+        # executables — resolve ``None`` through the platform policy so
+        # "unset" and "explicitly the policy value" key identically
+        return (padded, n_steps, engine,
+                self.backend if backend is None else backend,
+                resolve_interpret(self.interpret if interpret is None
+                                  else interpret), greeks,
+                self.capacity, devices, shard, extra)
+
+    @staticmethod
+    def chunk_compile_key(chunk: ChunkSpec, greeks: bool = False) -> tuple:
+        """Compile key of a fully-specified :class:`ChunkSpec` (every
+        program field read off the chunk itself — nothing defaulted from
+        scheduler state, so two schedulers agree on a chunk's key)."""
+        plan = chunk.shard_plan
+        return (chunk.padded, chunk.n_steps, chunk.engine, chunk.backend,
+                resolve_interpret(chunk.interpret), greeks,
+                chunk.capacity, chunk.devices,
+                (plan.n_shards, plan.lanes) if plan is not None else None,
+                SchedulerCore.chunk_compile_extra(chunk))
 
     def compile_key_seen(self, padded: int, n_steps: int, engine: str,
                          greeks: bool, backend: Optional[str] = None,
                          interpret: Optional[bool] = None,
                          shard: Optional[tuple] = None,
-                         extra: Optional[tuple] = None) -> None:
+                         extra: Optional[tuple] = None,
+                         devices: Optional[int] = None) -> None:
         """Count a *successful* engine call against its compiled-program
         key.  Called only after the call returns: a failed call (e.g. a
         capacity overflow) compiled nothing worth counting, and raising
         ``capacity`` — a shape parameter, hence part of the key — then
         retrying is a genuine fresh compile, not a hit.  ``shard`` is
-        ``(n_shards, lanes)`` when the call ran on the device mesh —
-        both change the compiled program's shape, so they are part of
-        the key; ``extra`` carries engine-specific static config (the
-        lsmc path/schedule shape, see :meth:`chunk_compile_extra`)."""
-        # interpret-mode and compiled Pallas programs are distinct
-        # executables — resolve ``None`` through the platform policy so
-        # "unset" and "explicitly the policy value" key identically
-        ck = (padded, n_steps, engine,
-              self.backend if backend is None else backend,
-              resolve_interpret(self.interpret if interpret is None
-                                else interpret), greeks,
-              self.capacity, shard, extra)
+        ``(n_shards, lanes)`` when the call ran on the device mesh and
+        ``devices`` the mesh width — all change the compiled program's
+        shape, so they are part of the key; ``extra`` carries
+        engine-specific static config (the lsmc path/schedule/basis
+        shape, see :meth:`chunk_compile_extra`)."""
+        ck = self.compile_key(padded, n_steps, engine, greeks,
+                              backend=backend, interpret=interpret,
+                              devices=devices, shard=shard, extra=extra)
         if ck in self._compiled:
             self._compiled[ck] += 1
             self.metrics_.bump(compile_hits=1)

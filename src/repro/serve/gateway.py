@@ -100,6 +100,19 @@ class GatewayMetrics(ServiceMetrics):
     rows_requoted: int = 0       # rows incrementally requoted
     staleness: List[float] = dataclasses.field(default_factory=list)
 
+    # extends ServiceMetrics.GUARDED_BY (registries merge down the base
+    # chain in repro.analysis.guarded)
+    GUARDED_BY = {
+        "retries": "_lock", "requeues": "_lock", "backoffs": "_lock",
+        "backoff_seconds": "_lock", "failed": "_lock",
+        "replica_crashes": "_lock", "replica_hangs": "_lock",
+        "replica_restarts": "_lock", "affinity_moves": "_lock",
+        "degraded": "_lock", "restored": "_lock", "shed": "_lock",
+        "deadline_flushes": "_lock", "size_flushes": "_lock",
+        "forced_flushes": "_lock", "ticks": "_lock",
+        "rows_requoted": "_lock", "staleness": "_lock",
+    }
+
     def add_staleness(self, seconds: float) -> None:
         """Tick-to-delivered-quote seconds (bounded like latencies)."""
         with self._lock:
@@ -107,30 +120,33 @@ class GatewayMetrics(ServiceMetrics):
             if len(self.staleness) > 2 * self.latency_window:
                 del self.staleness[:-self.latency_window]
 
-    def snapshot(self) -> dict:
-        snap = super().snapshot()
-        with self._lock:
-            stale = (np.asarray(self.staleness) if self.staleness
-                     else np.zeros(1))
-            snap.update({
-                "retries": self.retries, "requeues": self.requeues,
-                "backoffs": self.backoffs,
-                "backoff_seconds": self.backoff_seconds,
-                "failed": self.failed,
-                "replica_crashes": self.replica_crashes,
-                "replica_hangs": self.replica_hangs,
-                "replica_restarts": self.replica_restarts,
-                "affinity_moves": self.affinity_moves,
-                "degraded": self.degraded, "restored": self.restored,
-                "shed": self.shed,
-                "deadline_flushes": self.deadline_flushes,
-                "size_flushes": self.size_flushes,
-                "forced_flushes": self.forced_flushes,
-                "ticks": self.ticks,
-                "rows_requoted": self.rows_requoted,
-                "staleness_p50_ms": float(np.percentile(stale, 50) * 1e3),
-                "staleness_p99_ms": float(np.percentile(stale, 99) * 1e3),
-            })
+    def _snapshot_locked(self) -> dict:
+        # extend the BASE snapshot under the SAME lock acquisition: an
+        # override of snapshot() that locked a second time produced a
+        # torn read — base counters from one instant, gateway counters
+        # from another (e.g. completed != requests - failed mid-flush)
+        snap = super()._snapshot_locked()
+        stale = (np.asarray(self.staleness) if self.staleness
+                 else np.zeros(1))
+        snap.update({
+            "retries": self.retries, "requeues": self.requeues,
+            "backoffs": self.backoffs,
+            "backoff_seconds": self.backoff_seconds,
+            "failed": self.failed,
+            "replica_crashes": self.replica_crashes,
+            "replica_hangs": self.replica_hangs,
+            "replica_restarts": self.replica_restarts,
+            "affinity_moves": self.affinity_moves,
+            "degraded": self.degraded, "restored": self.restored,
+            "shed": self.shed,
+            "deadline_flushes": self.deadline_flushes,
+            "size_flushes": self.size_flushes,
+            "forced_flushes": self.forced_flushes,
+            "ticks": self.ticks,
+            "rows_requoted": self.rows_requoted,
+            "staleness_p50_ms": float(np.percentile(stale, 50) * 1e3),
+            "staleness_p99_ms": float(np.percentile(stale, 99) * 1e3),
+        })
         return snap
 
 
@@ -149,6 +165,13 @@ class _Slot:
         self.inflight = 0
         self.calls = 0
         self.sticky: Set[tuple] = set()
+
+    # slot state is event-loop-confined: the executor thread only runs
+    # replica.price_chunk, never touches the slot (repro.analysis.guarded)
+    GUARDED_BY = {
+        "healthy": "owner", "dead_reason": "owner", "inflight": "owner",
+        "calls": "owner", "sticky": "owner",
+    }
 
     def kill(self, reason: str) -> None:
         self.healthy = False
@@ -200,6 +223,8 @@ class PricingGateway:
                  restart_s: Optional[float] = None,
                  replica_factory: Optional[Callable[[int], object]] = None,
                  pool="thread", n_paths: int = 4096, mc_seed: int = 0,
+                 basis: str = "poly", degree: int = 3,
+                 antithetic: bool = True,
                  execution: Optional[ExecutionConfig] = None,
                  overload_factor: Optional[float] = 8.0,
                  overload_grace_s: float = 0.25, shed_factor: float = 4.0,
@@ -213,6 +238,12 @@ class PricingGateway:
                          else interpret)
             n_paths = execution.n_paths if "n_paths" in s else n_paths
             mc_seed = execution.mc_seed if "mc_seed" in s else mc_seed
+            # every program-role execution knob must survive to the chunk
+            # (repro.analysis.compile_key audits the carry-through)
+            basis = execution.basis if "basis" in s else basis
+            degree = execution.degree if "degree" in s else degree
+            antithetic = (execution.antithetic if "antithetic" in s
+                          else antithetic)
         self.core = SchedulerCore(
             max_batch=max_batch, deadline_ms=deadline_ms, capacity=capacity,
             backend=backend, interpret=interpret,
@@ -220,6 +251,7 @@ class PricingGateway:
             default_payoff=default_payoff, default_strike=default_strike,
             result_cache_size=result_cache_size, max_results=max_results,
             n_paths=n_paths, mc_seed=mc_seed,
+            basis=basis, degree=degree, antithetic=antithetic,
             clock=clock, metrics=GatewayMetrics())
         self.max_batch = int(max_batch)
         self.effective_max_batch = int(max_batch)
@@ -270,6 +302,18 @@ class PricingGateway:
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._flusher: Optional[asyncio.Task] = None
         self._closed = False
+
+    # gateway mutable state is event-loop-confined by design: replica
+    # worker threads return results through run_in_executor futures, and
+    # all bookkeeping happens back on the loop (repro.analysis.guarded
+    # verifies statically; shadow mode pins the owner thread at runtime)
+    GUARDED_BY = {
+        "effective_max_batch": "owner", "_slots": "owner",
+        "_sticky": "owner", "_futures": "owner", "_chunk_tasks": "owner",
+        "_bg_tasks": "owner", "_inflight_rows": "owner",
+        "_over_since": "owner", "_loop": "owner", "_flusher": "owner",
+        "_closed": "owner", "_wake": "owner", "_replica_up": "owner",
+    }
 
     # ------------------------------------------------------------------ #
     # lifecycle
@@ -428,11 +472,14 @@ class PricingGateway:
         else:
             await asyncio.sleep(seconds)
 
-    async def _wake_or_sleep(self, timeout: float) -> None:
+    async def _wake_or_sleep(self, seconds: float) -> None:
         """Race the wake event (a submit changed the queue picture)
-        against the timer; whichever fires first wins."""
+        against the timer; whichever fires first wins.  (The parameter
+        is ``seconds``, not ``timeout``: this helper deliberately does
+        NOT cancel the awaited work on expiry the way ``wait_for`` does
+        — ruff ASYNC109 flags the misleading name.)"""
         waiter = self._loop.create_task(self._wake.wait())
-        sleeper = self._loop.create_task(self._sleep(timeout))
+        sleeper = self._loop.create_task(self._sleep(seconds))
         _, pending = await asyncio.wait({waiter, sleeper},
                                         return_when=asyncio.FIRST_COMPLETED)
         for task in pending:
@@ -453,10 +500,10 @@ class PricingGateway:
             self._maybe_recover_batch()
             nxt = self.core.next_deadline()
             if nxt is None:
-                timeout = 1.0           # idle: only a submit matters,
+                delay = 1.0             # idle: only a submit matters,
             else:                       # and submit sets the wake event
-                timeout = max(nxt - self.core._clock(), 1e-4)
-            await self._wake_or_sleep(timeout)
+                delay = max(nxt - self.core._clock(), 1e-4)
+            await self._wake_or_sleep(delay)
 
     # ------------------------------------------------------------------ #
     # dispatch to replicas

@@ -177,6 +177,15 @@ class ProcessReplica:
         if start:
             self.start()
 
+    # price_chunk (and everything it calls) runs under _lock; close()
+    # is deliberately lock-free — see the class docstring and the
+    # reasoned waivers in tools/analysis_waivers.toml.
+    GUARDED_BY = {
+        "_dead": "_lock", "_ready": "_lock", "calls": "_lock",
+        "warmup_seconds": "_lock", "_conn": "_lock", "_proc": "_lock",
+        "_warmup_deadline": "_lock",
+    }
+
     # ------------------------------------------------------------------ #
     # lifecycle
     # ------------------------------------------------------------------ #
@@ -227,8 +236,9 @@ class ProcessReplica:
         self._proc.join(timeout=1.0)
         return self._proc.exitcode
 
-    def _die(self, reason: str) -> ReplicaCrash:
-        """Mark dead and build (not raise) the crash for the caller."""
+    def _die(self, reason: str) -> ReplicaCrash:  # locked: _lock
+        """Mark dead and build (not raise) the crash for the caller.
+        Called only from under ``price_chunk``'s lock."""
         self._dead = reason
         if self._conn is not None:
             with contextlib.suppress(OSError):
@@ -238,7 +248,7 @@ class ProcessReplica:
     # ------------------------------------------------------------------ #
     # wire I/O
     # ------------------------------------------------------------------ #
-    def _recv(self, timeout: Optional[float], what: str):
+    def _recv(self, timeout: Optional[float], what: str):  # locked: _lock
         """One reply off the pipe, racing the worker's death sentinel.
 
         ``timeout`` None = wait forever (modulo the sentinel).  On
@@ -273,7 +283,7 @@ class ProcessReplica:
                 f"no {what} within {timeout:.3g}s deadline "
                 "(worker SIGKILLed)")
 
-    def _ensure_ready(self) -> None:
+    def _ensure_ready(self) -> None:  # locked: _lock
         if self._ready:
             return
         remaining = self._warmup_deadline - time.monotonic()

@@ -43,6 +43,10 @@ class LocalReplica:
         self.name = name
         self.calls = 0
 
+    # the gateway gives each replica a single-thread executor, so calls
+    # is confined to that one worker thread (repro.analysis.guarded)
+    GUARDED_BY = {"calls": "owner"}
+
     def price_chunk(self, chunk: ChunkSpec) -> ChunkResult:
         self.calls += 1
         return execute_chunk(chunk)
@@ -73,6 +77,9 @@ class FaultyReplica:
         self.name = name
         self.calls = 0
         self._release = threading.Event()
+
+    # single-thread executor confinement, same as LocalReplica
+    GUARDED_BY = {"calls": "owner"}
 
     def release(self) -> None:
         """Unblock a hanging call (test teardown — without it the worker

@@ -97,13 +97,22 @@ class PricingService:
             n_paths = execution.n_paths if "n_paths" in s else n_paths
             mc_seed = execution.mc_seed if "mc_seed" in s else mc_seed
             devices = execution.devices if "devices" in s else devices
+            # program-role knobs must not be dropped at the service
+            # boundary (repro.analysis.compile_key audits this)
+            basis = execution.basis if "basis" in s else "poly"
+            degree = execution.degree if "degree" in s else 3
+            antithetic = (execution.antithetic if "antithetic" in s
+                          else True)
+        else:
+            basis, degree, antithetic = "poly", 3, True
         self.core = SchedulerCore(
             max_batch=max_batch, deadline_ms=deadline_ms, capacity=capacity,
             backend=backend, interpret=interpret,
             default_n_steps=default_n_steps,
             default_payoff=default_payoff, default_strike=default_strike,
             result_cache_size=result_cache_size, max_results=max_results,
-            n_paths=n_paths, mc_seed=mc_seed, clock=clock)
+            n_paths=n_paths, mc_seed=mc_seed,
+            basis=basis, degree=degree, antithetic=antithetic, clock=clock)
         # device-mesh routing (lazy imports: the jax-touching modules load
         # only when sharding is actually requested)
         if devices is not None or mesh is not None:
@@ -119,6 +128,10 @@ class PricingService:
                                 else int(min_grid_bucket))
         self._clock = clock
         self._deferred_error: Optional[BaseException] = None
+
+    # the in-process service is cooperatively driven by one caller
+    # thread (submit/step/flush) — owner-confined (repro.analysis.guarded)
+    GUARDED_BY = {"_deferred_error": "owner"}
 
     # core-owned configuration/state, re-exposed under the historical
     # names so operator code (and the shard tests) keep working
@@ -198,10 +211,12 @@ class PricingService:
                           greeks: bool, backend: Optional[str] = None,
                           interpret: Optional[bool] = None,
                           shard: Optional[tuple] = None,
-                          extra: Optional[tuple] = None) -> None:
+                          extra: Optional[tuple] = None,
+                          devices: Optional[int] = None) -> None:
         self.core.compile_key_seen(padded, n_steps, engine, greeks,
                                    backend=backend, interpret=interpret,
-                                   shard=shard, extra=extra)
+                                   shard=shard, extra=extra,
+                                   devices=devices)
 
     # ------------------------------------------------------------------ #
     # device-mesh shard planning / rebalance hook
@@ -407,6 +422,10 @@ class PricingService:
                            else req.interpret))
         n_paths = ex.n_paths if "n_paths" in exs else self.core.n_paths
         mc_seed = ex.mc_seed if "mc_seed" in exs else self.core.mc_seed
+        basis = ex.basis if "basis" in exs else self.core.basis
+        degree = ex.degree if "degree" in exs else self.core.degree
+        antithetic = (ex.antithetic if "antithetic" in exs
+                      else self.core.antithetic)
         # grids rebalance under their own stream key: plan through the
         # rebalancer (greeks bump the batch 5x — the plan must cover the
         # bumped rows) so measured-seconds feedback actually steers the
@@ -425,9 +444,7 @@ class PricingService:
         cfg = ExecutionConfig(
             engine=engine, backend=backend, interpret=interpret,
             n_paths=n_paths, mc_seed=mc_seed,
-            basis=ex.basis if "basis" in exs else None,
-            degree=ex.degree if "degree" in exs else None,
-            antithetic=ex.antithetic if "antithetic" in exs else None)
+            basis=basis, degree=degree, antithetic=antithetic)
         res = price_grid(grid.pad_to(bucket), execution=cfg,
                          capacity=self.capacity, greeks=req.greeks,
                          mesh=self._mesh, shard_plan=plan)
@@ -436,13 +453,20 @@ class PricingService:
                            grid_scenarios=n)
         self._observe_flush(gkey, res, elapsed)
         info = res.shard_info
+        # the key reads the *resolved* n_paths/basis/degree/antithetic —
+        # a per-request ExecutionConfig override compiles a different
+        # program than the service default and must key separately
+        # (keying self.core.n_paths here once hid exactly that)
         self._compile_key_seen(bucket, grid.n_steps, engine, req.greeks,
                                backend=backend, interpret=interpret,
                                shard=(info.plan.n_shards, info.plan.lanes)
                                if info else None,
-                               extra=((self.core.n_paths, grid.n_assets,
-                                       grid.exercise_steps)
-                                      if engine == "lsmc" else None))
+                               extra=((n_paths, grid.n_assets,
+                                       grid.exercise_steps, basis, degree,
+                                       antithetic)
+                                      if engine == "lsmc" else None),
+                               devices=(self._n_shards
+                                        if self._n_shards > 1 else None))
         self.metrics_.count_engine(engine)
         cut = lambda a: (None if a is None
                          else a.ravel()[:n].reshape(grid.shape))

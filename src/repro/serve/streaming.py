@@ -105,6 +105,13 @@ class StreamingBook:
         self.bid = np.full(n, np.nan)
         self.row_pieces = np.full(n, -1, dtype=int)
 
+    # a book is driven by exactly one stream consumer (run_stream on the
+    # gateway's event loop) — owner-confined (repro.analysis.guarded)
+    GUARDED_BY = {
+        "s0": "owner", "sigma": "owner", "ask": "owner", "bid": "owner",
+        "row_pieces": "owner",
+    }
+
     # ------------------------------------------------------------------ #
     # construction helpers
     # ------------------------------------------------------------------ #

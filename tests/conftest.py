@@ -19,3 +19,22 @@ import pytest  # noqa: E402
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _shadow_guards():
+    """With ``REPRO_SHADOW_GUARDS=1`` the whole session runs the serving
+    stack under instrumented locks (``repro.analysis.shadow``): any write
+    to a declared guarded attribute without its lock — or to an
+    owner-confined attribute from a second thread — raises
+    ``GuardViolation`` at the write site.  The CI gateway/procpool lanes
+    set the flag; plain runs are uninstrumented."""
+    if os.environ.get("REPRO_SHADOW_GUARDS") != "1":
+        yield
+        return
+    from repro.analysis import shadow
+    uninstall = shadow.install()
+    try:
+        yield
+    finally:
+        uninstall()

@@ -1,0 +1,548 @@
+"""Invariant-analyzer suite (marker: ``analysis``).
+
+Positive half: every checker in ``repro.analysis`` runs clean over the
+real tree modulo the checked-in waivers, no waiver is stale, and the
+``tools/analyze.py`` CLI gates on exactly that state.
+
+Negative half: each checker is fed a synthetic defect — the known bug
+classes this package exists to catch — and must report it with the
+right rule anchored at ``file:line``:
+
+* blocking call / lock cycle in async serving code (concurrency),
+* an unlocked write to a ``GUARDED_BY`` attribute (guarded-by, the
+  PR 6 metrics-race class),
+* a compile/bucket key that drops a program field — including an
+  in-test revert of PR 7's frictionless-Bermudan bucket collision
+  (compile-key),
+* a dataclass field missing from ``to_wire``/``from_wire`` or opaque
+  by type (wire-schema, the PR 9 ``mesh`` class).
+
+Plus the runtime pieces: shadow-mode lock/owner enforcement, the
+single-acquisition metrics snapshot, the LSMC program-knob plumbing,
+and a jaxpr-differential fuzz tying "traced program changed" to
+"compile key changed".
+"""
+import dataclasses
+import json
+import subprocess
+import sys
+import textwrap
+import threading
+
+import pytest
+
+import repro.core  # noqa: F401  (x64 flag side effect)
+from repro import analysis
+from repro.analysis import (compile_key, concurrency, engine, guarded,
+                            shadow, source_scan, wire)
+from repro.analysis.engine import apply_waivers, load_waivers
+
+pytestmark = pytest.mark.analysis
+
+REPO = engine.REPO_ROOT
+WAIVER_FILE = REPO / "tools" / "analysis_waivers.toml"
+ANALYZE = REPO / "tools" / "analyze.py"
+
+
+def _write(tmp_path, name, src):
+    p = tmp_path / name
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(src).strip() + "\n")
+    return p
+
+
+# --------------------------------------------------------------------- #
+# positive runs: the real tree is clean modulo checked-in waivers
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", sorted(analysis.CHECKERS))
+def test_repo_clean_per_checker(name):
+    findings = analysis.CHECKERS[name]()
+    unwaived, _, _ = apply_waivers(findings, load_waivers(WAIVER_FILE))
+    assert unwaived == [], "\n".join(f.format() for f in unwaived)
+
+
+def test_checked_in_waivers_all_used_none_stale():
+    findings = analysis.run_all()
+    _, waived, stale = apply_waivers(findings, load_waivers(WAIVER_FILE))
+    assert stale == [], f"stale waivers: {stale}"
+    assert waived, "the checked-in waiver file should excuse something"
+
+
+# --------------------------------------------------------------------- #
+# waiver hygiene
+# --------------------------------------------------------------------- #
+def test_waiver_with_empty_reason_rejected(tmp_path):
+    p = _write(tmp_path, "w.toml", """
+        [[waiver]]
+        checker = "source-scan"
+        file = "x.py"
+        symbol = "f"
+        reason = "   "
+    """)
+    with pytest.raises(ValueError, match="empty reason"):
+        load_waivers(p)
+
+
+def test_waiver_with_missing_key_rejected(tmp_path):
+    p = _write(tmp_path, "w.toml", """
+        [[waiver]]
+        checker = "source-scan"
+        file = "x.py"
+        reason = "because"
+    """)
+    with pytest.raises(ValueError, match="missing required keys"):
+        load_waivers(p)
+
+
+def test_missing_waiver_file_means_no_waivers(tmp_path):
+    assert load_waivers(tmp_path / "none.toml") == []
+
+
+# --------------------------------------------------------------------- #
+# source-scan negative controls
+# --------------------------------------------------------------------- #
+def test_interpret_hardcode_flags_call_not_default(tmp_path):
+    _write(tmp_path, "mod.py", """
+        def run(x, interpret=True):      # a default is policy, fine
+            return kernel(x, interpret=True)
+    """)
+    (f,) = source_scan.scan_interpret_hardcode(tmp_path)
+    assert f.rule == "interpret-hardcode"
+    assert f.file.endswith("mod.py") and f.line == 2
+    assert f.symbol == "run"
+
+
+def test_sort_ban_flags_hot_path_argsort(tmp_path):
+    _write(tmp_path, "core/pwl.py", """
+        import jax.numpy as jnp
+        def merge(x):
+            return jnp.argsort(x)
+    """)
+    _write(tmp_path, "core/other.py", """
+        import jax.numpy as jnp
+        def fine(x):
+            return jnp.argsort(x)        # not a banned module
+    """)
+    (f,) = source_scan.scan_sort_ban(tmp_path)
+    assert f.rule == "sort-ban" and f.symbol == "merge" and f.line == 3
+    assert f.file.endswith("core/pwl.py")
+
+
+def test_pallas_coverage_both_directions(tmp_path):
+    _write(tmp_path, "kernels/knew.py", """
+        from jax.experimental import pallas as pl
+        def f(x):
+            return pl.pallas_call(lambda r, o: None)(x)
+    """)
+    findings = source_scan.scan_pallas_coverage(
+        tmp_path, declared={"repro.ghost"})
+    rules = {f.rule: f for f in findings}
+    assert rules["pallas-uncovered"].symbol == "repro.kernels.knew"
+    assert rules["pallas-stale-contract"].symbol == "repro.ghost"
+
+
+# --------------------------------------------------------------------- #
+# concurrency negative controls
+# --------------------------------------------------------------------- #
+def test_blocking_call_in_async_def_flagged(tmp_path):
+    p = _write(tmp_path, "srv.py", """
+        import time
+        class S:
+            async def handler(self):
+                time.sleep(1.0)
+    """)
+    findings = concurrency.check_blocking_in_async(p)
+    assert [f.rule for f in findings] == ["blocking-in-async"]
+    assert findings[0].line == 4 and findings[0].symbol == "S.handler"
+
+
+def test_executor_routed_blocking_call_exempt(tmp_path):
+    p = _write(tmp_path, "srv.py", """
+        import time
+        class S:
+            async def handler(self, loop):
+                await loop.run_in_executor(None, time.sleep, 1.0)
+    """)
+    assert concurrency.check_blocking_in_async(p) == []
+
+
+def test_lock_order_cycle_detected(tmp_path):
+    p = _write(tmp_path, "locks.py", """
+        import threading
+        class A:
+            def __init__(self):
+                self._a = threading.Lock()
+                self._b = threading.Lock()
+            def one(self):
+                with self._a:
+                    with self._b:
+                        pass
+            def two(self):
+                with self._b:
+                    with self._a:
+                        pass
+    """)
+    findings = [f for f in concurrency.check_files([p])
+                if f.rule == "lock-cycle"]
+    assert findings, "the ABBA cycle must be reported"
+    assert findings[0].file.endswith("locks.py") and findings[0].line > 0
+
+
+def test_consistent_lock_order_is_clean(tmp_path):
+    p = _write(tmp_path, "locks.py", """
+        import threading
+        class A:
+            def __init__(self):
+                self._a = threading.Lock()
+                self._b = threading.Lock()
+            def one(self):
+                with self._a:
+                    with self._b:
+                        pass
+            def two(self):
+                with self._a:
+                    with self._b:
+                        pass
+    """)
+    assert [f for f in concurrency.check_files([p])
+            if f.rule == "lock-cycle"] == []
+
+
+# --------------------------------------------------------------------- #
+# guarded-by negative controls
+# --------------------------------------------------------------------- #
+def test_unguarded_write_flagged_guarded_write_clean(tmp_path):
+    p = _write(tmp_path, "g.py", """
+        import threading
+        class C:
+            GUARDED_BY = {"count": "_lock"}
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.count = 0
+            def good(self):
+                with self._lock:
+                    self.count += 1
+            def bad(self):
+                self.count += 1
+    """)
+    findings = guarded.check_files([p])
+    assert [(f.rule, f.symbol, f.line) for f in findings] == [
+        ("unguarded-write", "C.bad.count", 11)]
+    assert findings[0].file.endswith("g.py")
+
+
+def test_undeclared_shared_write_flagged(tmp_path):
+    p = _write(tmp_path, "g.py", """
+        import threading
+        class C:
+            GUARDED_BY = {"count": "_lock"}
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.count = 0
+            def sneak(self):
+                self.extra = 1
+    """)
+    findings = guarded.check_files([p])
+    assert [(f.rule, f.symbol) for f in findings] == [
+        ("undeclared-attr", "C.sneak.extra")]
+
+
+def test_locked_helper_called_without_lock_flagged(tmp_path):
+    p = _write(tmp_path, "g.py", """
+        import threading
+        class C:
+            GUARDED_BY = {"count": "_lock"}
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.count = 0
+            def _bump_locked(self):
+                self.count += 1
+            def bad(self):
+                self._bump_locked()
+            def good(self):
+                with self._lock:
+                    self._bump_locked()
+    """)
+    findings = guarded.check_files([p])
+    assert [(f.rule, f.symbol) for f in findings] == [
+        ("locked-helper-call", "C.bad._bump_locked")]
+
+
+# --------------------------------------------------------------------- #
+# compile-key negative controls + the PR 7 reproduction
+# --------------------------------------------------------------------- #
+def test_key_probe_catches_a_dropped_field():
+    from repro.serve.core import SchedulerCore
+
+    def lossy(chunk, greeks=False):
+        k = SchedulerCore.chunk_compile_key(chunk, greeks)
+        return k[:4] + (None,) + k[5:]       # drop resolved interpret
+
+    findings = compile_key.check_key_probes(key_fn=lossy)
+    assert [(f.rule, f.symbol) for f in findings] == [
+        ("key-omits-field", "ChunkSpec.interpret")]
+    assert findings[0].file == "src/repro/serve/core.py"
+    assert findings[0].line > 0
+
+
+def test_bucket_probe_reproduces_pr7_collision():
+    """Revert PR 7's fix in-test: a bucket function keyed only on
+    (n_steps, has-cost) coalesces the frictionless Bermudan into the
+    frictionless-American bucket — the exact wrong-engine bug."""
+    findings = compile_key.check_bucket_probes(
+        bucket_fn=lambda key: (key[8], key[4] > 0.0))
+    collisions = [f for f in findings if f.rule == "bucket-collision"]
+    assert any("american-vs-bermudan-frictionless" in f.message
+               for f in collisions)
+    assert all(f.file == "src/repro/serve/core.py" and f.line > 0
+               for f in collisions)
+
+
+def test_bucket_probe_catches_data_split():
+    # bucketing on strike splits data-identical programs
+    findings = compile_key.check_bucket_probes(
+        bucket_fn=lambda key: (key[8], key[10], key[6]))
+    assert any(f.rule == "bucket-split" and "strike-is-data" in f.message
+               for f in findings)
+
+
+def test_real_scheduler_keys_pass_all_probes():
+    assert compile_key.check_key_probes() == []
+    assert compile_key.check_bucket_probes() == []
+
+
+# --------------------------------------------------------------------- #
+# wire-schema negative control (the PR 9 mesh class)
+# --------------------------------------------------------------------- #
+def test_wire_static_flags_uncovered_and_opaque_fields(tmp_path):
+    p = _write(tmp_path, "w.py", """
+        import dataclasses
+        from typing import Any
+        @dataclasses.dataclass
+        class ChunkSpec:
+            n_steps: int
+            mesh: Any
+            tag: str = "x"
+            def to_wire(self):
+                return {"n_steps": int(self.n_steps)}
+            @staticmethod
+            def from_wire(wire):
+                return ChunkSpec(n_steps=int(wire["n_steps"]),
+                                 mesh=None)
+    """)
+    findings = wire.check_wire_static(p, classes=("ChunkSpec",),
+                                      codecs=set())
+    by_rule = {}
+    for f in findings:
+        by_rule.setdefault(f.rule, []).append(f.symbol)
+    assert "ChunkSpec.mesh" in by_rule["wire-opaque-type"]
+    assert "ChunkSpec.mesh" in by_rule["wire-missing-encode"]
+    assert "ChunkSpec.tag" in by_rule["wire-missing-encode"]
+    assert "ChunkSpec.tag" in by_rule["wire-missing-decode"]
+    assert all(f.file.endswith("w.py") and f.line > 0 for f in findings)
+
+
+def test_wire_roundtrip_preserves_lsmc_program_knobs():
+    from repro.serve.core import ChunkSpec
+    spec = ChunkSpec(
+        bucket=(8, "lsmc", 2, (4, 8)), requests=[], n_steps=8,
+        engine="lsmc", capacity=16, backend="jnp", padded=2,
+        cols=((100.0, 95.0), (0.2, 0.2), (0.1, 0.1), (0.25, 0.25),
+              (0.0, 0.0), ("put", "put"), (100.0, 95.0), (110.0, 110.0)),
+        n_assets=2, exercise_steps=(4, 8), n_paths=256, mc_seed=3,
+        basis="laguerre", degree=4, antithetic=False)
+    back = ChunkSpec.from_wire(json.loads(json.dumps(spec.to_wire())))
+    assert (back.basis, back.degree, back.antithetic) == ("laguerre", 4, False)
+    # a v1 peer that predates the knobs still decodes, with the defaults
+    old = spec.to_wire()
+    for k in ("basis", "degree", "antithetic"):
+        old.pop(k)
+    legacy = ChunkSpec.from_wire(old)
+    assert (legacy.basis, legacy.degree, legacy.antithetic) == ("poly", 3, True)
+
+
+# --------------------------------------------------------------------- #
+# differential fuzz: traced-program change => compile-key change
+# --------------------------------------------------------------------- #
+def test_lsmc_jaxpr_difference_implies_key_difference():
+    """Every LSMC program knob that changes the traced jaxpr must change
+    ``SchedulerCore.chunk_compile_key`` — the PR 7 bug class, asserted
+    against the real kernel rather than a hand-kept field list."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.lsmc import lsmc_rows, path_keys
+    from repro.serve.core import SchedulerCore
+
+    base = dict(n_steps=4, steps=(2, 4), n_paths=16, n_assets=1,
+                degree=2, basis="poly", antithetic=True)
+    variants = [{"n_paths": 32}, {"degree": 3}, {"basis": "laguerre"},
+                {"antithetic": False}, {"steps": (4,)}, {"n_assets": 2}]
+
+    def jaxpr_text(params):
+        row = tuple(jnp.asarray([v]) for v in
+                    (100.0, 0.2, 0.1, 0.25, 0.0, 0.0, -1.0, 0.0, 1.0,
+                     100.0, 100.0))
+        keys = path_keys(0, 1)
+        closed = lambda *a: lsmc_rows(*a, **params)  # noqa: E731
+        return str(jax.make_jaxpr(closed)(*row, keys))
+
+    def chunk_of(params):
+        from repro.serve.core import ChunkSpec
+        return ChunkSpec(
+            bucket=(params["n_steps"], "lsmc", params["n_assets"],
+                    params["steps"]),
+            requests=[], n_steps=params["n_steps"], engine="lsmc",
+            capacity=16, backend="jnp", padded=1,
+            cols=((100.0,), (0.2,), (0.1,), (0.25,), (0.0,), ("put",),
+                  (100.0,), (110.0,)),
+            n_assets=params["n_assets"], exercise_steps=params["steps"],
+            n_paths=params["n_paths"], mc_seed=0, interpret=True,
+            basis=params["basis"], degree=params["degree"],
+            antithetic=params["antithetic"])
+
+    base_jaxpr = jaxpr_text(base)
+    base_key = SchedulerCore.chunk_compile_key(chunk_of(base))
+    for delta in variants:
+        params = {**base, **delta}
+        key = SchedulerCore.chunk_compile_key(chunk_of(params))
+        if jaxpr_text(params) != base_jaxpr:
+            assert key != base_key, (
+                f"{delta} changes the traced program but not the "
+                "compile key — stale-program reuse")
+        # all six knobs are program-role: the key must split regardless
+        assert key != base_key, f"{delta} did not perturb the key"
+
+
+# --------------------------------------------------------------------- #
+# runtime shadow mode
+# --------------------------------------------------------------------- #
+def test_shadow_lock_tracks_owner():
+    lk = shadow.ShadowLock()
+    assert not lk.held_by_me() and not lk.locked()
+    with lk:
+        assert lk.held_by_me() and lk.locked()
+    assert not lk.locked()
+
+
+def test_shadow_flags_unlocked_metrics_write():
+    from repro.serve.core import ServiceMetrics
+    uninstall = shadow.install([ServiceMetrics])
+    try:
+        m = ServiceMetrics()
+        with pytest.raises(shadow.GuardViolation, match="guarded by"):
+            m.requests += 1                  # the PR 6 race, live
+        with m._lock:
+            m.requests += 1                  # disciplined write passes
+        assert m.snapshot()["requests"] == 1
+    finally:
+        uninstall()
+    m2 = ServiceMetrics()
+    m2.requests += 1                         # uninstalled: back to normal
+    assert m2.requests == 1
+
+
+def test_shadow_flags_cross_thread_owner_write():
+    from repro.serve.core import SchedulerCore
+    uninstall = shadow.install([SchedulerCore])
+    try:
+        core = SchedulerCore(max_batch=4)
+        core._next_id = 7                    # pins this thread as owner
+        raised = []
+
+        def hostile():
+            try:
+                core._next_id = 8
+            except shadow.GuardViolation as e:
+                raised.append(e)
+
+        t = threading.Thread(target=hostile)
+        t.start()
+        t.join()
+        assert raised and "owner-confined" in str(raised[0])
+        core._next_id = 9                    # owner thread still may write
+    finally:
+        uninstall()
+
+
+# --------------------------------------------------------------------- #
+# metrics snapshot: exactly one lock acquisition (torn-read regression)
+# --------------------------------------------------------------------- #
+class _CountingLock:
+    def __init__(self):
+        self._inner = threading.RLock()      # reentrant so a regression
+        self.acquisitions = 0                # shows as a count, not a hang
+
+    def __enter__(self):
+        self.acquisitions += 1
+        self._inner.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self._inner.release()
+
+
+def test_gateway_snapshot_is_single_acquisition():
+    from repro.serve.gateway import GatewayMetrics
+    m = GatewayMetrics()
+    lock = _CountingLock()
+    m._lock = lock
+    snap = m.snapshot()
+    assert lock.acquisitions == 1, (
+        "GatewayMetrics.snapshot must read base and gateway counters "
+        "under ONE acquisition — two means a torn read window")
+    assert "requests" in snap and "staleness_p99_ms" in snap
+
+
+# --------------------------------------------------------------------- #
+# CLI
+# --------------------------------------------------------------------- #
+FAST_CHECKERS = ("source-scan", "concurrency", "guarded-by")
+
+
+def _cli(*argv, **kw):
+    return subprocess.run(
+        [sys.executable, str(ANALYZE), *argv],
+        capture_output=True, text=True, cwd=REPO, **kw)
+
+
+def test_cli_clean_run_exits_zero_and_dumps_json(tmp_path):
+    out = _cli("--fail-on-findings", "--json", str(tmp_path / "f.json"),
+               *[a for c in FAST_CHECKERS for a in ("--checker", c)])
+    assert out.returncode == 0, out.stdout + out.stderr
+    data = json.loads((tmp_path / "f.json").read_text())
+    assert data["unwaived"] == []
+    assert data["stale_waivers"] == []
+    assert {w["finding"]["rule"] for w in data["waived"]} >= {"sort-ban"}
+
+
+def test_cli_unwaived_findings_exit_one(tmp_path):
+    empty = _write(tmp_path, "none.toml", "# no waivers")
+    out = _cli("--fail-on-findings", "--waivers", str(empty),
+               "--checker", "source-scan")
+    assert out.returncode == 1
+    assert "sort-ban" in out.stdout
+
+
+def test_cli_bad_waiver_file_exits_two(tmp_path):
+    bad = _write(tmp_path, "bad.toml", """
+        [[waiver]]
+        checker = "source-scan"
+        file = "x.py"
+        symbol = "f"
+        reason = ""
+    """)
+    out = _cli("--waivers", str(bad), "--checker", "source-scan")
+    assert out.returncode == 2
+    assert "empty reason" in out.stderr
+
+
+def test_cli_unknown_checker_exits_two():
+    out = _cli("--checker", "no-such-checker")
+    assert out.returncode == 2
+    assert "unknown checker" in out.stderr
+
+
+def test_cli_list_checkers_matches_registry():
+    out = _cli("--list-checkers")
+    assert out.returncode == 0
+    assert out.stdout.split() == list(analysis.CHECKERS)

@@ -73,6 +73,27 @@ def test_platforms_guide_snippets_execute():
         plat.set_platform(None)
 
 
+def test_analysis_guide_snippets_execute():
+    """docs/ANALYSIS.md's python blocks run the real checkers: the
+    guard-map examples and the clean-run contract (no unwaived
+    findings, no stale waivers) — the guide cannot drift from
+    ``repro.analysis`` or from the repo actually being clean."""
+    blocks = _python_blocks(ROOT / "docs" / "ANALYSIS.md")
+    assert blocks, "docs/ANALYSIS.md has no ```python blocks"
+    ns: dict = {}
+    for block in blocks:
+        exec(compile(block, "docs/ANALYSIS.md", "exec"), ns)
+    assert ns["unwaived"] == [] and ns["stale"] == []
+
+
+def test_analysis_doc_mentions_real_paths():
+    """Every repo path ANALYSIS.md references must exist."""
+    text = (ROOT / "docs" / "ANALYSIS.md").read_text()
+    for ref in set(re.findall(
+            r"`((?:src|tests|tools)/[\w./*-]+)`", text)):
+        assert (ROOT / ref).exists(), ref
+
+
 def test_platforms_doc_mentions_real_paths():
     """Every repo path PLATFORMS.md references must exist."""
     text = (ROOT / "docs" / "PLATFORMS.md").read_text()

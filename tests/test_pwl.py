@@ -95,7 +95,7 @@ def test_envelope_matches_oracle(rng, take_max, dtype, tol, min_gap):
         h, _ = P.envelope2(P.from_ref(f, K, dtype), P.from_ref(g, K, dtype),
                            K, take_max)
         assert h.xs.dtype == dtype
-        got = np.asarray(jax.vmap(lambda c: P.eval_at(h, c))(ysq))
+        got = np.asarray(jax.vmap(lambda c, h=h: P.eval_at(h, c))(ysq))
         np.testing.assert_allclose(got, ref(np.asarray(ysq)), **tol)
 
 
@@ -112,7 +112,7 @@ def test_cone_matches_oracle(rng, dtype, tol, min_gap):
         ref = R.cone_infconv(f, a, b)
         v, _ = P.cone_infconv(P.from_ref(f, K, dtype), a, b, K)
         assert v.xs.dtype == dtype
-        got = np.asarray(jax.vmap(lambda c: P.eval_at(v, c))(ysq))
+        got = np.asarray(jax.vmap(lambda c, v=v: P.eval_at(v, c))(ysq))
         np.testing.assert_allclose(got, ref(np.asarray(ysq)), **tol)
 
 

@@ -1,0 +1,98 @@
+#!/usr/bin/env python
+"""Run the repo-wide invariant analyzers (``repro.analysis``).
+
+Usage::
+
+    python tools/analyze.py                      # report everything
+    python tools/analyze.py --fail-on-findings   # CI gate (exit 1)
+    python tools/analyze.py --checker guarded-by --checker wire-schema
+    python tools/analyze.py --json findings.json # machine-readable dump
+
+Findings are matched against the checked-in waiver file
+(``tools/analysis_waivers.toml`` by default); a waiver must carry a
+written reason and is reported as *stale* when nothing matches it any
+more.  Exit codes: 0 clean (or findings without ``--fail-on-findings``),
+1 unwaived findings under ``--fail-on-findings``, 2 configuration error
+(unreadable/invalid waiver file or unknown checker).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro.analysis import CHECKERS, apply_waivers, load_waivers  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="repo-wide invariant analyzer",
+        epilog="checkers: " + ", ".join(CHECKERS))
+    ap.add_argument("--checker", action="append", default=None,
+                    metavar="NAME", help="run only this checker "
+                    "(repeatable; default: all)")
+    ap.add_argument("--waivers", type=pathlib.Path,
+                    default=REPO_ROOT / "tools" / "analysis_waivers.toml",
+                    help="waiver file (default: tools/analysis_waivers.toml)")
+    ap.add_argument("--json", type=pathlib.Path, default=None,
+                    metavar="PATH", help="write findings as JSON")
+    ap.add_argument("--fail-on-findings", action="store_true",
+                    help="exit 1 when any unwaived finding remains")
+    ap.add_argument("--list-checkers", action="store_true",
+                    help="print checker names and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_checkers:
+        for name in CHECKERS:
+            print(name)
+        return 0
+
+    names = list(CHECKERS) if args.checker is None else args.checker
+    unknown = [n for n in names if n not in CHECKERS]
+    if unknown:
+        print(f"error: unknown checker(s) {unknown}; "
+              f"available: {list(CHECKERS)}", file=sys.stderr)
+        return 2
+    try:
+        waivers = load_waivers(args.waivers)
+    except ValueError as e:
+        print(f"error: bad waiver file {args.waivers}: {e}", file=sys.stderr)
+        return 2
+
+    findings = []
+    for name in names:
+        findings.extend(CHECKERS[name]())
+    unwaived, waived, stale = apply_waivers(findings, waivers)
+
+    if args.json is not None:
+        args.json.write_text(json.dumps({
+            "checkers": names,
+            "unwaived": [f.to_json() for f in unwaived],
+            "waived": [{"finding": f.to_json(), "reason": w.reason}
+                       for f, w in waived],
+            "stale_waivers": [{"checker": w.checker, "file": w.file,
+                               "symbol": w.symbol, "reason": w.reason}
+                              for w in stale],
+        }, indent=2) + "\n")
+
+    for f in unwaived:
+        print(f.format())
+    for f, w in waived:
+        print(f"[waived] {f.format()}\n         reason: {w.reason}")
+    for w in stale:
+        print(f"[stale waiver] {w.checker} {w.file} {w.symbol} — nothing "
+              "matches it any more; delete it", file=sys.stderr)
+    print(f"{len(unwaived)} finding(s), {len(waived)} waived, "
+          f"{len(stale)} stale waiver(s) "
+          f"[checkers: {', '.join(names)}]")
+    if args.fail_on_findings and unwaived:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
